@@ -1,0 +1,155 @@
+"""Shared benchmark helpers: the three systems-under-test as model variants
+plus a tiny CPU trainer for the accuracy experiments.
+
+System variants (Table 1 / ablations), expressed through the framework's own
+config knobs:
+
+  * ``ec2moe``   — HL-GGN group gate (K groups) + low-rank dispatch
+                   compression (eq. 8, trained jointly); hardware-aware
+                   selection active at the end tier during serving.
+  * ``brownout`` — BrownoutServe-style: flat gate (num_groups=1 degenerates
+                   eq. 5-7 to a single softmax), full experts, no
+                   compression.  Evaluated under network instability: each
+                   expert is unavailable with probability p_net per batch
+                   (timeout -> the router's mass renormalizes, paper §Acc).
+  * ``edgemoe``  — end-only: flat gate + a STATIC 40% expert subset (the
+                   memory-resident working set), train and eval.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CompressionConfig, get_config, smoke_config
+from repro.configs.switch_base import with_experts
+from repro.data.pipeline import DataConfig, batches, eval_accuracy
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.training.optimizer import OptimizerConfig, init_optimizer
+
+SYSTEMS = ("ec2moe", "brownoutserve", "edgemoe")
+
+
+def tiny_switch(num_experts: int, system: str, *, d_model=128, seq=64):
+    """Smoke-scale switch-base variant for CPU accuracy runs."""
+    cfg = smoke_config(with_experts(num_experts))
+    moe = dataclasses.replace(
+        cfg.moe,
+        num_experts=num_experts,
+        d_ff_expert=128,
+        capacity_factor=2.0,
+        num_groups=(max(2, num_experts // 4) if system == "ec2moe" else 1),
+    )
+    kw = dict(moe=moe, d_model=d_model, vocab_size=512)
+    if system == "ec2moe":
+        kw["compression"] = CompressionConfig(
+            rank=d_model // 2, boundaries=("dispatch",), recon_weight=0.05
+        )
+    return cfg.replace(**kw)
+
+
+def static_mask(num_experts: int, cap: float = 0.4) -> jnp.ndarray:
+    n = max(1, int(np.floor(cap * num_experts)))
+    return jnp.arange(num_experts) < n
+
+
+def random_drop_mask(num_experts: int, p_drop: float, rng) -> jnp.ndarray:
+    m = rng.random(num_experts) >= p_drop
+    if not m.any():
+        m[rng.integers(num_experts)] = True
+    return jnp.asarray(m)
+
+
+def train_tiny(
+    cfg,
+    data_cfg: DataConfig,
+    *,
+    steps: int = 300,
+    batch_size: int = 16,
+    lr: float = 3e-3,
+    train_mask=None,
+    seed: int = 0,
+) -> Tuple[object, Dict]:
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_cfg = OptimizerConfig(name="adamw", lr=lr, warmup_steps=20, decay_steps=steps)
+    opt_state = init_optimizer("adamw", params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    if train_mask is not None:
+        loss_step = make_train_step(model, opt_cfg)  # re-closure w/ mask below
+    last = {}
+    for i, b in enumerate(batches(data_cfg, batch_size, steps, seed=seed + 1)):
+        bj = {k: jnp.asarray(v) for k, v in b.items()}
+        if train_mask is not None:
+            # thread the expert mask through the loss (end-tier training)
+            params, opt_state, last = _masked_step(
+                model, opt_cfg, params, opt_state, bj, train_mask
+            )
+        else:
+            params, opt_state, last = step_fn(params, opt_state, bj)
+    return model, {"params": params, "metrics": jax.tree.map(float, last)}
+
+
+_MASKED_CACHE = {}
+
+
+def _masked_step(model, opt_cfg, params, opt_state, batch, mask):
+    key = (id(model.cfg), model.cfg.name)
+    if key not in _MASKED_CACHE:
+        from repro.launch.steps import make_loss_fn
+        from repro.training import optimizer as opt_mod
+
+        loss_fn = make_loss_fn(model)
+
+        @jax.jit
+        def step(params, opt_state, batch, mask):
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, mask
+            )
+            grads, gnorm = opt_mod.clip_by_global_norm(grads, opt_cfg.grad_clip)
+            params, opt_state, lr = opt_mod.apply_optimizer(
+                model.cfg.optimizer, opt_cfg, grads, opt_state, params
+            )
+            return params, opt_state, metrics
+
+        _MASKED_CACHE[key] = step
+    return _MASKED_CACHE[key](params, opt_state, batch, mask)
+
+
+def eval_tiny(
+    model,
+    params,
+    data_cfg: DataConfig,
+    *,
+    n_batches: int = 16,
+    batch_size: int = 32,
+    expert_mask=None,
+    drop_p: float = 0.0,
+    seed: int = 1234,
+) -> float:
+    rng = np.random.default_rng(seed)
+    fwd = jax.jit(
+        lambda p, b, m: model.train_logits(p, b, expert_mask=m, train=False)[0]
+    )
+    accs = []
+    for b in batches(data_cfg, batch_size, n_batches, seed=seed):
+        mask = expert_mask
+        if drop_p > 0:
+            mask = random_drop_mask(model.cfg.moe.num_experts, drop_p, rng)
+            if expert_mask is not None:
+                mask = mask & expert_mask
+        logits = fwd(params, {"tokens": jnp.asarray(b["tokens"])}, mask)
+        accs.append(eval_accuracy(np.asarray(logits), b["labels"]))
+    return float(np.mean(accs))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,49 @@
+"""Figure 7: scalability under task-load changes (request rate 2..10 req/s)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.configs.switch_base import with_experts
+from repro.sim.policies import PolicyConfig, make_requests
+from repro.sim.simulator import Link, poisson_arrivals, simulate
+
+from benchmarks.common import SYSTEMS
+
+
+def run(rates=(2, 4, 6, 8, 10), experts: int = 16, n_requests: int = 240,
+        seed: int = 0) -> List[Dict]:
+    rows = []
+    cfg = with_experts(experts)
+    pc = PolicyConfig()
+    for rate in rates:
+        arrivals = poisson_arrivals(rate, n_requests, seed)
+        for system in SYSTEMS:
+            m = simulate(
+                make_requests(system, cfg, pc, arrivals, offered_rps=rate),
+                link=Link(0.3, seed=seed),
+                end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+            )
+            rows.append(
+                dict(rate_rps=rate, system=system,
+                     throughput_rps=round(m["throughput_rps"], 3),
+                     latency_mean_s=round(m["latency_mean_s"], 4))
+            )
+            print(f"[fig7] rate={rate} {system}: tput={m['throughput_rps']:.2f}"
+                  f" lat={m['latency_mean_s']*1e3:.0f}ms", flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench_fig7.json")
+    args = ap.parse_args()
+    rows = run()
+    json.dump(rows, open(args.out, "w"), indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

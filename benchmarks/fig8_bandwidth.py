@@ -1,0 +1,49 @@
+"""Figure 8: robustness to bandwidth fluctuation (0..40%)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.configs.switch_base import with_experts
+from repro.sim.policies import PolicyConfig, make_requests
+from repro.sim.simulator import Link, poisson_arrivals, simulate
+
+from benchmarks.common import SYSTEMS
+
+
+def run(flucts=(0.0, 0.1, 0.2, 0.3, 0.4), experts: int = 16,
+        rate_rps: float = 6.0, n_requests: int = 240, seed: int = 0):
+    rows: List[Dict] = []
+    cfg = with_experts(experts)
+    pc = PolicyConfig()
+    arrivals = poisson_arrivals(rate_rps, n_requests, seed)
+    for fl in flucts:
+        for system in SYSTEMS:
+            m = simulate(
+                make_requests(system, cfg, pc, arrivals, offered_rps=rate_rps),
+                link=Link(0.3, fluctuation=fl, seed=seed),
+                end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+            )
+            rows.append(
+                dict(fluctuation=fl, system=system,
+                     throughput_rps=round(m["throughput_rps"], 3),
+                     latency_mean_s=round(m["latency_mean_s"], 4))
+            )
+            print(f"[fig8] fluct={fl:.0%} {system}: "
+                  f"tput={m['throughput_rps']:.2f} "
+                  f"lat={m['latency_mean_s']*1e3:.0f}ms", flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench_fig8.json")
+    args = ap.parse_args()
+    json.dump(run(), open(args.out, "w"), indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,199 @@
+"""Analytic per-device FLOP / HBM-byte model for the roofline.
+
+XLA's ``cost_analysis`` counts while-loop bodies ONCE (verified in
+EXPERIMENTS.md §Roofline-methodology), so scanned-layer models under-report
+by ~block_repeat x.  Since we control every einsum in the implementation,
+the compute/memory roofline terms come from this closed-form model of what
+the lowered program actually executes — including the warts we know about
+(flash attention computes the full S^2 score square without causal block
+skipping; MoE capacity buffers compute padding rows; remat recomputes the
+forward inside backward).  Collective bytes come from the (trip-count
+corrected) HLO parse in repro.launch.dryrun.
+
+Conventions: FLOPs counted as 2*M*N*K per matmul; backward = 2x forward
+matmul cost; remat adds +1x forward (recompute).  Bytes = one read of every
+matmul operand + one write of outputs at the activation dtype, plus
+optimizer state traffic for train.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+@dataclass(frozen=True)
+class CellCost:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    model_flops: float  # 6*N_active*D (train) / 2*N_active*D (inference), global
+    detail: Dict[str, float]
+
+
+def _attn_flops(cfg: ModelConfig, S_q: int, S_kv: int, causal_skip: bool) -> float:
+    """Score+PV matmul flops per sequence (one layer, one batch element).
+    Without block skipping the full S_q x S_kv square is computed."""
+    H, hd = cfg.num_heads, cfg.head_dim
+    pairs = S_q * S_kv
+    if causal_skip and S_q == S_kv:
+        pairs = S_q * (S_q + 1) // 2
+    return 2 * 2 * pairs * H * hd  # qk^T and p@v
+
+
+def _proj_flops(cfg: ModelConfig) -> float:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return 2 * d * (H * hd + 2 * KV * hd + H * hd)  # q, k, v, o per token
+
+
+def _ffn_flops(cfg: ModelConfig, d_ff: int) -> float:
+    mats = 3 if cfg.ffn_gated else 2
+    return 2 * mats * cfg.d_model * d_ff  # per token
+
+
+def _moe_flops_per_token(cfg: ModelConfig, capacity_factor: float) -> float:
+    m = cfg.moe
+    # capacity padding: buffers are sized k*cf assignments/token; empty rows
+    # still run through the grouped GEMM.
+    routed = _ffn_flops(cfg, m.d_ff_expert) * m.top_k * capacity_factor
+    shared = _ffn_flops(cfg, m.d_ff_expert * m.shared_experts) if m.shared_experts else 0.0
+    gate = 2 * cfg.d_model * (m.num_experts + m.num_groups)
+    return routed + shared + gate
+
+
+def _ssm_flops_per_token(cfg: ModelConfig, S: int) -> float:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    P = s.head_dim
+    N = s.d_state
+    G = s.n_groups
+    proj = 2 * d * (2 * d_in + 2 * G * N + H) + 2 * d_in * d  # in/out proj
+    conv = 2 * s.d_conv * (d_in + 2 * G * N)
+    Q = min(s.chunk_size, S)
+    # SSD per token: scores CB^T (Q*G*N), intra mix (Q*H*P), states (H*P*N x2)
+    ssd = 2 * Q * G * N + 2 * Q * H * P + 4 * H * P * N
+    return proj + conv + ssd
+
+
+def _embed_head_flops(cfg: ModelConfig) -> float:
+    return 2 * cfg.d_model * cfg.padded_vocab_size  # lm head matmul per token
+
+
+def _layer_flops_per_token(cfg: ModelConfig, spec, S_q: int, S_kv: int,
+                           capacity_factor: float) -> float:
+    f = 0.0
+    if spec.kind == "attn":
+        f += _proj_flops(cfg)
+        f += _attn_flops(cfg, S_q, S_kv, causal_skip=False) / max(S_q, 1)
+        if spec.cross_attn:
+            f += _proj_flops(cfg)
+            f += _attn_flops(cfg, S_q, cfg.encoder_seq_len, False) / max(S_q, 1)
+    else:
+        f += _ssm_flops_per_token(cfg, S_q)
+    if spec.moe and cfg.moe:
+        f += _moe_flops_per_token(cfg, capacity_factor)
+    elif cfg.d_ff:
+        f += _ffn_flops(cfg, cfg.d_ff)
+    return f
+
+
+def _params_bytes(cfg: ModelConfig, dtype_bytes: int) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def cell_cost(cfg: ModelConfig, cell: ShapeCell, n_devices: int,
+              dp: int) -> CellCost:
+    """Per-device cost of one step of this cell."""
+    B, S = cell.global_batch, cell.seq_len
+    mode = cell.mode
+    cf = cfg.moe.capacity_factor if cfg.moe else 1.0
+
+    if mode == "decode":
+        S_q, S_kv, tokens = 1, S, B  # one new token per slot
+    else:
+        S_q = S_kv = S
+        tokens = B * S
+
+    per_tok = sum(
+        _layer_flops_per_token(cfg, spec, S_q if mode != "decode" else 1,
+                               S_kv, cf)
+        for spec in cfg.layer_pattern
+    ) * cfg.block_repeat
+    if mode == "decode":
+        # decode attention reads the whole cache: per-token attn cost uses S_kv
+        attn_extra = sum(
+            2 * 2 * S_kv * cfg.num_heads * cfg.head_dim
+            for spec in cfg.layer_pattern if spec.kind == "attn"
+        ) * cfg.block_repeat
+        per_tok += attn_extra
+    if cfg.encoder_decoder and mode != "decode":
+        enc_tok = cfg.encoder_seq_len * B
+        enc_per_tok = (
+            _proj_flops(cfg)
+            + _attn_flops(cfg, cfg.encoder_seq_len, cfg.encoder_seq_len, False)
+            / cfg.encoder_seq_len
+            + _ffn_flops(cfg, cfg.d_ff)
+        ) * cfg.encoder_layers
+    else:
+        enc_tok, enc_per_tok = 0, 0.0
+
+    fwd = per_tok * tokens + enc_per_tok * enc_tok + _embed_head_flops(cfg) * tokens
+    if mode == "train":
+        total = 3 * fwd + fwd  # fwd + 2x bwd + 1x remat recompute
+        # optimizer: ~10 flops/param (adam) or ~6 (adafactor), negligible but counted
+        total += 10 * cfg.param_count()
+    else:
+        total = fwd
+
+    flops_per_dev = total / n_devices
+
+    # HBM bytes (per device): weights streamed once per step (sharded),
+    # activations written+read once per layer boundary, caches for decode.
+    act_bytes = 2  # bf16
+    weight_stream = _params_bytes(cfg, 2) / n_devices
+    act_traffic = (
+        tokens / max(dp, 1) * cfg.d_model * act_bytes
+        * cfg.num_layers * 8  # ~8 tensor round-trips per layer
+    )
+    cache_traffic = 0.0
+    if mode == "decode":
+        kv_layers = sum(1 for s in cfg.layer_pattern if s.kind == "attn")
+        kv_len = min(cfg.sliding_window or S, S)
+        cache_traffic = (
+            B * kv_len * cfg.num_kv_heads * cfg.head_dim * 2 * act_bytes
+            * kv_layers * cfg.block_repeat / n_devices
+        )
+        ssm_layers = sum(1 for s in cfg.layer_pattern if s.kind == "ssm")
+        if ssm_layers and cfg.ssm:
+            d_in = cfg.ssm.expand * cfg.d_model
+            H = d_in // cfg.ssm.head_dim
+            cache_traffic += (
+                B * H * cfg.ssm.head_dim * cfg.ssm.d_state * 4 * 2
+                * ssm_layers * cfg.block_repeat / n_devices
+            )
+    if mode == "train":
+        # optimizer state read+write (fp32 master + stats)
+        opt_mult = 12 if cfg.optimizer == "adamw" else 6
+        weight_stream += cfg.param_count() * opt_mult / n_devices
+        act_traffic *= 3  # fwd + bwd + remat passes
+
+    hbm = weight_stream + act_traffic + cache_traffic
+
+    n_active = cfg.active_param_count()
+    model_flops = (6 if mode == "train" else 2) * n_active * tokens
+
+    return CellCost(
+        flops=flops_per_dev,
+        hbm_bytes=hbm,
+        model_flops=model_flops,
+        detail={
+            "fwd_flops_global": fwd,
+            "tokens": tokens,
+            "weight_stream_bytes": weight_stream,
+            "act_traffic_bytes": act_traffic,
+            "cache_traffic_bytes": cache_traffic,
+        },
+    )

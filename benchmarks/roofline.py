@@ -1,0 +1,133 @@
+"""Roofline analysis (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms:
+
+    compute    = FLOPs_per_device / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HBM_bytes_per_device / HBM_bw           (819 GB/s)
+    collective = wire_bytes_per_device / link_bw         (~50 GB/s/link)
+
+FLOPs/HBM come from the analytic model (benchmarks.flops_model — XLA's
+cost_analysis undercounts loop bodies, see EXPERIMENTS.md); collective
+bytes come from the trip-count-corrected HLO parse stored by the dry-run.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--json dryrun_results.json]
+Emits a markdown table + roofline_table.json for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from benchmarks.flops_model import cell_cost
+
+PEAK_FLOPS = 197e12  # bf16 per chip (v5e)
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+
+def analyze(records: List[Dict]) -> List[Dict]:
+    out = []
+    for r in records:
+        if r.get("status") != "ok":
+            out.append(dict(r))
+            continue
+        cfg = get_config(r["arch"])
+        cell = SHAPE_BY_NAME[r["shape"]]
+        n_dev = r["devices"]
+        policy = (
+            cfg.mesh_policy if cell.mode == "train" else cfg.serve_mesh_policy
+        )
+        # batch-sharding degree under the cell's mesh policy
+        dp = n_dev if policy in ("fsdp", "dp") else n_dev // 16
+        dp = min(dp, cell.global_batch) or 1
+        cost = cell_cost(cfg, cell, n_dev, dp)
+        t_comp = cost.flops / PEAK_FLOPS
+        t_mem = cost.hbm_bytes / HBM_BW
+        # bf16-equivalent: XLA:CPU promotes bf16 math/collectives to f32;
+        # the TPU target moves bf16 (see EXPERIMENTS.md §Methodology)
+        coll_bytes = r["collectives"].get(
+            "total_wire_bytes_bf16eq", r["collectives"]["total_wire_bytes"] / 2
+        )
+        t_coll = coll_bytes / LINK_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        step = max(terms.values())
+        # roofline fraction: useful model flops vs what the step time allows
+        model_flops_per_dev = cost.model_flops / n_dev
+        frac = (model_flops_per_dev / PEAK_FLOPS) / max(step, 1e-12)
+        rec = dict(r)
+        rec.update(
+            analytic_flops_per_dev=cost.flops,
+            analytic_hbm_bytes=cost.hbm_bytes,
+            model_flops_global=cost.model_flops,
+            useful_ratio=cost.model_flops / max(cost.flops * n_dev, 1.0),
+            t_compute_s=t_comp,
+            t_memory_s=t_mem,
+            t_collective_s=t_coll,
+            dominant=dominant,
+            est_step_s=step,
+            roofline_fraction=frac,
+        )
+        out.append(rec)
+    return out
+
+
+def to_markdown(rows: List[Dict], mesh: str = "single") -> str:
+    hdr = (
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant "
+        "| useful ratio | roofline frac |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") == "skipped":
+            if r.get("mesh") == mesh:
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                    f"{r.get('reason','')[:40]} | — | — |"
+                )
+            continue
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        lines.append(
+            "| {arch} | {shape} | {tc:.2f} | {tm:.2f} | {tl:.2f} | {dom} "
+            "| {ur:.2f} | {rf:.1%} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                tc=r["t_compute_s"] * 1e3,
+                tm=r["t_memory_s"] * 1e3,
+                tl=r["t_collective_s"] * 1e3,
+                dom=r["dominant"],
+                ur=r["useful_ratio"],
+                rf=r["roofline_fraction"],
+            )
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--out", default="roofline_table.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    records = json.load(open(args.json))
+    rows = analyze(records)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(to_markdown(rows, args.mesh))
+    ok = [r for r in rows if r.get("status") == "ok" and r["mesh"] == args.mesh]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["t_collective_s"] / max(r["est_step_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline_fraction']:.1%})")
+        print(f"most collective-bound:  {collb['arch']} x {collb['shape']} "
+              f"(t_coll {collb['t_collective_s']*1e3:.1f} ms, dominant={collb['dominant']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

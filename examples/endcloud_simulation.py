@@ -1,0 +1,47 @@
+"""End-cloud fleet simulation: sweep request rate and bandwidth fluctuation
+for the three systems (paper figs. 7-8) on full-size Switch-Base.
+
+    PYTHONPATH=src python examples/endcloud_simulation.py
+"""
+
+from repro.configs.switch_base import with_experts
+from repro.sim.policies import PolicyConfig, make_requests
+from repro.sim.simulator import Link, poisson_arrivals, simulate
+
+
+def main():
+    cfg = with_experts(16)
+    pc = PolicyConfig()
+    print(f"fleet: {pc.n_end_devices}x {pc.end_profile.name} end + "
+          f"{pc.n_cloud_gpus}x {pc.cloud_profile.name} cloud, 300 Mbps ±20%\n")
+
+    print("== request-rate sweep (fig. 7) ==")
+    for rate in (2, 4, 6, 8, 10):
+        row = []
+        for system in ("ec2moe", "brownoutserve", "edgemoe"):
+            arr = poisson_arrivals(rate, 200, 0)
+            m = simulate(
+                make_requests(system, cfg, pc, arr, offered_rps=rate),
+                link=Link(0.3, fluctuation=0.2, seed=0),
+                end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+            )
+            row.append(f"{system}: {m['throughput_rps']:5.2f} rps "
+                       f"{m['latency_mean_s']*1e3:7.0f} ms")
+        print(f"rate {rate:2d} | " + " | ".join(row))
+
+    print("\n== bandwidth-fluctuation sweep (fig. 8) ==")
+    for fl in (0.0, 0.2, 0.4):
+        row = []
+        for system in ("ec2moe", "brownoutserve"):
+            arr = poisson_arrivals(6, 200, 1)
+            m = simulate(
+                make_requests(system, cfg, pc, arr, offered_rps=6),
+                link=Link(0.3, fluctuation=fl, seed=1),
+                end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+            )
+            row.append(f"{system}: {m['latency_mean_s']*1e3:6.0f} ms")
+        print(f"fluct {fl:.0%} | " + " | ".join(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Joint training of the PO-ECC low-rank codec (paper eq. 8).
+
+Trains the same model twice — once with the dispatch codec in the loop
+(joint, eq. 8) and once without (codec bolted on post-hoc) — and compares
+accuracy under compressed serving.  Reproduces the paper's claim that joint
+training preserves accuracy under compression.
+
+    PYTHONPATH=src python examples/train_compression.py [--rank 16]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import eval_tiny, tiny_switch, train_tiny
+from repro.configs import CompressionConfig
+from repro.data.pipeline import DataConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    dcfg = DataConfig(task="lm", vocab_size=512, seq_len=64, n_latent_tasks=4)
+
+    joint_cfg = tiny_switch(8, "ec2moe").replace(
+        compression=CompressionConfig(
+            rank=args.rank, boundaries=("dispatch",), recon_weight=0.05
+        )
+    )
+    print(f"joint training with rank-{args.rank} dispatch codec (eq. 8) ...")
+    m1, s1 = train_tiny(joint_cfg, dcfg, steps=args.steps, seed=0)
+    acc_joint = eval_tiny(m1, s1["params"], dcfg, n_batches=8)
+    recon = s1["metrics"].get("recon_loss", float("nan"))
+    print(f"  accuracy={acc_joint*100:.2f}%  final recon loss={recon:.4f}")
+
+    print("training WITHOUT codec (baseline) ...")
+    base_cfg = joint_cfg.replace(compression=None)
+    m2, s2 = train_tiny(base_cfg, dcfg, steps=args.steps, seed=0)
+    acc_base = eval_tiny(m2, s2["params"], dcfg, n_batches=8)
+    print(f"  uncompressed accuracy={acc_base*100:.2f}%")
+
+    print(f"\n=> joint-compressed model keeps "
+          f"{acc_joint/acc_base*100:.1f}% of uncompressed accuracy at "
+          f"{args.rank}/{joint_cfg.d_model} = "
+          f"{args.rank/joint_cfg.d_model:.0%} boundary bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Checkpointing: atomic, resumable, optionally async.
+
+Layout: <dir>/step_<N>/  containing
+  arrays.npz   — every leaf, keyed by its '/'-joined tree path
+  meta.json    — step, timestamp, user metadata, tree manifest
+
+Writes go to ``step_<N>.tmp`` and are ``os.replace``d into place, so a
+crash mid-write can never corrupt the latest checkpoint — the restore path
+simply ignores ``*.tmp``.  ``keep`` bounds disk usage; ``async_save``
+snapshots to host memory synchronously (correctness) and writes on a
+background thread (doesn't stall the step loop).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, ref in leaves_kp:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {ref.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, state: Any, metadata: Optional[Dict] = None):
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        self._write(step, host_state, metadata or {})
+
+    def async_save(self, step: int, state: Any, metadata: Optional[Dict] = None):
+        """Snapshot synchronously (device_get), write in the background."""
+        self.wait()
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_state, metadata or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state, metadata: Dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        flat = _flatten(host_state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(
+                {"step": step, "time": time.time(), "n_leaves": len(flat),
+                 **metadata},
+                f,
+            )
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """Restore into the structure of ``template``; optionally place onto
+        ``shardings`` (a pytree of NamedSharding — elastic re-mesh path)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings
+            )
+        return step, state
+
+    def metadata(self, step: Optional[int] = None) -> Dict:
+        step = step if step is not None else self.latest_step()
+        with open(os.path.join(self.dir, f"step_{step:08d}", "meta.json")) as f:
+            return json.load(f)

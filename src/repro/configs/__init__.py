@@ -1,0 +1,123 @@
+"""Architecture registry.
+
+Each assigned architecture has a module ``repro.configs.<id>`` exposing
+``CONFIG``.  ``get_config(name)`` returns the full (paper-scale) config;
+``smoke_config(cfg)`` shrinks any config to a CPU-runnable size for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import (
+    CompressionConfig,
+    LayerSpec,
+    ModelConfig,
+    MoEConfig,
+    SHAPE_BY_NAME,
+    SHAPES,
+    ShapeCell,
+    SSMConfig,
+    shape_applicable,
+)
+
+# Import order = canonical arch order used in reports.
+from repro.configs import (  # noqa: E402
+    jamba_1_5_large_398b,
+    h2o_danube_3_4b,
+    tinyllama_1_1b,
+    internlm2_20b,
+    qwen3_14b,
+    llama4_scout_17b_16e,
+    qwen3_moe_235b_a22b,
+    whisper_base,
+    qwen2_vl_2b,
+    mamba2_130m,
+    switch_base,
+)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        jamba_1_5_large_398b,
+        h2o_danube_3_4b,
+        tinyllama_1_1b,
+        internlm2_20b,
+        qwen3_14b,
+        llama4_scout_17b_16e,
+        qwen3_moe_235b_a22b,
+        whisper_base,
+        qwen2_vl_2b,
+        mamba2_130m,
+        switch_base,
+    )
+}
+
+ASSIGNED_ARCHS = tuple(n for n in ARCHS if n != "switch-base")
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    cfg = ARCHS[name]
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a config to a CPU-runnable size, preserving its *structure*
+    (layer pattern, MoE grouping, SSM-ness, enc-dec-ness)."""
+    kw = dict(
+        num_layers=len(cfg.layer_pattern),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        attn_chunk_q=64,
+        attn_chunk_kv=64,
+        sliding_window=96 if cfg.sliding_window else None,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=8,
+            num_groups=min(cfg.moe.num_groups, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=128,
+            capacity_factor=2.0,
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=32, chunk_size=32
+        )
+    if cfg.encoder_decoder:
+        kw["encoder_layers"] = 2
+        kw["encoder_seq_len"] = 64
+    if cfg.vision_patches:
+        kw["vision_patches"] = 16
+    if cfg.mrope_sections is not None:
+        kw["mrope_sections"] = (4, 6, 6)  # sums to head_dim/2 = 16
+    if cfg.compression is not None and cfg.compression.rank > 0:
+        kw["compression"] = dataclasses.replace(
+            cfg.compression, rank=min(cfg.compression.rank, 128 // 2)
+        )
+    return cfg.replace(**kw)
+
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED_ARCHS",
+    "CompressionConfig",
+    "LayerSpec",
+    "ModelConfig",
+    "MoEConfig",
+    "SHAPES",
+    "SHAPE_BY_NAME",
+    "ShapeCell",
+    "SSMConfig",
+    "get_config",
+    "shape_applicable",
+    "smoke_config",
+]

@@ -1,0 +1,319 @@
+"""Configuration dataclasses for the EC2MoE framework.
+
+Every architecture in ``repro.configs`` is expressed as a :class:`ModelConfig`.
+A model is a stack of ``block_repeat`` copies of ``layer_pattern`` (a tuple of
+:class:`LayerSpec`).  Homogeneous models use a pattern of length one; hybrids
+(e.g. Jamba's 1-attention : 7-mamba interleave) use a longer pattern.  The
+stacked-block structure is what lets the model be lowered with a single
+``jax.lax.scan`` over block parameters, keeping HLO size (and therefore
+compile time at 512 devices) small.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts + HL-GGN (group gate) configuration.
+
+    ``num_groups`` is K in the paper (eq. 5-7): experts are split into K
+    groups, each with its own lightweight softmax gate; a global K-way gate
+    picks groups and the final probability is the product of the two stages.
+    When the expert-parallel degree divides ``num_groups`` (or vice versa),
+    group selection doubles as *shard* selection, which is what makes the
+    dispatch all-to-all hierarchical (the TPU-native reading of the paper's
+    end-cloud split).
+    """
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_groups: int = 1
+    # Stage-1 hard group restriction: 0 = soft (paper-faithful eq. 7: final
+    # probability is the product of the two stages, top-k taken globally);
+    # g > 0 = only experts in the top-g groups are eligible (dispatch-locality
+    # optimization, see EXPERIMENTS.md §Perf).
+    group_top_k: int = 0
+    shared_experts: int = 0  # always-on experts (llama4-style)
+    capacity_factor: float = 1.25
+    eval_capacity_factor: float = 1.0
+    router_aux_weight: float = 0.01  # load-balance loss weight
+    router_z_weight: float = 1e-3  # router z-loss weight
+    # HL-GGN hardware-aware local selection (eq. 2-4): at most this fraction
+    # of experts may be evaluated on a capability-limited device.
+    local_selection_cap: float = 0.4
+
+    def __post_init__(self):
+        if self.num_experts % self.num_groups != 0:
+            raise ValueError(
+                f"num_experts={self.num_experts} not divisible by "
+                f"num_groups={self.num_groups}"
+            )
+
+    @property
+    def experts_per_group(self) -> int:
+        return self.num_experts // self.num_groups
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 128  # SSD chunk length (intra-chunk quadratic)
+    n_groups: int = 1  # B/C groups (Mamba-2 "G")
+    head_block: int = 8  # heads processed per step (bounds the [Q,Q,hb] buffer)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the repeating block pattern."""
+
+    kind: str = "attn"  # "attn" | "ssm"
+    moe: bool = False  # FFN is a (group-gated) MoE instead of dense
+    # attn-only extras
+    cross_attn: bool = False  # decoder cross-attention (enc-dec models)
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    """PO-ECC low-rank compression (eq. 8) applied to cross-boundary traffic.
+
+    ``rank`` is r; the encoder projects the model dimension d -> r before a
+    pipeline/pod or expert-dispatch boundary and the decoder reconstructs on
+    the other side.  ``boundaries`` selects which traffic is compressed.
+    """
+
+    rank: int = 0  # 0 = disabled
+    boundaries: Tuple[str, ...] = ("pipeline",)  # subset of {"pipeline", "dispatch"}
+    recon_weight: float = 1.0  # ||X - X_hat||^2 weight (joint training, eq. 8)
+    task_weight: float = 1.0  # lambda * L_task
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    layer_pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    compression: Optional[CompressionConfig] = None
+
+    # Attention details
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # SWA width (tokens), None = full
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, ...]] = None  # qwen2-vl M-RoPE
+
+    # Encoder-decoder (whisper)
+    encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0  # frontend-stub sequence length (e.g. 1500 frames)
+
+    # VLM frontend stub
+    vision_patches: int = 0  # precomputed patch embeddings per sample
+
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    ffn_gated: bool = True  # GLU-style FFN (llama family); False = 2-matrix MLP
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    # numerics
+    dtype: str = "bfloat16"  # activation dtype
+    param_dtype: str = "float32"
+
+    # attention implementation
+    attn_chunk_q: int = 512  # flash q-block
+    attn_chunk_kv: int = 512  # flash kv-block
+
+    # MoE implementation: "auto" | "naive" | "sorted" | "a2a" | "tp"
+    #   a2a  = paper-faithful hierarchical dispatch (tokens all-to-all to
+    #          expert shards; group gate stage-1 == shard selection)
+    #   tp   = replicated-activation EP (local select + psum), beyond-paper
+    moe_impl: str = "auto"
+
+    # Training-step knobs (consumed by launch/steps.py and the trainer).
+    optimizer: str = "adamw"  # "adamw" | "adafactor" (factored state for 100B+)
+    grad_accum: int = 1  # microbatches per step (activation-memory relief)
+    # Megatron-style sequence parallelism: residual stream sharded over the
+    # model axis between blocks (RS+AG instead of AR; see §Perf iteration 2).
+    seq_parallel: bool = False
+    # Mesh-axis policy: "tp" keeps the model axis for tensor/expert
+    # parallelism; "fsdp" folds the model axis into data parallelism
+    # (pure ZeRO-3) — optimal for dense architectures whose sharded
+    # optimizer state fits without TP; "dp" replicates params (tiny models);
+    # "seqp" = TP/EP + sequence-parallel attention (attention-pure stacks).
+    # Training and serving get separate policies: training wants optimizer
+    # state spread (fsdp), serving wants weights resident (tp/dp).
+    mesh_policy: str = "tp"
+    serve_mesh_policy: str = "tp"
+
+    def __post_init__(self):
+        if self.num_layers % len(self.layer_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not a multiple of "
+                f"pattern length {len(self.layer_pattern)}"
+            )
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if any(s.moe for s in self.layer_pattern) and self.moe is None:
+            raise ValueError(f"{self.name}: pattern has MoE layers but moe=None")
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab rounded up so embedding/lm_head shard over model x fsdp
+        axes (512 = 16 model x 32 data); the tail columns are masked to
+        -inf in lm_logits and never hit by labels."""
+        pad = 512
+        return -(-self.vocab_size // pad) * pad
+
+    @property
+    def block_repeat(self) -> int:
+        return self.num_layers // len(self.layer_pattern)
+
+    @property
+    def attn_free(self) -> bool:
+        return all(s.kind != "attn" for s in self.layer_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long-context (500k) decode is supported: the model is
+        attention-free, hybrid-SSM, or uses sliding-window attention."""
+        if self.attn_free:
+            return True
+        if self.sliding_window is not None:
+            return True
+        # hybrid: any ssm layer present means the attention share is bounded
+        return any(s.kind == "ssm" for s in self.layer_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.head_dim
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += d * self.vocab_size  # lm head
+        n += d  # final norm
+
+        def attn_params() -> int:
+            q = d * self.num_heads * hd
+            kv = 2 * d * self.num_kv_heads * hd
+            o = self.num_heads * hd * d
+            qk = 2 * hd if self.qk_norm else 0
+            return q + kv + o + qk
+
+        n_mats = 3 if self.ffn_gated else 2
+
+        def dense_ffn() -> int:
+            return n_mats * d * self.d_ff
+
+        def moe_ffn() -> int:
+            m = self.moe
+            e = m.num_experts * n_mats * d * m.d_ff_expert
+            e += m.shared_experts * n_mats * d * m.d_ff_expert
+            # group gate: K group gates (M_k x d each) + global gate (K x d)
+            e += m.num_experts * d + m.num_groups * d
+            return e
+
+        def ssm_params() -> int:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            # in_proj -> [z, x, B, C, dt], conv, A, D, norm, out_proj
+            zxbcdt = d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
+            conv = (d_in + 2 * s.n_groups * s.d_state) * s.d_conv
+            return zxbcdt + conv + 2 * nheads + d_in + d_in * d
+
+        per_pattern = 0
+        for spec in self.layer_pattern:
+            per_pattern += 2 * d  # two norms
+            if spec.kind == "attn":
+                per_pattern += attn_params()
+                if spec.cross_attn:
+                    per_pattern += attn_params() + d
+            else:
+                per_pattern += ssm_params()
+            if spec.kind != "ssm":  # ssm blocks subsume the FFN (d_ff=0 models)
+                per_pattern += moe_ffn() if spec.moe else (dense_ffn() if self.d_ff else 0)
+            elif spec.moe:
+                per_pattern += moe_ffn()
+            elif self.d_ff:
+                per_pattern += dense_ffn()
+        n += per_pattern * self.block_repeat
+        if self.encoder_decoder:
+            n += self.encoder_layers * (2 * d + attn_params() + dense_ffn())
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        inactive_frac = 1.0 - (m.top_k + m.shared_experts) / (
+            m.num_experts + m.shared_experts
+        )
+        n_mats = 3 if self.ffn_gated else 2
+        expert_params = m.num_experts * n_mats * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(1 for s in self.layer_pattern if s.moe) * self.block_repeat
+        return self.param_count() - int(
+            n_moe_layers * expert_params * inactive_frac
+        )
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the 4 assigned shape cells)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """Whether a shape cell applies to an architecture (and why not)."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k context needs sub-quadratic attention"
+    return True, ""

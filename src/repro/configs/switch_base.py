@@ -1,0 +1,46 @@
+"""Switch-Base — the paper's own evaluation model (Switch Transformer).
+
+[arXiv:2101.03961]  EC2MoE evaluates on Switch-Base with 8/16/32/64 experts,
+top-1 routing, seq_len 256, batch 4.  We keep the canonical Switch-Base
+dims (12L, d_model=768, 12H, d_ff=3072) as a decoder-only stack with MoE on
+every other FFN (Switch's layout).  ``num_experts`` is varied by the
+benchmark harness via ``get_config("switch-base").replace(moe=...)``.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="switch-base",
+    family="moe",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=32128,
+    layer_pattern=(LayerSpec(kind="attn"), LayerSpec(kind="attn", moe=True)),
+    moe=MoEConfig(
+        num_experts=8,
+        top_k=1,
+        d_ff_expert=3072,
+        num_groups=4,
+        capacity_factor=1.25,
+    ),
+    act="gelu",
+    ffn_gated=False,
+    rope_theta=10000.0,
+)
+
+
+def with_experts(num_experts: int, num_groups: int = 0) -> ModelConfig:
+    """Switch-Base variant with a different expert count (paper sweeps
+    8/16/32/64)."""
+    import dataclasses
+
+    if num_groups == 0:
+        num_groups = max(2, num_experts // 4)
+    return CONFIG.replace(
+        moe=dataclasses.replace(
+            CONFIG.moe, num_experts=num_experts, num_groups=num_groups
+        )
+    )

@@ -1,0 +1,9 @@
+"""EC2MoE core: the paper's contributions as composable JAX modules.
+
+  * :mod:`repro.core.gating`      — HL-GGN lightweight group gate (eq. 5-7)
+  * :mod:`repro.core.hardware`    — device profiles + capability model (eq. 2-3)
+  * :mod:`repro.core.selection`   — hardware-aware local expert selection (eq. 4)
+  * :mod:`repro.core.compression` — low-rank encoder/decoder (eq. 8)
+  * :mod:`repro.core.moe`         — group-gated MoE layer (dense / sorted / EP all-to-all)
+  * :mod:`repro.core.pipeline`    — route-aware heuristic pipeline scheduler (eq. 9-11)
+"""

@@ -1,0 +1,190 @@
+"""HL-GGN: Hardware-aware Lightweight Group Gate Network (paper eq. 5-7).
+
+The M experts are split into K groups.  Stage 1 is a K-way global gate
+(eq. 6); stage 2 is a per-group M_k-way gate (eq. 5).  The final selection
+probability is the product of the stages (eq. 7):
+
+    g_i(x) = p_group^{(k)}(x) * p_local,i^{(k)}(x),   i in group k
+
+which is a valid distribution over all M experts by construction.  Compared
+with a flat M-way gate the parameter count drops from M*d to M*d/K * K = M*d
+for the locals... the *compute* win is that stage 1 is K-way and stage 2 runs
+only for selected groups when ``group_top_k`` restriction is on; the
+*quality* win (per the paper) is the group-structured factorization.
+
+TPU-native reading: when K == expert-parallel degree and experts are laid out
+contiguously, stage-1 routing IS dispatch-shard routing, so restricting to
+``group_top_k`` groups directly caps all-to-all fan-out per token.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal_init
+
+NEG_INF = -1e30
+
+
+class GateOutput(NamedTuple):
+    probs: jax.Array  # [T, E] combined probabilities (eq. 7)
+    topk_idx: jax.Array  # [T, k] selected experts
+    topk_weight: jax.Array  # [T, k] combine weights (renormalized)
+    p_group: jax.Array  # [T, K] stage-1 probabilities
+    aux: Dict[str, jax.Array]  # load-balance metrics / losses
+
+
+def init_group_gate(key, d_model: int, moe_cfg, dtype=jnp.float32) -> Dict:
+    K = moe_cfg.num_groups
+    Mk = moe_cfg.experts_per_group
+    kl, kg = jax.random.split(key)
+    return {
+        # K per-group gates, stacked: [K, d, M_k]  (eq. 5)
+        "w_local": truncated_normal_init(kl, (K, d_model, Mk), dtype, 1.0),
+        "b_local": jnp.zeros((K, Mk), dtype),
+        # global K-way gate: [d, K]  (eq. 6)
+        "w_global": truncated_normal_init(kg, (d_model, K), dtype, 1.0),
+        "b_global": jnp.zeros((K,), dtype),
+    }
+
+
+def group_gate_logits(params: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [T, d] -> (local_logits [T, K, M_k], global_logits [T, K]).
+    Router math always runs in fp32."""
+    xf = x.astype(jnp.float32)
+    local = (
+        jnp.einsum("td,kdm->tkm", xf, params["w_local"].astype(jnp.float32))
+        + params["b_local"].astype(jnp.float32)[None]
+    )
+    glob = xf @ params["w_global"].astype(jnp.float32) + params["b_global"].astype(
+        jnp.float32
+    )
+    return local, glob
+
+
+def group_gate_probs(
+    params: Dict,
+    x: jax.Array,  # [T, d]
+    moe_cfg,
+    expert_mask: Optional[jax.Array] = None,  # bool [E] or [T, E]; True = allowed
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Two-stage gate (eq. 5-7).  Returns (probs [T,E], p_group [T,K], aux)."""
+    K, Mk = moe_cfg.num_groups, moe_cfg.experts_per_group
+    T = x.shape[0]
+    local, glob = group_gate_logits(params, x)
+
+    if expert_mask is not None:
+        em = expert_mask.reshape((-1, K, Mk)) if expert_mask.ndim == 2 else (
+            expert_mask.reshape((K, Mk))[None]
+        )
+        local = jnp.where(em, local, NEG_INF)
+        # a fully-masked group must get zero stage-1 probability
+        group_ok = em.any(axis=-1)  # [*, K]
+        glob = jnp.where(group_ok, glob, NEG_INF)
+
+    p_local = jax.nn.softmax(local, axis=-1)  # [T, K, M_k] (eq. 5)
+    p_group = jax.nn.softmax(glob, axis=-1)  # [T, K]      (eq. 6)
+
+    if moe_cfg.group_top_k and moe_cfg.group_top_k < K:
+        # Hard locality restriction: keep only the top-g groups, renormalize.
+        g = moe_cfg.group_top_k
+        thresh = jax.lax.top_k(p_group, g)[0][:, -1:]
+        keep = p_group >= thresh
+        p_group = jnp.where(keep, p_group, 0.0)
+        p_group = p_group / jnp.maximum(p_group.sum(-1, keepdims=True), 1e-9)
+
+    probs = (p_group[:, :, None] * p_local).reshape(T, K * Mk)  # (eq. 7)
+
+    # z-losses on both stages' logits keep the router numerically tame.
+    z_global = jnp.mean(jax.nn.logsumexp(glob, axis=-1) ** 2)
+    z_local = jnp.mean(jax.nn.logsumexp(local, axis=-1) ** 2)
+    aux = {"router_z": z_global + z_local}
+    return probs, p_group, aux
+
+
+def select_topk(
+    probs: jax.Array, top_k: int, renormalize: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    w, idx = jax.lax.top_k(probs, top_k)
+    if renormalize:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return idx, w
+
+
+def load_balance_loss(
+    probs: jax.Array,  # [T, E]
+    topk_idx: jax.Array,  # [T, k]
+    num_experts: int,
+    num_groups: int,
+) -> Dict[str, jax.Array]:
+    """Switch/GShard auxiliary loss at expert AND group granularity.
+
+    f_e = fraction of assignments routed to e; P_e = mean router prob.
+    L = E * sum_e f_e P_e  (=1 at perfect balance).
+    The group-level variant is the HL-GGN analogue: it drives the stage-1
+    gate toward balanced *shard* load, which is what bounds the all-to-all.
+    """
+    T, k = topk_idx.shape
+    E, K = num_experts, num_groups
+    Mk = E // K
+    assign = jax.nn.one_hot(topk_idx.reshape(-1), E, dtype=jnp.float32)
+    f = assign.mean(0)  # [E] fraction per assignment slot
+    P = probs.astype(jnp.float32).mean(0)  # [E]
+    expert_loss = E * jnp.sum(f * P)
+    fg = f.reshape(K, Mk).sum(-1)
+    Pg = P.reshape(K, Mk).sum(-1)
+    group_loss = K * jnp.sum(fg * Pg)
+    return {
+        "lb_expert": expert_loss,
+        "lb_group": group_loss,
+        "expert_frac": f,
+        "group_frac": fg,
+    }
+
+
+def gate(
+    params: Dict,
+    x: jax.Array,  # [T, d]
+    moe_cfg,
+    expert_mask: Optional[jax.Array] = None,
+) -> GateOutput:
+    """Full HL-GGN gate: probabilities, top-k selection, aux losses."""
+    probs, p_group, aux = group_gate_probs(params, x, moe_cfg, expert_mask)
+    topk_idx, topk_w = select_topk(probs, moe_cfg.top_k)
+    lb = load_balance_loss(probs, topk_idx, moe_cfg.num_experts, moe_cfg.num_groups)
+    aux = dict(aux)
+    aux.update({k: v for k, v in lb.items() if k.startswith("lb_")})
+    aux["aux_loss"] = (
+        moe_cfg.router_aux_weight * (lb["lb_expert"] + lb["lb_group"])
+        + moe_cfg.router_z_weight * aux["router_z"]
+    )
+    return GateOutput(probs, topk_idx, topk_w, p_group, aux)
+
+
+def init_flat_gate(key, d_model: int, num_experts: int, dtype=jnp.float32) -> Dict:
+    """Baseline: traditional single-FC gate (the paper's strawman)."""
+    return {
+        "w": truncated_normal_init(key, (d_model, num_experts), dtype, 1.0),
+        "b": jnp.zeros((num_experts,), dtype),
+    }
+
+
+def flat_gate_probs(params: Dict, x: jax.Array) -> jax.Array:
+    logits = x.astype(jnp.float32) @ params["w"].astype(jnp.float32) + params[
+        "b"
+    ].astype(jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def gate_flop_count(d_model: int, num_experts: int, num_groups: int, group_top_k: int = 0):
+    """Analytic per-token gate FLOPs: flat vs. grouped (paper's table talking
+    point; also used by the route-aware scheduler's cost model)."""
+    flat = 2 * d_model * num_experts
+    K = num_groups
+    Mk = num_experts // K
+    g = group_top_k if group_top_k else K
+    grouped = 2 * d_model * K + g * 2 * d_model * Mk
+    return {"flat": flat, "grouped": grouped}

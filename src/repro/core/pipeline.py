@@ -1,0 +1,183 @@
+"""PO-ECC route-aware heuristic pipeline scheduling (paper eq. 9-11).
+
+The scheduling problem: tasks t_1..t_N (inference sub-stages of in-flight
+requests), each assignable to End or Cloud, with computational complexity
+C(t_i) and communication cost Comm(t_i).  Objective (eq. 9):
+
+    min sum_i [ alpha * ExecTime(t_i) + (1 - alpha) * Comm(t_i) ]
+
+Greedy heuristic: priority P(t_i) = C(t_i) / (Comm(t_i) + eps) (eq. 10);
+high-priority (compute-heavy, cheap-to-keep-local) tasks run on the end when
+it has headroom (eq. 11), everything else goes to the cloud.
+
+Two consumers:
+  * the end-cloud serving engine / simulator (benchmarks fig. 5-8), where
+    tasks are per-request layer-ranges;
+  * the TPU pipeline planner, where "End" is the first pod (stage 0) and
+    "Cloud" the rest — the same heuristic picks the layer split point and
+    whether the boundary activations are compressed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.hardware import Capability, DeviceProfile, DeviceState, capability
+
+
+@dataclass(frozen=True)
+class Task:
+    """One schedulable inference sub-stage."""
+
+    task_id: int
+    gflops: float  # C(t_i): compute complexity
+    comm_bytes: float  # Comm(t_i) input that must move if offloaded
+    request_id: int = -1
+    stage: str = ""  # human-readable ("gate", "experts[0:4]", "layers[8:24]")
+
+
+@dataclass
+class SchedulerConfig:
+    alpha: float = 0.5  # eq. 9 compute/comm trade-off
+    beta: float = 1.0  # eq. 11 priority threshold for local execution
+    eps: float = 1e-6  # eq. 10 division guard
+    t_end: float = 50.0  # eq. 11 max tolerable end load (GFLOP in flight)
+
+
+@dataclass(frozen=True)
+class Placement:
+    task: Task
+    location: str  # "end" | "cloud"
+    exec_time_s: float
+    comm_time_s: float
+    priority: float
+
+
+def priority(task: Task, comm_time_s: float, eps: float) -> float:
+    """P(t_i) = C(t_i) / (Comm(t_i) + eps)  (eq. 10), with Comm expressed in
+    seconds so the ratio is bandwidth-aware (route-awareness)."""
+    return task.gflops / (comm_time_s + eps)
+
+
+def exec_time(task: Task, cap: Capability) -> float:
+    return task.gflops / max(cap.gflop_budget * 1e3, 1e-9)  # budget is per-ms-ish
+
+
+def comm_time(task: Task, net_gbps: float, compression: float = 1.0) -> float:
+    return task.comm_bytes * compression * 8.0 / max(net_gbps * 1e9, 1e-9)
+
+
+def schedule(
+    tasks: Sequence[Task],
+    end_cap: Capability,
+    cloud_cap: Capability,
+    cfg: SchedulerConfig,
+    *,
+    end_load: float = 0.0,
+    cloud_load: float = 0.0,
+    compression: float = 1.0,
+) -> Tuple[List[Placement], Dict[str, float]]:
+    """Greedy route-aware placement (eq. 11).
+
+    Returns placements plus the achieved objective value (eq. 9).
+    """
+    placements: List[Placement] = []
+    obj = 0.0
+    e_load, c_load = end_load, cloud_load
+    # Highest-priority first: those gain most from staying local.
+    ranked = sorted(
+        tasks,
+        key=lambda t: -priority(t, comm_time(t, end_cap.net_gbps, compression), cfg.eps),
+    )
+    for t in ranked:
+        ct = comm_time(t, end_cap.net_gbps, compression)
+        p = priority(t, ct, cfg.eps)
+        local_exec = exec_time(t, end_cap)
+        remote_exec = exec_time(t, cloud_cap)
+        if e_load + t.gflops <= cfg.t_end and p >= cfg.beta:
+            loc, ex, cm = "end", local_exec, 0.0
+            e_load += t.gflops
+        else:
+            loc, ex, cm = "cloud", remote_exec, ct
+            c_load += t.gflops
+        placements.append(Placement(t, loc, ex, cm, p))
+        obj += cfg.alpha * ex + (1.0 - cfg.alpha) * cm
+    stats = {
+        "objective": obj,
+        "end_load": e_load,
+        "cloud_load": c_load,
+        "n_end": sum(1 for p in placements if p.location == "end"),
+        "n_cloud": sum(1 for p in placements if p.location == "cloud"),
+    }
+    return placements, stats
+
+
+# ---------------------------------------------------------------------------
+# Pipeline split planning (layer ranges -> tiers / pods)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    """Where each layer runs and what crosses the boundary."""
+
+    split_layer: int  # layers [0, split) on end/stage-0, rest on cloud
+    compress_boundary: bool
+    est_end_time_s: float
+    est_cloud_time_s: float
+    est_comm_time_s: float
+
+    @property
+    def est_step_time_s(self) -> float:
+        # Steady-state pipelined throughput is bounded by the slowest stage.
+        return max(self.est_end_time_s, self.est_cloud_time_s, self.est_comm_time_s)
+
+    @property
+    def est_latency_s(self) -> float:
+        return self.est_end_time_s + self.est_comm_time_s + self.est_cloud_time_s
+
+
+def plan_pipeline_split(
+    layer_gflops: Sequence[float],
+    boundary_bytes: float,
+    end_cap: Capability,
+    cloud_cap: Capability,
+    *,
+    compression_ratio: float = 1.0,
+    alpha: float = 0.5,
+    end_servers: int = 1,
+    cloud_servers: int = 1,
+) -> PipelinePlan:
+    """Pick the layer split (and whether to compress the boundary) that
+    minimizes the eq. 9 objective in its pipeline reading: weighted sum of
+    bottleneck stage time (throughput) and boundary comm (latency).
+
+    Fleet-aware extension (beyond paper): with N end devices sharing one
+    cloud, the throughput bottleneck compares *per-fleet* stage rates
+    (end_t / end_servers vs cloud_t / cloud_servers) while latency still
+    uses per-request times.
+    """
+    n = len(layer_gflops)
+    best: Optional[PipelinePlan] = None
+    best_score = None
+    for compress in (False, True):
+        ratio = compression_ratio if compress else 1.0
+        ct = boundary_bytes * ratio * 8.0 / max(end_cap.net_gbps * 1e9, 1e-9)
+        for split in range(0, n + 1):
+            end_t = sum(layer_gflops[:split]) / max(end_cap.gflop_budget * 1e3, 1e-9)
+            cloud_t = sum(layer_gflops[split:]) / max(
+                cloud_cap.gflop_budget * 1e3, 1e-9
+            )
+            comm = ct if 0 < split < n else 0.0
+            plan = PipelinePlan(split, compress and 0 < split < n, end_t, cloud_t, comm)
+            bottleneck = max(
+                end_t / max(end_servers, 1),
+                cloud_t / max(cloud_servers, 1),
+                comm,
+            )
+            score = alpha * bottleneck + (1 - alpha) * (comm + 0.01 * plan.est_latency_s)
+            if best is None or score < best_score:
+                best, best_score = plan, score
+    assert best is not None
+    return best

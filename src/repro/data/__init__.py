@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DataConfig,
+    make_dataset,
+    batches,
+)
+
+__all__ = ["DataConfig", "make_dataset", "batches"]

@@ -1,0 +1,3 @@
+from repro.distributed.topology import Topology, single_device_topology
+
+__all__ = ["Topology", "single_device_topology"]

@@ -1,0 +1,120 @@
+"""Fault tolerance & elasticity.
+
+At thousands of nodes, the failure model is: a step either completes
+everywhere or the job is restarted from the last checkpoint on a possibly
+*smaller* mesh.  This module provides the pieces the trainer composes:
+
+  * ``StepGuard``        — detects bad steps (NaN/inf loss, runaway grad
+                           norm, injected failures) so the trainer can
+                           restore-and-continue instead of corrupting state.
+  * ``FailureInjector``  — deterministic chaos for tests (fail step k).
+  * ``elastic_topology`` — rebuild a (possibly smaller) mesh from surviving
+                           devices, preserving the model axis (experts must
+                           keep their EP layout; data parallelism absorbs
+                           the loss).
+  * ``StragglerMitigator`` — per-step timing watchdog: flags slow steps and
+                           recommends action (re-shard / drop a data shard),
+                           the DP-level analogue of the paper's route-aware
+                           re-allocation.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.distributed.topology import Topology
+
+
+@dataclass
+class FailureInjector:
+    """Deterministically fail specific steps (tests / drills).  One-shot:
+    after a restore replays past the step, it does not re-fire (the 'node'
+    was replaced)."""
+
+    fail_steps: Sequence[int] = ()
+    kind: str = "nan_loss"  # nan_loss | exception
+    _fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int, loss: float) -> float:
+        if step in self.fail_steps and step not in self._fired:
+            self._fired.add(step)
+            if self.kind == "exception":
+                raise RuntimeError(f"injected device failure at step {step}")
+            return float("nan")
+        return loss
+
+
+@dataclass
+class StepGuard:
+    max_grad_norm: float = 1e4
+    consecutive_bad_limit: int = 3
+    bad_count: int = 0
+
+    def check(self, loss: float, grad_norm: Optional[float] = None) -> bool:
+        """True = step is good; False = restore from checkpoint."""
+        bad = not math.isfinite(loss)
+        if grad_norm is not None and (
+            not math.isfinite(grad_norm) or grad_norm > self.max_grad_norm
+        ):
+            bad = True
+        if bad:
+            self.bad_count += 1
+            if self.bad_count > self.consecutive_bad_limit:
+                raise RuntimeError(
+                    f"{self.bad_count} consecutive bad steps — refusing to "
+                    "continue (checkpoint likely also bad)"
+                )
+            return False
+        self.bad_count = 0
+        return True
+
+
+def elastic_topology(
+    n_available: int,
+    *,
+    model_axis_size: int,
+    axis_names=("data", "model"),
+) -> Topology:
+    """Largest mesh with the model axis preserved and data parallelism
+    shrunk to what survives.  Experts/TP shards must stay intact (their
+    weights are sharded along 'model'); losing nodes costs DP width only."""
+    if n_available < model_axis_size:
+        raise RuntimeError(
+            f"cannot keep model axis: {n_available} devices < "
+            f"{model_axis_size}-way model parallelism"
+        )
+    dp = n_available // model_axis_size
+    devices = np.array(jax.devices()[: dp * model_axis_size]).reshape(
+        dp, model_axis_size
+    )
+    mesh = jax.sharding.Mesh(devices, axis_names)
+    return Topology(mesh=mesh, data_axes=(axis_names[0],), model_axis=axis_names[1])
+
+
+@dataclass
+class StragglerMitigator:
+    """Rolling step-time watchdog.  On real fleets the signal feeds the
+    scheduler (re-shard around the slow host); here it records decisions so
+    tests can assert on them."""
+
+    window: int = 20
+    threshold: float = 2.0  # step counts as straggling at 2x rolling median
+    times: List[float] = field(default_factory=list)
+    flagged: List[int] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> Optional[str]:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 5:
+            med = sorted(self.times)[len(self.times) // 2]
+            if dt > self.threshold * med:
+                self.flagged.append(step)
+                return "reshard_recommended"
+        return None

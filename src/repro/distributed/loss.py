@@ -1,0 +1,88 @@
+"""Vocab-sharded cross-entropy.
+
+The lm_head output dim is sharded over the model axis, so logits arrive as
+[B, S, V/tp] per shard.  Computing CE naively (take_along_axis over a
+sharded dim) would force XLA to all-gather [B, S, V] — catastrophic at
+vocab 150k+.  Instead a shard_map computes local max / sum-exp / label hit
+and combines with psum: bytes on the wire are O(B*S), not O(B*S*V).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.topology import Topology
+from repro.models.layers import cross_entropy_loss
+
+
+def _sharded_ce_body(
+    logits: jax.Array,  # [b, S, V_loc]
+    labels: jax.Array,  # [b, S] (global vocab ids)
+    topo: Topology,
+    z_weight: float,
+):
+    axis = topo.model_axis
+    V_loc = logits.shape[-1]
+    me = jax.lax.axis_index(axis)
+    lo = me * V_loc
+    logits = logits.astype(jnp.float32)
+
+    # The max subtraction is numerical-stability only; stop_gradient keeps
+    # pmax out of the backward pass (it has no AD rule and needs none here).
+    local_max = jax.lax.stop_gradient(logits.max(-1))
+    gmax = jax.lax.pmax(local_max, axis)  # [b, S]
+    sumexp = jnp.sum(jnp.exp(logits - gmax[..., None]), -1)
+    gsum = jax.lax.psum(sumexp, axis)
+    lse = gmax + jnp.log(gsum)
+
+    mask = labels >= 0
+    lab = jnp.clip(labels - lo, 0, V_loc - 1)
+    hit = (labels >= lo) & (labels < lo + V_loc) & mask
+    ll_local = jnp.where(
+        hit, jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0], 0.0
+    )
+    ll = jax.lax.psum(ll_local, axis)  # [b, S]
+
+    maskf = mask.astype(jnp.float32)
+    denom_local = maskf.sum()
+    nll = ((lse - ll) * maskf).sum()
+    z = (jnp.square(lse) * maskf).sum()
+    # reduce over data axes too so every device returns the global scalar
+    names = tuple(topo.data_axes) + (axis,)
+    tot_nll = jax.lax.psum(nll, names[:-1]) if topo.data_axes else nll
+    tot_z = jax.lax.psum(z, names[:-1]) if topo.data_axes else z
+    tot_den = jax.lax.psum(denom_local, names[:-1]) if topo.data_axes else denom_local
+    denom = jnp.maximum(tot_den, 1.0)
+    loss = tot_nll / denom + z_weight * tot_z / denom
+    return loss, tot_nll / denom, tot_den
+
+
+def sharded_cross_entropy(
+    logits: jax.Array,  # [B, S, V] (V sharded over model under pjit)
+    labels: jax.Array,  # [B, S]
+    topo: Optional[Topology],
+    z_weight: float = 1e-4,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if topo is None or topo.mesh is None or topo.model_axis is None:
+        return cross_entropy_loss(logits, labels, z_weight)
+    from repro.distributed.sharding import fit_batch_axes
+
+    B = labels.shape[0]
+    # partial-prefix batch sharding: a global batch smaller than the full dp
+    # degree must still shard (full-batch logits per device would be tens of
+    # GiB at 150k vocab)
+    bspec = fit_batch_axes(B, topo)
+    fn = jax.shard_map(
+        functools.partial(_sharded_ce_body, topo=topo, z_weight=z_weight),
+        mesh=topo.mesh,
+        in_specs=(P(bspec, None, topo.model_axis), P(bspec, None)),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    loss, ce, tokens = fn(logits, labels)
+    return loss, {"ce_loss": ce, "z_loss": loss - ce, "tokens": tokens}

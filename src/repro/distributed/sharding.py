@@ -1,0 +1,231 @@
+"""Partition rules: parameter / optimizer-state / batch / cache shardings.
+
+Strategy (v5e-oriented):
+  * TP/EP on the ``model`` axis: attention heads, FFN hidden, expert dim.
+  * FSDP on the data axes: every large matrix additionally shards one
+    non-model dim across ("pod","data"), so parameters AND optimizer state
+    scale down with the full device count (ZeRO-3 semantics; XLA inserts
+    the per-layer all-gathers inside the scan).
+  * Divisibility-aware: any proposed axis that doesn't divide the dim is
+    dropped (e.g. whisper's 8 heads on a 16-way model axis -> replicated
+    heads, FSDP still applies on d_model).
+
+Rules are matched on the parameter path (e.g. "blocks/pos0/attn/wq").
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.topology import Topology
+
+
+def _axis_size(topo: Topology, axes) -> int:
+    if axes is None or topo.mesh is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= topo.mesh.shape[a]
+    return n
+
+
+def _fit(dim: int, axes, topo: Topology):
+    """Return the largest prefix of ``axes`` that evenly divides dim (a
+    3840-wide dim still FSDP-shards over 32 of 512 devices instead of
+    replicating), else None."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if dim % _axis_size(topo, axes) == 0 else None
+    t = tuple(axes)
+    while t:
+        if dim % _axis_size(topo, t) == 0:
+            return t
+        t = t[:-1]
+    return None
+
+
+def param_partition_spec(path: str, shape: Tuple[int, ...], topo: Topology) -> P:
+    """Rule table.  ``path`` uses '/' separators; leading 'blocks/posN' etc."""
+    if topo.mesh is None:
+        return P()
+    dp = tuple(topo.data_axes) if topo.fsdp else None
+    tp = topo.model_axis
+    name = path.split("/")[-1]
+    in_moe = "/moe/" in path or path.endswith("moe")
+    in_attn = "/attn/" in path or "/cross/" in path
+
+    def spec(*entries):
+        fitted = [
+            _fit(shape[i], ax, topo) if ax is not None else None
+            for i, ax in enumerate(entries)
+        ]
+        return P(*fitted)
+
+    nd = len(shape)
+    if name == "embed":  # [V, d]
+        return spec(tp, dp)
+    if name == "lm_head":  # [d, V]
+        return spec(dp, tp)
+    # Under sequence-parallel attention, activations carry the model axis
+    # (S-sharded); non-expert weights must not (they'd force per-layer ARs).
+    wtp = None if topo.seq_parallel_attn else tp
+    if name in ("wq", "wk", "wv") and in_attn:  # [R, d, H|KV, hd]
+        return spec(None, dp, wtp, None) if nd == 4 else spec(dp, wtp, None)
+    if name == "wo" and in_attn:  # [R, H, hd, d]
+        return spec(None, wtp, None, dp) if nd == 4 else spec(wtp, None, dp)
+    if name in ("wi", "wg") and in_moe and nd == 4:  # [R, E, d, f]
+        return spec(None, tp, dp, None)
+    if name == "wo" and in_moe and nd == 4:  # [R, E, f, d]
+        return spec(None, tp, None, dp)
+    if name in ("wi", "wg"):  # dense/shared FFN [R, d, f] or [d, f]
+        return spec(None, dp, wtp) if nd == 3 else spec(dp, wtp)
+    if name == "wo":  # [R, f, d] or [f, d]
+        return spec(None, wtp, dp) if nd == 3 else spec(wtp, dp)
+    if name == "in_proj":  # [R, d, proj]
+        return spec(None, dp, wtp)
+    if name == "out_proj":  # [R, d_in, d]
+        return spec(None, wtp, dp)
+    # SSM split projections (head-sharded TP; see models/ssm.py)
+    if name in ("w_z", "w_x", "w_dt"):  # [R, d, d_in|H]
+        return spec(None, dp, wtp)
+    if name == "w_bc":  # [R, d, 2gn] — shared across heads
+        return spec(None, dp, None)
+    if name == "conv_x":  # [R, W, d_in]
+        return spec(None, None, wtp)
+    if name == "conv_x_b":  # [R, d_in]
+        return spec(None, wtp)
+    if name in ("A_log", "D", "dt_bias") and nd == 2:  # [R, H]
+        return spec(None, wtp)
+    if name == "norm_w" and nd == 2:  # [R, d_in]
+        return spec(None, wtp)
+    if name == "w_local" and nd == 4:  # gate [R, K, d, Mk]
+        return spec(None, None, dp, None)
+    # everything else (norms, biases, conv, A_log, dt_bias, gate globals,
+    # codecs) is small: replicate.
+    return P()
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, topo: Topology):
+    """Pytree of PartitionSpec matching a params (or ShapeDtypeStruct) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: param_partition_spec(_path_str(kp), leaf.shape, topo),
+        params_shape,
+    )
+
+
+def opt_state_specs(opt_shape: Any, params_shape: Any, topo: Topology):
+    """Optimizer-state shardings: adam m/v mirror the param spec; adafactor
+    factored stats drop the reduced dim; scalars replicate."""
+    pspecs = param_specs(params_shape, topo)
+
+    def resolve(kp, leaf):
+        path = _path_str(kp)
+        if leaf.ndim == 0:
+            return P()
+        m = re.match(r"^(m|v|stats)/(.*?)(/vr|/vc|/v)?$", path)
+        if not m:
+            return P()
+        sub = m.group(2)
+        node = pspecs
+        for part in sub.split("/"):
+            if isinstance(node, dict) and part in node:
+                node = node[part]
+            else:
+                return P()
+        base = node if isinstance(node, P) else P()
+        suffix = m.group(3)
+        if suffix in ("/vr", "/vc"):
+            # pad the spec out to the parent param's rank (leaf.ndim + 1),
+            # then drop the reduced dim (vr: last; vc: second-to-last).
+            ent = tuple(base) + (None,) * (leaf.ndim + 1 - len(tuple(base)))
+            ent = ent[:-1] if suffix == "/vr" else ent[:-2] + ent[-1:]
+            return P(*ent)
+        return base
+
+    return jax.tree_util.tree_map_with_path(resolve, opt_shape)
+
+
+def fit_batch_axes(B: int, topo: Topology):
+    """Largest prefix of the data axes that evenly divides B (a batch smaller
+    than the full dp degree still shards over part of the mesh instead of
+    replicating the compute)."""
+    if topo.mesh is None:
+        return None
+    axes = tuple(topo.data_axes)
+    while axes:
+        if B % _axis_size(topo, axes) == 0:
+            return axes
+        axes = axes[:-1]
+    return None
+
+
+def batch_specs(batch_shape: Any, topo: Topology):
+    """Input-batch shardings: batch dim over (a prefix of) the data axes;
+    decode caches shard sequence over model (and data when batch can't)."""
+    if topo.mesh is None:
+        return jax.tree.map(lambda _: P(), batch_shape)
+    dp = tuple(topo.data_axes)
+    tp = topo.model_axis
+    dp_n = _axis_size(topo, dp)
+
+    def resolve(kp, leaf):
+        path = _path_str(kp)
+        name = path.split("/")[-1]
+        shape = leaf.shape
+        if "cache" in path or name in ("k", "v", "xk", "xv", "ssm", "conv_x",
+                                       "conv_bc"):
+            b_ok = shape[1] % dp_n == 0 if len(shape) > 1 else False
+            all_axes = dp + ((tp,) if tp else ())
+            if name in ("k", "v", "xk", "xv"):  # [R, B, W, KV, hd]
+                seq_ax = (
+                    _fit(shape[2], tp, topo)
+                    if b_ok
+                    else _fit(shape[2], all_axes, topo) or _fit(shape[2], tp, topo)
+                )
+                return P(None, dp if b_ok else None, seq_ax, None, None)
+            if name == "ssm":  # [R, B, H, P, N]
+                return P(None, dp if b_ok else None, _fit(shape[2], tp, topo), None, None)
+            if name in ("conv_x", "conv_bc"):  # [R, B, W-1, ch]
+                ch_ax = _fit(shape[3], tp, topo) if name == "conv_x" else None
+                return P(None, dp if b_ok else None, None, ch_ax)
+            if name == "lengths":
+                return P(_fit(shape[0], dp, topo)) if shape else P()
+        if name == "lengths":
+            return P(_fit(shape[0], dp, topo)) if len(shape) == 1 else P()
+        if len(shape) >= 1:
+            bx = fit_batch_axes(shape[0], topo)
+            if bx:
+                return P(bx, *([None] * (len(shape) - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(resolve, batch_shape)
+
+
+def named(tree_specs, topo: Topology):
+    if topo.mesh is None:
+        return tree_specs
+    return jax.tree.map(
+        lambda s: NamedSharding(topo.mesh, s),
+        tree_specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,71 @@
+"""Mesh topology descriptor threaded through model code.
+
+Model code never touches ``jax.devices()`` directly; it receives a
+:class:`Topology` that says which mesh axes exist and how logical roles
+(data/expert/tensor/pipeline) map onto them.  ``topology=None`` (or
+``ep_size == 1``) selects the single-device code paths, which is what unit
+tests exercise; the dry-run and multi-device tests build real meshes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class Topology:
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)  # batch-sharding axes ("pod","data")
+    model_axis: Optional[str] = "model"  # TP / EP axis
+    pipeline_axis: Optional[str] = None  # PP over pods, if enabled
+    fsdp: bool = True  # shard params/opt over the data axes (ZeRO-3)
+    # Sequence-parallel attention: the residual stream is S-sharded over the
+    # model axis; attention gathers only the (small, GQA) K/V heads and the
+    # MoE dispatch consumes pre-sharded tokens.  Valid for attention-pure
+    # stacks (no SSM layers — their scan crosses the shard boundary).
+    seq_parallel_attn: bool = False
+    # Per-EP-shard hardware capability mask support (HL-GGN eq. 2-4): when a
+    # heterogeneous fleet is declared, shard i may only evaluate experts whose
+    # complexity fits its capability; see repro.core.hardware.
+    heterogeneous: bool = False
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        out = 1
+        for a in self.data_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    @property
+    def ep_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def tp_size(self) -> int:
+        return self.ep_size
+
+    @property
+    def pp_size(self) -> int:
+        if self.mesh is None or self.pipeline_axis is None:
+            return 1
+        return self.mesh.shape[self.pipeline_axis]
+
+    @property
+    def num_devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.size
+
+    @property
+    def use_shard_map_moe(self) -> bool:
+        return self.mesh is not None and self.ep_size > 1
+
+
+def single_device_topology() -> Topology:
+    return Topology(mesh=None)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the EC2MoE hot spots.
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True on CPU for validation)
+  ref.py    — pure-jnp oracle the tests assert against
+
+Kernels:
+  group_gate      — fused HL-GGN two-stage gate (eq. 5-7): one VMEM pass
+                    produces combined expert probabilities per token block.
+  lowrank         — eq. 8 encoder/decoder: fused X->Z->X_hat roundtrip with
+                    on-chip reconstruction-error partial sums.
+  expert_mlp      — capacity-buffered batched expert FFN (the post-dispatch
+                    compute): grid (expert, token-block, ff-tile) with fp32
+                    VMEM accumulation.
+  flash_attention — causal GQA flash attention forward for prefill.
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.expert_mlp.ops import expert_mlp
+
+__all__ = ["expert_mlp"]

@@ -1,0 +1,47 @@
+"""Public wrapper for the batched expert FFN kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.expert_mlp.kernel import expert_mlp_pallas
+
+
+def _pick_tiles(C: int, d: int, f: int):
+    bc, bf = 256, 512
+    # shrink until x + 2 gate tiles + wo tile + acc fit ~12 MiB fp32-equiv
+    def vmem(bc, bf):
+        return (bc * d * 2 + 2 * d * bf * 2 + bf * d * 2 + bc * bf * 4 + bc * d * 4)
+
+    while vmem(bc, bf) > 12 * 2**20 and bf > 128:
+        bf //= 2
+    while vmem(bc, bf) > 12 * 2**20 and bc > 32:
+        bc //= 2
+    while C % bc:
+        bc //= 2
+    while f % bf:
+        bf //= 2
+    return max(bc, 1), max(bf, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "interpret"))
+def expert_mlp(
+    x: jax.Array,  # [E, C, d]
+    wi: jax.Array,  # [E, d, f]
+    wg: Optional[jax.Array],  # [E, d, f] | None
+    wo: jax.Array,  # [E, f, d]
+    *,
+    act: str = "silu",
+    interpret: bool = True,
+) -> jax.Array:
+    E, C, d = x.shape
+    f = wi.shape[2]
+    bc, bf = _pick_tiles(C, d, f)
+    y = expert_mlp_pallas(
+        x, wi, wg, wo, act=act, block_c=bc, block_f=bf, interpret=interpret
+    )
+    return y.astype(x.dtype)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the capacity-buffered batched expert FFN."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def expert_mlp_ref(
+    x: jax.Array,  # [E, C, d] per-expert capacity buffers
+    wi: jax.Array,  # [E, d, f]
+    wg: Optional[jax.Array],  # [E, d, f] or None
+    wo: jax.Array,  # [E, f, d]
+    act: str = "silu",
+) -> jax.Array:
+    a = ACTS[act]
+    h = jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), wi.astype(jnp.float32)
+    )
+    if wg is not None:
+        h = a(h) * jnp.einsum(
+            "ecd,edf->ecf", x.astype(jnp.float32), wg.astype(jnp.float32)
+        )
+    else:
+        h = a(h)
+    y = jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32))
+    return y.astype(x.dtype)

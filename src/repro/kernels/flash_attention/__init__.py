@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import flash_attention_fwd
+
+__all__ = ["flash_attention_fwd"]

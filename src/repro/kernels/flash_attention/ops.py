@@ -1,0 +1,42 @@
+"""Public wrapper for the flash-attention forward kernel.
+
+Layout contract: models use [B, S, H, hd]; the kernel wants [B, H, S, hd]
+(head-major so each (b, h) streams contiguous sequence blocks).  The
+wrapper transposes at the boundary — XLA fuses these with the surrounding
+projections on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv", "interpret")
+)
+def flash_attention_fwd(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    o = flash_attention_pallas(
+        qt, kt, vt,
+        causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return jnp.transpose(o, (0, 2, 1, 3))

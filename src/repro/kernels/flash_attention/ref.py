@@ -1,0 +1,3 @@
+"""Oracle: the O(S^2)-memory reference attention (shared with models)."""
+
+from repro.models.attention import reference_attention  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.kernels.group_gate.ops import group_gate_probs
+
+__all__ = ["group_gate_probs"]

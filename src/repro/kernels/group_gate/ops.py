@@ -1,0 +1,59 @@
+"""Public wrapper for the fused group-gate kernel.
+
+Accepts the same parameter pytree as ``repro.core.gating`` ({"w_local":
+[K, d, Mk], "b_local": [K, Mk], "w_global": [d, K], "b_global": [K]}),
+re-lays-out the local gates into one column-grouped [d, E] matrix (done
+once under jit; XLA folds it), and dispatches to the Pallas kernel —
+interpreted on CPU, compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.group_gate.kernel import group_gate_pallas
+
+NEG_INF = -1e30
+
+
+def _pick_block(T: int, d: int, E: int) -> int:
+    # keep x-block + weights + outputs under ~8 MiB fp32
+    budget = 8 * 2**20 / 4 - d * (E + 16)
+    bt = max(8, int(budget // max(d + E, 1)))
+    bt = 1 << (bt.bit_length() - 1)  # floor pow2
+    bt = min(bt, 512)
+    while T % bt:
+        bt //= 2
+    return max(bt, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "interpret"))
+def group_gate_probs(
+    params: Dict,
+    x: jax.Array,  # [T, d]
+    *,
+    num_groups: int,
+    expert_mask: Optional[jax.Array] = None,  # bool [E]
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused eq. 5-7.  Returns (probs [T, E], p_group [T, K])."""
+    wl = params["w_local"]  # [K, d, Mk]
+    K, d, Mk = wl.shape
+    E = K * Mk
+    w_local = jnp.transpose(wl, (1, 0, 2)).reshape(d, E)
+    b_local = params["b_local"].reshape(E)
+    mask = (
+        jnp.where(expert_mask, 0.0, NEG_INF).astype(jnp.float32)
+        if expert_mask is not None
+        else jnp.zeros((E,), jnp.float32)
+    )
+    bt = _pick_block(x.shape[0], d, E)
+    probs, p_group = group_gate_pallas(
+        x, w_local, b_local, params["w_global"], params["b_global"], mask,
+        num_groups=num_groups, block_tokens=bt, interpret=interpret,
+    )
+    return probs, p_group

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused HL-GGN group gate (paper eq. 5-7)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def group_gate_ref(
+    x: jax.Array,  # [T, d]
+    w_local: jax.Array,  # [d, E] column-grouped: expert e = group e//Mk
+    b_local: jax.Array,  # [E]
+    w_global: jax.Array,  # [d, K]
+    b_global: jax.Array,  # [K]
+    mask: jax.Array,  # [E] additive fp32 (0 = allowed, -inf = excluded)
+    num_groups: int,
+):
+    T, d = x.shape
+    E = w_local.shape[1]
+    K = num_groups
+    Mk = E // K
+    xf = x.astype(jnp.float32)
+    local = xf @ w_local.astype(jnp.float32) + b_local.astype(jnp.float32)
+    local = local + mask.astype(jnp.float32)
+    p_local = jax.nn.softmax(local.reshape(T, K, Mk), axis=-1)  # eq. 5
+    glob = xf @ w_global.astype(jnp.float32) + b_global.astype(jnp.float32)
+    group_dead = (mask.reshape(K, Mk) <= NEG_INF / 2).all(-1)
+    glob = jnp.where(group_dead[None], NEG_INF, glob)
+    p_group = jax.nn.softmax(glob, axis=-1)  # eq. 6
+    probs = (p_group[:, :, None] * p_local).reshape(T, E)  # eq. 7
+    return probs, p_group

@@ -1,0 +1,3 @@
+from repro.kernels.lowrank.ops import lowrank_encode, lowrank_decode, lowrank_roundtrip
+
+__all__ = ["lowrank_encode", "lowrank_decode", "lowrank_roundtrip"]

@@ -1,0 +1,25 @@
+"""Public wrappers for the low-rank codec kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lowrank import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lowrank_encode(x, enc, *, interpret: bool = True):
+    return K.encode_pallas(x, enc, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lowrank_decode(z, dec, *, interpret: bool = True):
+    return K.decode_pallas(z, dec, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lowrank_roundtrip(x, enc, dec, *, interpret: bool = True):
+    """Fused eq. 8 path: returns (x_hat, sum-squared reconstruction error)."""
+    return K.roundtrip_pallas(x, enc, dec, interpret=interpret)

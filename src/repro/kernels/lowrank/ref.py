@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the low-rank codec kernels (paper eq. 8, 1-D form)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_ref(x: jax.Array, enc: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) @ enc.astype(jnp.float32)).astype(x.dtype)
+
+
+def decode_ref(z: jax.Array, dec: jax.Array) -> jax.Array:
+    return (z.astype(jnp.float32) @ dec.astype(jnp.float32)).astype(z.dtype)
+
+
+def roundtrip_ref(x: jax.Array, enc: jax.Array, dec: jax.Array):
+    """Returns (x_hat, sum of squared reconstruction error)."""
+    z = x.astype(jnp.float32) @ enc.astype(jnp.float32)
+    x_hat = z @ dec.astype(jnp.float32)
+    err = jnp.sum(jnp.square(x.astype(jnp.float32) - x_hat))
+    return x_hat.astype(x.dtype), err

@@ -1,0 +1,332 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before any other import touches jax.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, List, Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ASSIGNED_ARCHS,
+    SHAPES,
+    get_config,
+    shape_applicable,
+)
+from repro.launch.mesh import make_production_mesh, make_topology  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.models.model import build_model, input_specs  # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# Per-device wire-bytes multiplier for a ring/N-group collective of size n
+# applied to the parsed buffer size b:
+#   all-gather (b = output): (n-1)/n        reduce-scatter (b = input): (n-1)/n
+#   all-reduce (b = buffer): 2 (n-1)/n       all-to-all (b = buffer): (n-1)/n
+#   collective-permute: 1
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its op lines (ENTRY included as 'ENTRY')."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(%[\w.\-]+|ENTRY\s+%?[\w.\-]+)\s*\(.*\{\s*$", s)
+        if m:
+            name = m.group(1)
+            cur = "ENTRY" if name.startswith("ENTRY") else name
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Execution count of each computation, accounting for while-loop trip
+    counts (XLA's cost_analysis counts loop bodies once; so would a naive
+    text scan).  Trip count = the s32 constant in the loop condition."""
+    # call edges: computation -> [(callee, multiplier)]
+    edges: Dict[str, List] = {c: [] for c in comps}
+    const_re = re.compile(r"constant\((\d+)\)")
+    for cname, lines in comps.items():
+        for ls in lines:
+            mw = re.search(r"while\(.*condition=(%[\w.\-]+), body=(%[\w.\-]+)", ls)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                trip = 1
+                for cl in comps.get(cond, []):
+                    for c in const_re.findall(cl):
+                        trip = max(trip, int(c))
+                edges[cname].append((body, float(trip)))
+                edges[cname].append((cond, float(trip) + 1))
+                continue
+            for callee in re.findall(r"(?:calls|to_apply|body|condition|branch_computations)=\{?(%[\w.\-]+)", ls):
+                if callee in comps:
+                    edges[cname].append((callee, 1.0))
+
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult["ENTRY"] = 1.0
+    # propagate in topological-ish order (iterate to fixpoint; DAG, small)
+    for _ in range(len(comps)):
+        changed = False
+        for cname, outs in edges.items():
+            if mult.get(cname, 0.0) <= 0:
+                continue
+            for callee, k in outs:
+                want = mult[cname] * k
+                if mult.get(callee, 0.0) < want:
+                    mult[callee] = want
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def parse_collectives(hlo_text: str, default_group: int,
+                      detail: bool = False) -> Dict:
+    """Sum estimated per-device wire bytes of every collective op, scaled by
+    the execution count of its enclosing computation (while-trip corrected)."""
+    comps = _split_computations(hlo_text)
+    mult = _computation_multipliers(comps)
+    items: List = []
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        w = mult.get(cname, 1.0)
+        if w <= 0:
+            continue
+        for ls in lines:
+            m = re.match(
+                r"%?[\w.\-]+ = ((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)) ([a-z\-]+)",
+                ls,
+            )
+            if not m:
+                continue
+            kind = m.group(2)
+            if kind.endswith("-start"):
+                kind = kind[: -len("-start")]
+            if kind not in _COLLECTIVES:
+                continue
+            tstr = m.group(1)
+            if tstr.startswith("("):  # tuple result: sum elements
+                b = sum(
+                    _shape_bytes(t)
+                    for t in re.findall(r"[a-z0-9]+\[[0-9,]*\]", tstr)
+                )
+            else:
+                b = _shape_bytes(tstr)
+            n = _group_size(ls, default_group)
+            if n <= 1:
+                continue
+            frac = (n - 1) / n
+            if kind == "all-reduce":
+                wire = 2 * b * frac
+            elif kind == "collective-permute":
+                wire = b
+            else:
+                wire = b * frac
+            per_kind[kind] += wire * w
+            counts[kind] += w
+            if detail:
+                items.append((wire * w, kind, cname, w, b, ls[:160]))
+    total = sum(per_kind.values())
+    # XLA:CPU upcasts every bf16 dot/collective to f32 (no native bf16
+    # kernels); the TPU target keeps them bf16.  Report a bf16-equivalent
+    # number (f32 buffers halved) alongside the raw parse — the roofline
+    # uses the bf16-equivalent (see EXPERIMENTS.md §Roofline-methodology).
+    out = {
+        "bytes_by_kind": per_kind,
+        "counts": counts,
+        "total_wire_bytes": total,
+        "total_wire_bytes_bf16eq": total / 2.0,
+    }
+    if detail:
+        items.sort(reverse=True)
+        out["top_ops"] = [
+            {"wire_bytes": it[0], "kind": it[1], "comp": it[2], "mult": it[3],
+             "buf_bytes": it[4], "line": it[5]}
+            for it in items[:40]
+        ]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+    cfg = get_config(arch)
+    cell = next(s for s in SHAPES if s.name == shape_name)
+    ok, why = shape_applicable(cfg, cell)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mode": cell.mode,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = cfg.mesh_policy if cell.mode == "train" else cfg.serve_mesh_policy
+    if cell.mode != "train":
+        cfg = cfg.replace(param_dtype="bfloat16")  # serving weights are bf16
+    topo = make_topology(mesh, policy=policy)
+    model = build_model(cfg, topo)
+    specs = input_specs(cfg, cell)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if cell.mode == "train":
+            jitted, (params_sds, opt_sds) = steps_mod.jit_train_step(model, specs)
+            lowered = jitted.lower(params_sds, opt_sds, specs)
+        elif cell.mode == "prefill":
+            jitted, params_sds = steps_mod.jit_prefill_step(model, specs)
+            lowered = jitted.lower(params_sds, specs)
+        else:  # decode
+            jitted, params_sds = steps_mod.jit_decode_step(model, specs)
+            lowered = jitted.lower(params_sds, specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, default_group=16)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        devices=mesh.size,
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        collectives=coll,
+        memory={
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        },
+        param_count=cfg.param_count(),
+        active_param_count=cfg.active_param_count(),
+        global_batch=cell.global_batch,
+        seq_len=cell.seq_len,
+    )
+    if verbose:
+        mem = rec["memory"]["argument_bytes"]
+        print(
+            f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK "
+            f"flops/dev={rec['flops']:.3e} args/dev={(mem or 0)/2**30:.2f}GiB "
+            f"coll={coll['total_wire_bytes']/2**20:.1f}MiB "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = (
+        [s.name for s in SHAPES] if args.shape == "all" else args.shape.split(",")
+    )
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results: List[Dict] = []
+    if args.append and os.path.exists(args.out):
+        # keep prior successes/skips; retry error cells
+        results = [
+            r for r in json.load(open(args.out)) if r["status"] != "error"
+        ]
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single")
+                if key in done:
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": "multi" if mp else "single",
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[dryrun] {arch} x {shape} x {rec['mesh']}: "
+                          f"ERROR {rec['error']}", flush=True)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,76 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis
+extends data parallelism across DCN (or hosts pipeline stages when the
+PO-ECC pipeline planner is enabled — see repro.distributed.pipeline_pp).
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked at first jax init; the dry-run must set
+XLA_FLAGS before anything else).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.distributed.topology import Topology
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_topology(mesh=None, *, multi_pod: bool = False,
+                  policy: str = "tp") -> Topology:
+    """policy="tp": (pod, data) are batch axes, "model" is TP/EP.
+    policy="fsdp": every axis is a batch axis (pure ZeRO-3, no TP) — the
+    right choice for dense architectures small enough that sharded optimizer
+    state fits, since it eliminates all per-layer TP all-reduces."""
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names
+    if policy == "fsdp":
+        return Topology(mesh=mesh, data_axes=tuple(axes), model_axis=None)
+    if policy == "dp":
+        # pure data parallelism: params/optimizer replicated, grads
+        # all-reduced — right for models whose full state fits one chip.
+        return Topology(
+            mesh=mesh, data_axes=tuple(axes), model_axis=None, fsdp=False
+        )
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    if policy == "serve_tp":
+        # weights resident (model-sharded, NOT dp-sharded): no per-layer
+        # FSDP gathers at decode; right for serving models whose bf16
+        # weights fit at 1/tp per chip.
+        return Topology(
+            mesh=mesh, data_axes=data_axes, model_axis="model", fsdp=False
+        )
+    if policy == "seqp":
+        # model axis = EP for experts + sequence sharding for activations;
+        # attention/dense weights replicate over model (FSDP over data).
+        return Topology(
+            mesh=mesh, data_axes=data_axes, model_axis="model",
+            seq_parallel_attn=True,
+        )
+    if policy == "serve_seqp":
+        # seqp with weights resident (no FSDP): serving models whose bf16
+        # weights fit at 1/ep per chip.
+        return Topology(
+            mesh=mesh, data_axes=data_axes, model_axis="model",
+            seq_parallel_attn=True, fsdp=False,
+        )
+    return Topology(mesh=mesh, data_axes=data_axes, model_axis="model")
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (8 host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,10 @@
+"""Model substrate.  Import submodules directly (lazy to avoid import
+cycles with repro.core, which uses repro.models.layers)."""
+
+
+def __getattr__(name):
+    if name in ("build_model", "Model", "input_specs", "make_dummy_batch"):
+        from repro.models import model as _m
+
+        return getattr(_m, name)
+    raise AttributeError(name)

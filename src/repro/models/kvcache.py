@@ -1,0 +1,100 @@
+"""Decode caches.
+
+Per pattern-position caches are stacked along a leading ``block_repeat`` axis
+so the decode step can ``lax.scan`` over blocks.  Attention caches are ring
+buffers: slot ``p % W`` holds position ``p``, so a full-attention cache sized
+W behaves exactly like sliding-window attention with window W once it wraps
+(the serving engine sizes W = max_len + headroom; the decode dry-run cells
+size W = seq_len per the assignment).
+
+``lengths`` is per-slot (continuous batching: every request in the batch has
+its own offset).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssm_dims
+
+
+def attn_cache_len(cfg, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    """Allocate an empty decode cache pytree (zeros; also usable as a
+    ShapeDtypeStruct template via jax.eval_shape)."""
+    R = cfg.block_repeat
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    blocks: Dict[str, Dict] = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        if spec.kind == "attn":
+            W = attn_cache_len(cfg, max_len)
+            c = {
+                "k": jnp.zeros((R, batch, W, KV, hd), dtype),
+                "v": jnp.zeros((R, batch, W, KV, hd), dtype),
+            }
+            if spec.cross_attn:
+                c["xk"] = jnp.zeros((R, batch, cfg.encoder_seq_len, KV, hd), dtype)
+                c["xv"] = jnp.zeros((R, batch, cfg.encoder_seq_len, KV, hd), dtype)
+        else:
+            s = cfg.ssm
+            d_in, H, conv_ch = ssm_dims(cfg)
+            gn = s.n_groups * s.d_state
+            c = {
+                "conv_x": jnp.zeros((R, batch, s.d_conv - 1, d_in), dtype),
+                "conv_bc": jnp.zeros((R, batch, s.d_conv - 1, 2 * gn), dtype),
+                "ssm": jnp.zeros((R, batch, H, s.head_dim, s.d_state), jnp.float32),
+            }
+        blocks[f"pos{i}"] = c
+    return {
+        "blocks": blocks,
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def ring_key_positions(lengths: jax.Array, W: int) -> jax.Array:
+    """Position held by each ring slot AFTER the token at ``lengths`` (the
+    current query) has been written.  lengths: [B] -> [B, W]."""
+    s = jnp.arange(W)[None, :]
+    ln = lengths[:, None]
+    return ln - jnp.mod(ln - s, W)
+
+
+def ring_write(kcache: jax.Array, vcache: jax.Array, k, v, lengths):
+    """Write one new token's k/v ([B, 1, KV, hd]) at slot lengths % W."""
+    W = kcache.shape[1]
+    b = jnp.arange(kcache.shape[0])
+    slot = jnp.mod(lengths, W)
+    kcache = kcache.at[b, slot].set(k[:, 0].astype(kcache.dtype))
+    vcache = vcache.at[b, slot].set(v[:, 0].astype(vcache.dtype))
+    return kcache, vcache
+
+
+def prefill_write(kcache: jax.Array, vcache: jax.Array, k, v):
+    """Write a full prefix [B, S, KV, hd] into a fresh cache (ring layout).
+
+    If S > W only the last W tokens are kept; their slots are pos % W.
+    """
+    B, S = k.shape[0], k.shape[1]
+    W = kcache.shape[1]
+    if S >= W:
+        tail_k, tail_v = k[:, S - W :], v[:, S - W :]
+        pos = jnp.arange(S - W, S)
+        slot = jnp.mod(pos, W)
+        kcache = kcache.at[:, slot].set(tail_k.astype(kcache.dtype))
+        vcache = vcache.at[:, slot].set(tail_v.astype(vcache.dtype))
+    else:
+        kcache = jax.lax.dynamic_update_slice_in_dim(
+            kcache, k.astype(kcache.dtype), 0, axis=1
+        )
+        vcache = jax.lax.dynamic_update_slice_in_dim(
+            vcache, v.astype(vcache.dtype), 0, axis=1
+        )
+    return kcache, vcache

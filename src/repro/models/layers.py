@@ -1,0 +1,88 @@
+"""Basic layers: norms, dense FFNs, embeddings.  Pure-functional (dict
+params), so ``jax.eval_shape`` over ``init`` gives allocation-free param
+specs for the dry-run."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    stddev = scale / np.sqrt(max(shape[0], 1))
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_norm(d: int, dtype) -> jax.Array:
+    # Stored as a zero-centered scale (weight = 1 + w), which keeps
+    # initialization at exactly 1.0 and plays nicely with weight decay.
+    return jnp.zeros((d,), dtype)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> Dict:
+    ki, kg, ko = jax.random.split(key, 3)
+    p = {
+        "wi": truncated_normal_init(ki, (d_model, d_ff), dtype, 1.0),
+        "wo": truncated_normal_init(ko, (d_ff, d_model), dtype, 1.0),
+    }
+    if gated:
+        p["wg"] = truncated_normal_init(kg, (d_model, d_ff), dtype, 1.0)
+    return p
+
+
+def apply_mlp(params: Dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    """(Optionally gated) FFN.  x: [..., d_model]."""
+    a = ACTIVATIONS[act]
+    h = x @ params["wi"].astype(x.dtype)
+    if "wg" in params:
+        h = a(h) * (x @ params["wg"].astype(x.dtype))
+    else:
+        h = a(h)
+    return h @ params["wo"].astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return truncated_normal_init(key, (vocab, d_model), dtype, 1.0)
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, z_weight: float = 1e-4
+):
+    """Token-level CE with logsumexp z-regularization.
+
+    logits: [..., V] (any float dtype; reduced in fp32)
+    labels: [...] int32; positions with label < 0 are masked out.
+    Returns (mean_loss, metrics_dict).
+    """
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    z_loss = z_weight * jnp.sum(jnp.square(lse) * mask) / denom
+    return loss + z_loss, {
+        "ce_loss": loss,
+        "z_loss": z_loss,
+        "tokens": denom,
+    }

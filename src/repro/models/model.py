@@ -1,0 +1,179 @@
+"""Model facade: init / train_logits / prefill / decode_step + input_specs.
+
+``input_specs(cfg, cell)`` produces ShapeDtypeStruct stand-ins for every
+model input of an (architecture x shape) cell — the dry-run lowers against
+these, so no host memory is ever allocated for the full-size models.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.topology import Topology, single_device_topology
+from repro.models import attention as attn
+from repro.models import kvcache, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    topo: Topology = field(default_factory=single_device_topology)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, rng) -> Dict:
+        return transformer.init_params(rng, self.cfg)
+
+    # -- helpers ------------------------------------------------------------
+
+    def _angles(self, positions):
+        return attn.rope_angles(
+            positions, self.cfg.head_dim, self.cfg.rope_theta, self.cfg.mrope_sections
+        )
+
+    def _default_positions(self, B, S):
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if self.cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, S))
+        return pos
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        x = transformer.embed_inputs(
+            params, cfg, batch["tokens"], batch.get("patch_embeds")
+        )
+        B, S = x.shape[0], x.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = self._default_positions(B, S)
+        return x, self._angles(positions)
+
+    def _encoder_out(self, params, batch):
+        if not self.cfg.encoder_decoder:
+            return None
+        return transformer.apply_encoder(
+            params, batch["frame_embeds"], self.cfg, self.topo
+        )
+
+    # -- full-sequence forward (training) ------------------------------------
+
+    def train_logits(
+        self, params, batch: Dict, *, expert_mask=None, train: bool = True
+    ) -> Tuple[jax.Array, Dict]:
+        x, angles = self._embed(params, batch)
+        enc_out = self._encoder_out(params, batch)
+        x, aux, _ = transformer.apply_stack_full(
+            params, x, self.cfg, self.topo, angles,
+            causal=True, enc_out=enc_out, expert_mask=expert_mask, train=train,
+        )
+        return transformer.lm_logits(params, self.cfg, x), aux
+
+    # -- serving ------------------------------------------------------------
+
+    def prefill(
+        self, params, batch: Dict, *, max_len: int = 0, expert_mask=None
+    ) -> Tuple[jax.Array, Dict]:
+        """Returns (logits of the last position [B, V], cache)."""
+        cfg = self.cfg
+        x, angles = self._embed(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        max_len = max_len or S
+        enc_out = self._encoder_out(params, batch)
+        x, aux, cache_blocks = transformer.apply_stack_full(
+            params, x, cfg, self.topo, angles,
+            causal=True, enc_out=enc_out, expert_mask=expert_mask,
+            train=False, collect_cache=True, max_len=max_len,
+        )
+        logits = transformer.lm_logits(params, cfg, x[:, -1:])[:, 0]
+        cache = {
+            "blocks": cache_blocks,
+            "lengths": jnp.full((B,), S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(
+        self, params, tokens: jax.Array, cache: Dict, *, expert_mask=None
+    ) -> Tuple[jax.Array, Dict]:
+        """tokens: [B, 1] -> (logits [B, V], new cache)."""
+        cfg = self.cfg
+        lengths = cache["lengths"]
+        B = tokens.shape[0]
+        pos = lengths[:, None]  # current position of the new token
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, 1))
+        angles = self._angles(pos)
+        x = transformer.embed_inputs(params, cfg, tokens)
+        x, new_blocks, aux = transformer.apply_stack_decode(
+            params, x, cfg, self.topo, angles, cache["blocks"], lengths,
+            expert_mask=expert_mask,
+        )
+        logits = transformer.lm_logits(params, cfg, x)[:, 0]
+        return logits, {"blocks": new_blocks, "lengths": lengths + 1}
+
+
+def build_model(cfg: ModelConfig, topo: Optional[Topology] = None) -> Model:
+    return Model(cfg, topo or single_device_topology())
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins) and dummy batches (smoke tests)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    train/prefill: {"tokens", "labels"?, modality extras}
+    decode:        {"tokens" [B,1], "cache": <pytree of SDS>}
+    """
+    B, S = cell.global_batch, cell.seq_len
+    act = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if cell.mode in ("train", "prefill"):
+        S_text = S
+        if cfg.vision_patches:
+            P = cfg.vision_patches
+            S_text = S - P
+            specs["patch_embeds"] = _sds((B, P, cfg.d_model), act)
+            specs["positions"] = _sds((B, 3, S), jnp.int32)
+        specs["tokens"] = _sds((B, S_text), jnp.int32)
+        if cfg.encoder_decoder:
+            specs["frame_embeds"] = _sds((B, cfg.encoder_seq_len, cfg.d_model), act)
+        if cell.mode == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token against a cache of length S
+        specs["tokens"] = _sds((B, 1), jnp.int32)
+        specs["cache"] = jax.eval_shape(
+            lambda: kvcache.init_cache(cfg, B, S, act)
+        )
+    return specs
+
+
+def make_dummy_batch(cfg: ModelConfig, rng, batch: int, seq: int) -> Dict[str, Any]:
+    """Concrete random batch for smoke tests (reduced configs)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    act = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    S_text = seq
+    if cfg.vision_patches:
+        P = cfg.vision_patches
+        S_text = seq - P
+        out["patch_embeds"] = jax.random.normal(k3, (batch, P, cfg.d_model), act)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, None], (batch, 3, seq))
+        out["positions"] = pos.astype(jnp.int32)
+    out["tokens"] = jax.random.randint(k1, (batch, S_text), 0, cfg.vocab_size)
+    out["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)
+    if cfg.encoder_decoder:
+        out["frame_embeds"] = jax.random.normal(
+            k3, (batch, cfg.encoder_seq_len, cfg.d_model), act
+        )
+    return out

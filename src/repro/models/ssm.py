@@ -1,0 +1,456 @@
+"""Mamba-2 (SSD, state-space duality) layer.
+
+TPU adaptation (see DESIGN.md): the SSD *chunked* formulation turns the
+selective-scan recurrence into dense matmuls (MXU-friendly) plus one small
+associative scan over chunk states — the canonical TPU-native expression of
+Mamba.  Heads are processed ``head_block`` at a time so the [Q, Q, hb]
+intra-chunk decay buffer stays bounded regardless of head count (Jamba has
+256 SSM heads).
+
+Three entry points:
+  * ``ssd_chunked``      — full-sequence forward, returns final state (prefill/train)
+  * ``ssd_decode_step``  — single-token recurrent update (serving)
+  * ``ssd_reference``    — naive O(S) recurrent oracle for tests
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm, truncated_normal_init
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P] (pre-scaled inputs NOT applied; raw x)
+    dt: jax.Array,  # [B, S, H] (post-softplus)
+    A: jax.Array,  # [H] (negative)
+    Bm: jax.Array,  # [B, S, G, N]
+    Cm: jax.Array,  # [B, S, G, N]
+    *,
+    chunk_size: int,
+    head_block: int,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk_size, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    hb = min(head_block, H)
+    assert H % hb == 0, (H, hb)
+    nhb = H // hb
+    heads_per_group = H // G
+
+    a = (dt * A).astype(jnp.float32)  # [B, S, H] log-decay
+    # u stays in activation dtype (bf16 at scale); accumulation is fp32 via
+    # preferred_element_type on every einsum touching it.
+    u = dt.astype(x.dtype)[..., None] * x  # [B, S, H, P]
+
+    a_c = a.reshape(B_, nc, Q, H)
+    u_c = u.reshape(B_, nc, Q, H, P)
+    B_c = Bm.reshape(B_, nc, Q, G, N)
+    C_c = Cm.reshape(B_, nc, Q, G, N)
+
+    ca = jnp.cumsum(a_c, axis=2)  # [B, nc, Q, H]
+    # Intra-chunk score (shared across heads in a group): C_i . B_j
+    scores = jnp.einsum(
+        "bcqgn,bckgn->bcgqk", C_c, B_c, preferred_element_type=jnp.float32
+    )  # [B, nc, G, Q, Q]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # Per-chunk summary state: S_c = sum_j exp(ca_last - ca_j) B_j u_j^T
+    decay_last = jnp.exp(ca_c_last(ca) - ca)  # [B, nc, Q, H]
+    if G == 1:
+        chunk_state = jnp.einsum(
+            "bcqh,bcqn,bcqhp->bchpn",
+            decay_last,
+            B_c[:, :, :, 0],
+            u_c,
+            preferred_element_type=jnp.float32,
+        )  # [B, nc, H, P, N]
+    else:
+        B_heads = jnp.repeat(B_c, heads_per_group, axis=3)  # [B, nc, Q, H, N]
+        chunk_state = jnp.einsum(
+            "bcqh,bcqhn,bcqhp->bchpn",
+            decay_last,
+            B_heads,
+            u_c,
+            preferred_element_type=jnp.float32,
+        )
+
+    # Inter-chunk recurrence over chunk states (associative scan).
+    t_c = jnp.exp(ca[:, :, -1, :])  # [B, nc, H] total chunk decay
+
+    def combine(e1, e2):
+        t1, s1 = e1
+        t2, s2 = e2
+        return t1 * t2, t2[..., None, None] * s1 + s2
+
+    t_scan, s_scan = jax.lax.associative_scan(
+        combine, (t_c, chunk_state), axis=1
+    )
+    # State *entering* chunk c = state after chunk c-1 (shifted; chunk 0 sees init)
+    init = (
+        jnp.zeros((B_, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    h_after = s_scan + (t_scan[..., None, None] * init[:, None])
+    h_before = jnp.concatenate([init[:, None], h_after[:, :-1]], axis=1)
+    final_state = h_after[:, -1]
+
+    # Per-head-block output assembly.
+    def hb_slice(arr, i, axis):
+        return jax.lax.dynamic_slice_in_dim(arr, i * hb, hb, axis)
+
+    def per_head_block(i):
+        ca_h = hb_slice(ca, i, 3)  # [B, nc, Q, hb]
+        u_h = hb_slice(u_c, i, 3)  # [B, nc, Q, hb, P]
+        h0_h = hb_slice(h_before, i, 2)  # [B, nc, hb, P, N]
+        # group index of each head in this block
+        g_idx = (i * hb + jnp.arange(hb)) // heads_per_group
+        scores_h = jnp.take(scores, g_idx, axis=2)  # [B, nc, hb, Q, Q]
+        C_h = jnp.take(C_c, g_idx, axis=3)  # [B, nc, Q, hb, N]
+        # decay L[i,j] = exp(ca_i - ca_j) masked lower-triangular
+        ca_t = ca_h.transpose(0, 1, 3, 2)  # [B, nc, hb, Q]
+        logL = ca_t[..., :, None] - ca_t[..., None, :]  # [B, nc, hb, Q, Q]
+        logL = jnp.where(tri[None, None, None], logL, -jnp.inf)
+        M = scores_h * jnp.exp(logL)
+        y_intra = jnp.einsum(
+            "bchqk,bckhp->bcqhp", M.astype(u_h.dtype), u_h,
+            preferred_element_type=jnp.float32,
+        )
+        y_inter = jnp.einsum(
+            "bcqhn,bchpn,bcqh->bcqhp",
+            C_h.astype(jnp.float32),
+            h0_h,
+            jnp.exp(ca_h),
+        )
+        return (y_intra + y_inter).astype(x.dtype)  # [B, nc, Q, hb, P]
+
+    per_head_block = jax.checkpoint(per_head_block)
+    y_blocks = jax.lax.map(per_head_block, jnp.arange(nhb))  # [nhb, B, nc, Q, hb, P]
+    y = jnp.moveaxis(y_blocks, 0, 3).reshape(B_, nc, Q, H, P)
+    return y.reshape(B_, S, H, P).astype(x.dtype), final_state
+
+
+def ca_c_last(ca: jax.Array) -> jax.Array:
+    return ca[:, :, -1:, :]
+
+
+def ssd_decode_step(
+    x: jax.Array,  # [B, H, P]
+    dt: jax.Array,  # [B, H]
+    A: jax.Array,  # [H]
+    Bm: jax.Array,  # [B, G, N]
+    Cm: jax.Array,  # [B, G, N]
+    state: jax.Array,  # [B, H, P, N] fp32
+) -> Tuple[jax.Array, jax.Array]:
+    B_, H, P = x.shape
+    G = Bm.shape[1]
+    heads_per_group = H // G
+    decay = jnp.exp((dt * A).astype(jnp.float32))  # [B, H]
+    u = (dt[..., None] * x.astype(jnp.float32))  # [B, H, P]
+    Bh = jnp.repeat(Bm.astype(jnp.float32), heads_per_group, axis=1)  # [B, H, N]
+    Ch = jnp.repeat(Cm.astype(jnp.float32), heads_per_group, axis=1)
+    new_state = decay[..., None, None] * state + u[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, initial_state=None):
+    """Naive recurrent oracle: scan one token at a time."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h0 = (
+        jnp.zeros((B_, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        y, h = ssd_decode_step(xt, dtt, A, bt, ct, h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (pre-SSM mixing of x, B, C)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B, S, C]; w: [W, C]; depthwise causal convolution."""
+    W = w.shape[0]
+    pads = [(0, 0), (W - 1, 0), (0, 0)]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w[:, None, :].astype(x.dtype),  # [W, 1, C]
+        window_strides=(1,),
+        padding=pads[1:2],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b.astype(x.dtype)
+
+
+def conv1d_decode_step(
+    x_t: jax.Array,  # [B, C]
+    conv_state: jax.Array,  # [B, W-1, C] (previous inputs)
+    w: jax.Array,  # [W, C]
+    b: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # [B, W, C]
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    out = (out + b.astype(jnp.float32)).astype(x_t.dtype)
+    new_state = window[:, 1:]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 layer
+# ---------------------------------------------------------------------------
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, H, conv_ch
+
+
+def init_ssm(key, cfg, dtype) -> Dict:
+    """Projections are stored SPLIT (w_z/w_x head-major, w_bc shared, w_dt
+    per-head) instead of one fused in_proj: the head dims then shard cleanly
+    over the model axis (Mamba-2's own tensor-parallel formulation), which
+    is what lets the TP path run the whole SSD recurrence shard-locally."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_ch = ssm_dims(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    gn = s.n_groups * s.d_state
+    return {
+        "w_z": truncated_normal_init(k1, (d, d_in), dtype, 1.0),
+        "w_x": truncated_normal_init(k5, (d, d_in), dtype, 1.0),
+        "w_bc": truncated_normal_init(k6, (d, 2 * gn), dtype, 1.0),
+        "w_dt": truncated_normal_init(k3, (d, H), dtype, 1.0),
+        "conv_x": truncated_normal_init(k2, (s.d_conv, d_in), dtype, 1.0),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_bc": truncated_normal_init(k2, (s.d_conv, 2 * gn), dtype, 1.0),
+        "conv_bc_b": jnp.zeros((2 * gn,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))).astype(dtype),
+        "norm_w": jnp.zeros((d_in,), dtype),
+        "out_proj": truncated_normal_init(k4, (d_in, d), dtype, 1.0),
+    }
+
+
+def _conv_with_tail(x_in, w, b, initial, W):
+    if initial is not None:
+        full = jnp.concatenate([initial.astype(x_in.dtype), x_in], 1)
+        return causal_conv1d(full, w, b)[:, W - 1 :]
+    return causal_conv1d(x_in, w, b)
+
+
+def _ssm_core(
+    params: Dict,
+    x: jax.Array,  # [B, S, d]
+    cfg,
+    *,
+    initial_state,
+    initial_conv,  # (conv_x_tail [B,W-1,d_in_loc], conv_bc_tail [B,W-1,2gn]) | None
+    head_block: int,
+    norm_psum_axis: Optional[str] = None,
+):
+    """Shared full-sequence body.  All head-indexed params may be LOCAL
+    slices (TP path); w_bc/conv_bc are always replicated."""
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    P_ = s.head_dim
+    H_loc = params["w_dt"].shape[1]
+    d_in_loc = H_loc * P_
+
+    z = x @ params["w_z"].astype(x.dtype)
+    xs = x @ params["w_x"].astype(x.dtype)
+    bc = x @ params["w_bc"].astype(x.dtype)
+    dt = x @ params["w_dt"].astype(x.dtype)
+
+    ic_x = initial_conv[0] if initial_conv is not None else None
+    ic_bc = initial_conv[1] if initial_conv is not None else None
+    xs_tail, bc_tail = xs[:, -(s.d_conv - 1):], bc[:, -(s.d_conv - 1):]
+    xs = jax.nn.silu(
+        _conv_with_tail(xs, params["conv_x"], params["conv_x_b"], ic_x, s.d_conv)
+    )
+    bc = jax.nn.silu(
+        _conv_with_tail(bc, params["conv_bc"], params["conv_bc_b"], ic_bc, s.d_conv)
+    )
+    gn = s.n_groups * s.d_state
+    Bf, Cf = bc[..., :gn], bc[..., gn:]
+    xh = xs.reshape(B_, S, H_loc, P_)
+    Bm = Bf.reshape(B_, S, s.n_groups, s.d_state)
+    Cm = Cf.reshape(B_, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(
+        xh, dt, A, Bm, Cm,
+        chunk_size=s.chunk_size,
+        head_block=min(head_block, H_loc),
+        initial_state=initial_state,
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(B_, S, d_in_loc).astype(x.dtype)
+    g = y * jax.nn.silu(z)
+    # gated RMSNorm over the FULL d_in (psum of squares when head-sharded)
+    gf = g.astype(jnp.float32)
+    ss = jnp.sum(jnp.square(gf), axis=-1, keepdims=True)
+    n_tot = d_in_loc
+    if norm_psum_axis is not None:
+        ss = jax.lax.psum(ss, norm_psum_axis)
+        n_tot = d_in_loc * jax.lax.axis_size(norm_psum_axis)
+    gn_ = gf * jax.lax.rsqrt(ss / n_tot + cfg.norm_eps)
+    gn_ = gn_ * (1.0 + params["norm_w"].astype(jnp.float32))
+    out = gn_.astype(x.dtype) @ params["out_proj"].astype(x.dtype)
+    if norm_psum_axis is not None:
+        out = jax.lax.psum(out.astype(jnp.float32), norm_psum_axis).astype(x.dtype)
+    return out, (final_state, (xs_tail, bc_tail))
+
+
+def apply_ssm(
+    params: Dict,
+    x: jax.Array,  # [B, S, d]
+    cfg,
+    *,
+    topo=None,
+    initial_state: Optional[jax.Array] = None,
+    initial_conv=None,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba-2 layer.  With a multi-device topology whose
+    model axis divides the head count, runs head-sharded TP via shard_map
+    (one output psum per layer; the SSD recurrence is shard-local)."""
+    s = cfg.ssm
+    d_in, H, _ = ssm_dims(cfg)
+    use_tp = (
+        topo is not None
+        and getattr(topo, "mesh", None) is not None
+        and topo.model_axis is not None
+        and H % topo.ep_size == 0
+        and x.shape[0] % topo.dp_size == 0
+        and initial_state is None
+        and initial_conv is None
+    )
+    if not use_tp:
+        out, (final_state, conv_tail) = _ssm_core(
+            params, x, cfg,
+            initial_state=initial_state, initial_conv=initial_conv,
+            head_block=s.head_block,
+        )
+        if return_state:
+            return out, (final_state, conv_tail)
+        return out
+
+    import functools as _ft
+
+    from jax.sharding import PartitionSpec as P
+
+    axis = topo.model_axis
+    dp = tuple(topo.data_axes)
+    body = _ft.partial(
+        _ssm_core, cfg=cfg, initial_state=None, initial_conv=None,
+        head_block=s.head_block, norm_psum_axis=axis,
+    )
+
+    def shard_body(params_loc, x_loc):
+        out, (fs, tails) = body(params_loc, x_loc)
+        return out, (fs, tails)
+
+    pspecs = {
+        "w_z": P(None, axis), "w_x": P(None, axis), "w_bc": P(),
+        "w_dt": P(None, axis),
+        "conv_x": P(None, axis), "conv_x_b": P(axis),
+        "conv_bc": P(), "conv_bc_b": P(),
+        "A_log": P(axis), "D": P(axis), "dt_bias": P(axis),
+        "norm_w": P(axis), "out_proj": P(axis, None),
+    }
+    fn = jax.shard_map(
+        shard_body,
+        mesh=topo.mesh,
+        in_specs=(pspecs, P(dp, None, None)),
+        out_specs=(
+            P(dp, None, None),
+            (P(dp, axis, None, None), (P(dp, None, axis), P(dp, None, None))),
+        ),
+        check_vma=False,
+    )
+    out, (final_state, conv_tail) = fn(params, x)
+    if return_state:
+        return out, (final_state, conv_tail)
+    return out
+
+
+def apply_ssm_decode(
+    params: Dict,
+    x: jax.Array,  # [B, 1, d]
+    cfg,
+    ssm_state: jax.Array,  # [B, H, P, N] fp32
+    conv_state,  # (conv_x [B, W-1, d_in], conv_bc [B, W-1, 2gn])
+):
+    s = cfg.ssm
+    d_in, H, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    B_ = x.shape[0]
+    x0 = x[:, 0]
+    z = x0 @ params["w_z"].astype(x.dtype)
+    xs_t = x0 @ params["w_x"].astype(x.dtype)
+    bc_t = x0 @ params["w_bc"].astype(x.dtype)
+    dt = x0 @ params["w_dt"].astype(x.dtype)
+    cx, cbc = conv_state
+    xs, new_cx = conv1d_decode_step(
+        xs_t, cx, params["conv_x"], params["conv_x_b"]
+    )
+    bc, new_cbc = conv1d_decode_step(
+        bc_t, cbc, params["conv_bc"], params["conv_bc_b"]
+    )
+    xs = jax.nn.silu(xs)
+    bc = jax.nn.silu(bc)
+    Bf, Cf = bc[..., :gn], bc[..., gn:]
+    xh = xs.reshape(B_, H, s.head_dim)
+    Bm = Bf.reshape(B_, s.n_groups, s.d_state)
+    Cm = Cf.reshape(B_, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(xh, dt, A, Bm, Cm, ssm_state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+    return out, (new_state, (new_cx, new_cbc))

@@ -1,0 +1,4 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.endcloud import EndCloudPipeline
+
+__all__ = ["Request", "ServingEngine", "EndCloudPipeline"]

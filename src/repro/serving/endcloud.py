@@ -1,0 +1,218 @@
+"""End-cloud collaborative inference pipeline (the paper's PO-ECC, executed
+for real on the block-stacked model).
+
+The model's ``block_repeat`` blocks are split at ``split`` (chosen by the
+route-aware planner, eq. 9-11): blocks [0, split) run on the "end" tier with
+the hardware-aware expert mask (eq. 2-4) applied to every MoE layer; the
+boundary activation is low-rank compressed (eq. 8), "transmitted" (bytes are
+metered against a bandwidth model), decompressed, and blocks [split, R) plus
+the LM head run on the "cloud" tier with the full expert set.
+
+Both tiers execute in-process (this container has one device) but through
+separate param subtrees and separate jitted functions, so the same code
+drives a real two-host deployment by placing each tier's params on its own
+jax process.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.hardware import Capability, DeviceProfile, DeviceState, capability
+from repro.core.pipeline import PipelinePlan, plan_pipeline_split
+from repro.core.selection import end_mask_for
+from repro.models import attention as attn_mod
+from repro.models import transformer
+from repro.models.model import Model
+
+
+def split_block_params(params: Dict, split: int) -> Tuple[Dict, Dict]:
+    """Split stacked block params [R, ...] into ([0,split), [split,R))."""
+    end_blocks = jax.tree.map(lambda l: l[:split], params["blocks"])
+    cloud_blocks = jax.tree.map(lambda l: l[split:], params["blocks"])
+    end = {"embed": params["embed"], "blocks": end_blocks}
+    cloud = {k: v for k, v in params.items() if k != "blocks"}
+    cloud["blocks"] = cloud_blocks
+    return end, cloud
+
+
+@dataclass
+class LinkStats:
+    bytes_up: int = 0
+    bytes_down: int = 0
+    transfers: int = 0
+
+    def transfer_time(self, nbytes: int, gbps: float) -> float:
+        return nbytes * 8.0 / max(gbps * 1e9, 1e-9)
+
+
+class EndCloudPipeline:
+    """Runs full-sequence (prefill-style) inference across two tiers."""
+
+    def __init__(
+        self,
+        model: Model,
+        params: Dict,
+        *,
+        end_profile: DeviceProfile,
+        cloud_profile: DeviceProfile,
+        end_state: Optional[DeviceState] = None,
+        codec_params: Optional[Dict] = None,  # 1-D low-rank codec {"enc","dec"}
+        compression_rank: int = 0,
+        alpha: float = 0.5,
+        selection_eps: float = 1.0,
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.end_profile = end_profile
+        self.cloud_profile = cloud_profile
+        self.end_state = end_state or DeviceState()
+        self.link = LinkStats()
+
+        cfg = self.cfg
+        self.end_cap = capability(end_profile, self.end_state)
+        self.cloud_cap = capability(cloud_profile, DeviceState())
+
+        # Hardware-aware local expert mask (eq. 2-4) for the end tier.
+        self.end_mask = None
+        if cfg.moe is not None:
+            mask_np = end_mask_for(
+                end_profile,
+                self.end_state,
+                cfg.d_model,
+                cfg.moe.d_ff_expert,
+                cfg.moe.num_experts,
+                cfg.moe.num_groups,
+                gated=cfg.ffn_gated,
+                eps=selection_eps,
+                selection_cap=cfg.moe.local_selection_cap,
+            )
+            self.end_mask = jnp.asarray(mask_np)
+
+        # Codec (eq. 8).
+        self.codec = codec_params
+        if self.codec is None and compression_rank > 0:
+            self.codec = comp.init_lowrank_1d(
+                jax.random.PRNGKey(7), cfg.d_model, compression_rank
+            )
+
+        # Route-aware split (eq. 9-11 pipeline reading).
+        per_block_gflops = self._block_gflops()
+        boundary_bytes = float(cfg.d_model * 2)  # per token, bf16
+        ratio = (
+            comp.compression_ratio(cfg.d_model, compression_rank)
+            if self.codec is not None
+            else 1.0
+        )
+        self.plan: PipelinePlan = plan_pipeline_split(
+            [per_block_gflops] * cfg.block_repeat,
+            boundary_bytes,
+            self.end_cap,
+            self.cloud_cap,
+            compression_ratio=ratio,
+            alpha=alpha,
+        )
+        self.split = self.plan.split_layer
+        self.end_params, self.cloud_params = split_block_params(params, self.split)
+        self._jit_end = jax.jit(self._end_forward)
+        self._jit_cloud = jax.jit(self._cloud_forward)
+
+    # -- cost model -----------------------------------------------------------
+
+    def _block_gflops(self) -> float:
+        cfg = self.cfg
+        n = cfg.active_param_count() - 2 * cfg.vocab_size * cfg.d_model
+        per_layer = max(n, 1) / max(cfg.num_layers, 1)
+        return 2.0 * per_layer * 1e-9  # fwd GFLOP per token per block-layer
+
+    # -- tier forwards ----------------------------------------------------------
+
+    def _end_forward(self, end_params, tokens):
+        cfg = self.cfg
+        x = transformer.embed_inputs(end_params, cfg, tokens)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, S))
+        angles = attn_mod.rope_angles(
+            pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+        )
+
+        def block_fn(carry, block_params):
+            bx = carry
+            for i, spec in enumerate(cfg.layer_pattern):
+                bx, _, _ = transformer.apply_layer_full(
+                    block_params[f"pos{i}"], bx, spec, cfg, self.model.topo,
+                    angles, causal=True, expert_mask=self.end_mask, train=False,
+                )
+            return bx, None
+
+        if self.split > 0:
+            x, _ = jax.lax.scan(block_fn, x, end_params["blocks"])
+        if self.codec is not None and self.plan.compress_boundary:
+            x = comp.encode_1d(self.codec, x)
+        return x
+
+    def _cloud_forward(self, cloud_params, z, angles_args):
+        cfg = self.cfg
+        B, S = z.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, S))
+        angles = attn_mod.rope_angles(
+            pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+        )
+        x = (
+            comp.decode_1d(self.codec, z)
+            if self.codec is not None and self.plan.compress_boundary
+            else z
+        )
+        x = x.astype(jnp.dtype(cfg.dtype))
+
+        def block_fn(carry, block_params):
+            bx = carry
+            for i, spec in enumerate(cfg.layer_pattern):
+                bx, _, _ = transformer.apply_layer_full(
+                    block_params[f"pos{i}"], bx, spec, cfg, self.model.topo,
+                    angles, causal=True, expert_mask=None, train=False,
+                )
+            return bx, None
+
+        if self.split < cfg.block_repeat:
+            x, _ = jax.lax.scan(block_fn, x, cloud_params["blocks"])
+        return transformer.lm_logits(cloud_params, cfg, x)
+
+    # -- public ----------------------------------------------------------------
+
+    def run_batch(self, tokens: jax.Array) -> Tuple[jax.Array, Dict[str, float]]:
+        """tokens [B, S] -> (logits [B, S, V], timing/bytes metrics)."""
+        t0 = time.monotonic()
+        z = self._jit_end(self.end_params, tokens)
+        z.block_until_ready()
+        t_end = time.monotonic() - t0
+
+        nbytes = z.size * z.dtype.itemsize
+        self.link.bytes_up += nbytes
+        self.link.transfers += 1
+        t_comm = self.link.transfer_time(nbytes, self.end_cap.net_gbps)
+
+        t1 = time.monotonic()
+        logits = self._jit_cloud(self.cloud_params, z, None)
+        logits.block_until_ready()
+        t_cloud = time.monotonic() - t1
+        return logits, {
+            "t_end_s": t_end,
+            "t_comm_s": t_comm,
+            "t_cloud_s": t_cloud,
+            "boundary_bytes": nbytes,
+            "split": self.split,
+            "compressed": bool(self.codec is not None and self.plan.compress_boundary),
+        }

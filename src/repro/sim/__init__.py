@@ -1,0 +1,13 @@
+from repro.sim.simulator import Link, Resource, SimRequest, Stage, simulate
+from repro.sim.policies import POLICIES, PolicyConfig, build_request_stages
+
+__all__ = [
+    "Link",
+    "Resource",
+    "SimRequest",
+    "Stage",
+    "simulate",
+    "POLICIES",
+    "PolicyConfig",
+    "build_request_stages",
+]

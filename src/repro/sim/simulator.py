@@ -1,0 +1,153 @@
+"""Discrete-event simulator for end-cloud serving (paper figs. 5-8).
+
+The *policies* under test (EC2MoE's route-aware scheduling, hardware-aware
+selection, compression decisions) are the real algorithms from repro.core;
+only device/link timing is analytic — calibrated from the paper's testbed
+profiles (Xeon 4214R end, 2xA100 cloud, 300 Mbps +-20% link).
+
+Model: each request is a sequence of stages, each bound to a resource
+(end / cloud / link).  Resources are FIFO servers; a stage starts at
+max(previous-stage end, resource free time).  Pipelining across requests
+falls out of the queueing model — exactly the overlap PO-ECC exploits.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Stage:
+    resource: str  # "end" | "cloud" | "link"
+    service_s: float = 0.0  # fixed compute time (end/cloud)
+    payload_bytes: float = 0.0  # for link stages: bytes on the wire
+    # Sensitivity of this stage to link jitter (timeouts / head-of-line on
+    # synchronous cloud paths).  Applied as service * (1 + j * fluct * 2).
+    jitter: float = 0.0
+
+
+@dataclass
+class SimRequest:
+    request_id: int
+    arrival_s: float
+    stages: List[Stage]
+    stage_end_s: List[float] = field(default_factory=list)
+
+    @property
+    def finish_s(self) -> float:
+        return self.stage_end_s[-1] if self.stage_end_s else math.inf
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+class Resource:
+    def __init__(self, name: str, servers: int = 1):
+        self.name = name
+        self.free_at = [0.0] * servers
+
+    def serve(self, ready_s: float, service_s: float) -> float:
+        i = int(np.argmin(self.free_at))
+        start = max(ready_s, self.free_at[i])
+        end = start + service_s
+        self.free_at[i] = end
+        return end
+
+
+class Link(Resource):
+    """Shared link with RTT and time-varying bandwidth.
+
+    bandwidth(t) = nominal * (1 + fluctuation * s(t)), s in [-1, 1] from a
+    seeded low-frequency random walk — the paper's "Linux TC +-20%" setup.
+    """
+
+    def __init__(
+        self,
+        gbps: float,
+        rtt_s: float = 0.040,
+        fluctuation: float = 0.2,
+        seed: int = 0,
+        period_s: float = 2.0,
+    ):
+        super().__init__("link", servers=1)
+        self.gbps = gbps
+        self.rtt_s = rtt_s
+        self.fluctuation = fluctuation
+        rng = np.random.default_rng(seed)
+        self._phase = rng.uniform(0, 2 * math.pi, size=3)
+        self._weights = rng.dirichlet(np.ones(3))
+        self.period_s = period_s
+
+    def bandwidth(self, t: float) -> float:
+        s = sum(
+            w * math.sin(2 * math.pi * t / (self.period_s * (i + 1)) + p)
+            for i, (w, p) in enumerate(zip(self._weights, self._phase))
+        )
+        return self.gbps * max(1.0 + self.fluctuation * s, 0.05)
+
+    def serve_bytes(self, ready_s: float, nbytes: float) -> float:
+        start = max(ready_s, self.free_at[0])
+        bw = self.bandwidth(start)
+        service = self.rtt_s / 2 + nbytes * 8.0 / (bw * 1e9)
+        end = start + service
+        self.free_at[0] = end
+        return end
+
+
+def simulate(
+    requests: Sequence[SimRequest],
+    *,
+    end_servers: int = 1,
+    cloud_servers: int = 2,
+    link: Optional[Link] = None,
+) -> Dict[str, float]:
+    """Run all requests (event-driven, FCFS-by-ready-time per resource);
+    returns throughput/latency metrics."""
+    import heapq
+
+    end = Resource("end", end_servers)
+    cloud = Resource("cloud", cloud_servers)
+    link = link or Link(0.3)
+    resources = {"end": end, "cloud": cloud, "link": link}
+
+    reqs = list(requests)
+    for r in reqs:
+        r.stage_end_s = [0.0] * len(r.stages)
+    heap = [(r.arrival_s, i, 0) for i, r in enumerate(reqs)]
+    heapq.heapify(heap)
+    while heap:
+        ready, i, si = heapq.heappop(heap)
+        req = reqs[i]
+        st = req.stages[si]
+        if st.resource == "link":
+            t = link.serve_bytes(ready, st.payload_bytes)
+        else:
+            service = st.service_s * (1.0 + st.jitter * link.fluctuation * 2.0)
+            t = resources[st.resource].serve(ready, service)
+        req.stage_end_s[si] = t
+        if si + 1 < len(req.stages):
+            heapq.heappush(heap, (t, i, si + 1))
+
+    lat = np.array([r.latency_s for r in requests])
+    makespan = max(r.finish_s for r in requests) - min(
+        r.arrival_s for r in requests
+    )
+    return {
+        "n_requests": len(requests),
+        "throughput_rps": len(requests) / max(makespan, 1e-9),
+        "latency_mean_s": float(lat.mean()),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+        "makespan_s": float(makespan),
+    }
+
+
+def poisson_arrivals(rate_rps: float, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    return np.cumsum(gaps)

@@ -1,0 +1,176 @@
+"""Fault-tolerant training loop.
+
+Composes: jitted train step (launch.steps) + data pipeline + checkpointer
+(atomic/async) + StepGuard (NaN/overflow -> restore) + straggler watchdog +
+elastic restart (restore the same checkpoint onto a smaller mesh, keeping
+the model/EP axis intact).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.distributed.fault import FailureInjector, StepGuard, StragglerMitigator
+from repro.distributed.topology import Topology, single_device_topology
+from repro.launch import steps as steps_mod
+from repro.models.model import Model, build_model
+from repro.training import optimizer as opt_mod
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        data_iter: Iterator[Dict[str, np.ndarray]],
+        *,
+        topo: Optional[Topology] = None,
+        trainer_cfg: Optional[TrainerConfig] = None,
+        opt_cfg: Optional[opt_mod.OptimizerConfig] = None,
+        failure_injector: Optional[FailureInjector] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.topo = topo or single_device_topology()
+        self.tc = trainer_cfg or TrainerConfig()
+        self.opt_cfg = opt_cfg or opt_mod.OptimizerConfig(name=cfg.optimizer)
+        self.data_iter = data_iter
+        self.model = build_model(cfg, self.topo)
+        self.ckpt = Checkpointer(self.tc.checkpoint_dir, keep=self.tc.keep_checkpoints)
+        self.guard = StepGuard()
+        self.straggler = StragglerMitigator()
+        self.injector = failure_injector
+        self.metrics_log: list = []
+
+        self._step_fn = None
+        self._seed = seed
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+
+    # -- state ----------------------------------------------------------------
+
+    def _placements(self):
+        params_sds, opt_sds = steps_mod.abstract_state(self.model, self.opt_cfg)
+        pspec = sharding.param_specs(params_sds, self.topo)
+        ospec = sharding.opt_state_specs(opt_sds, params_sds, self.topo)
+        return (
+            (params_sds, opt_sds),
+            (sharding.named(pspec, self.topo), sharding.named(ospec, self.topo)),
+        )
+
+    def initialize(self, resume: bool = True):
+        (params_sds, opt_sds), (pshard, oshard) = self._placements()
+        if resume and self.ckpt.latest_step() is not None:
+            self.step, (self.params, self.opt_state) = self.ckpt.restore(
+                (params_sds, opt_sds),
+                shardings=(pshard, oshard) if self.topo.mesh is not None else None,
+            )
+            if self.topo.mesh is None:
+                self.params, self.opt_state = jax.tree.map(
+                    jnp.asarray, (self.params, self.opt_state)
+                )
+        else:
+            init = jax.jit(self.model.init, out_shardings=pshard if self.topo.mesh is not None else None)
+            self.params = init(jax.random.PRNGKey(self._seed))
+            self.opt_state = jax.jit(
+                lambda p: opt_mod.init_optimizer(self.cfg.optimizer, p),
+                out_shardings=oshard if self.topo.mesh is not None else None,
+            )(self.params)
+            self.step = 0
+        return self
+
+    def _compile_step(self, batch):
+        batch_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch
+        )
+        step = steps_mod.make_train_step(self.model, self.opt_cfg)
+        if self.topo.mesh is not None:
+            bspec = sharding.batch_specs(batch_sds, self.topo)
+            (params_sds, opt_sds), (pshard, oshard) = self._placements()
+            self._step_fn = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, sharding.named(bspec, self.topo)),
+                out_shardings=(pshard, oshard, None),
+            )
+        else:
+            self._step_fn = jax.jit(step)
+
+    # -- loop -----------------------------------------------------------------
+
+    def run(self) -> Dict[str, Any]:
+        restores = 0
+        while self.step < self.tc.total_steps:
+            batch_np = next(self.data_iter)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if self._step_fn is None:
+                self._compile_step(batch)
+            t0 = time.perf_counter()
+            new_params, new_opt, metrics = self._step_fn(
+                self.params, self.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            gnorm = float(metrics.get("grad_norm", 0.0))
+            if self.injector is not None:
+                loss = self.injector.maybe_fail(self.step, loss)
+            dt = time.perf_counter() - t0
+            self.straggler.record(self.step, dt)
+
+            if not self.guard.check(loss, gnorm):
+                # bad step: drop the update, restore last good checkpoint
+                restores += 1
+                last = self.ckpt.latest_step()
+                if last is not None:
+                    self.ckpt.wait()
+                    (params_sds, opt_sds), (pshard, oshard) = self._placements()
+                    self.step, (self.params, self.opt_state) = self.ckpt.restore(
+                        (params_sds, opt_sds),
+                        shardings=(pshard, oshard)
+                        if self.topo.mesh is not None
+                        else None,
+                    )
+                    if self.topo.mesh is None:
+                        self.params, self.opt_state = jax.tree.map(
+                            jnp.asarray, (self.params, self.opt_state)
+                        )
+                continue
+
+            self.params, self.opt_state = new_params, new_opt
+            self.step += 1
+            if self.step % self.tc.log_every == 0:
+                self.metrics_log.append(
+                    {"step": self.step, "loss": loss, "grad_norm": gnorm,
+                     "step_time_s": dt}
+                )
+            if self.step % self.tc.checkpoint_every == 0:
+                save = (
+                    self.ckpt.async_save if self.tc.async_checkpoint else self.ckpt.save
+                )
+                save(self.step, (self.params, self.opt_state),
+                     {"loss": loss, "arch": self.cfg.name})
+        self.ckpt.wait()
+        self.ckpt.save(self.step, (self.params, self.opt_state), {"final": True})
+        return {
+            "final_step": self.step,
+            "restores": restores,
+            "stragglers": list(self.straggler.flagged),
+            "log": self.metrics_log,
+        }

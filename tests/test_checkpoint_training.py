@@ -1,0 +1,137 @@
+"""Checkpointer atomicity/GC + trainer fault tolerance + optimizers."""
+
+import itertools
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import DataConfig, batches
+from repro.distributed.fault import FailureInjector, StepGuard, StragglerMitigator
+from repro.training import optimizer as opt_mod
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    ck.save(7, state, {"note": "x"})
+    step, got = ck.restore(jax.tree.map(np.zeros_like, state))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ck.metadata()["note"] == "x"
+
+
+def test_checkpoint_gc_and_tmp_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.ones(2) * s})
+    assert ck.all_steps() == [3, 4]
+    os.makedirs(str(tmp_path / "step_00000099.tmp"))  # crashed write
+    assert ck.latest_step() == 4
+
+
+def test_async_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.async_save(5, {"x": jnp.ones(3)})
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        ck.restore({"x": jnp.ones((3, 3))})
+
+
+# ------------------------------------------------------------------ trainer
+
+def _data(seq=32, batch=8):
+    dcfg = DataConfig(task="lm", vocab_size=512, seq_len=seq)
+    return itertools.cycle(batches(dcfg, batch, 40))
+
+
+def test_trainer_failure_recovery(tmp_path):
+    cfg = smoke_config(get_config("tinyllama-1.1b")).replace(num_layers=1)
+    tr = Trainer(
+        cfg, _data(),
+        trainer_cfg=TrainerConfig(total_steps=12, checkpoint_every=4,
+                                  checkpoint_dir=str(tmp_path), log_every=4,
+                                  async_checkpoint=False),
+        failure_injector=FailureInjector(fail_steps=(6,)),
+    ).initialize()
+    out = tr.run()
+    assert out["final_step"] == 12
+    assert out["restores"] == 1
+    assert all(np.isfinite(m["loss"]) for m in out["log"])
+
+
+def test_trainer_resume(tmp_path):
+    cfg = smoke_config(get_config("tinyllama-1.1b")).replace(num_layers=1)
+    tc = TrainerConfig(total_steps=6, checkpoint_every=3,
+                       checkpoint_dir=str(tmp_path), async_checkpoint=False)
+    Trainer(cfg, _data(), trainer_cfg=tc).initialize().run()
+    tr2 = Trainer(cfg, _data(), trainer_cfg=TrainerConfig(
+        total_steps=9, checkpoint_every=3, checkpoint_dir=str(tmp_path),
+        async_checkpoint=False)).initialize()
+    assert tr2.step == 6  # resumed, not restarted
+    assert tr2.run()["final_step"] == 9
+
+
+def test_step_guard_limits():
+    g = StepGuard(consecutive_bad_limit=2)
+    assert g.check(1.0)
+    assert not g.check(float("nan"))
+    assert not g.check(float("inf"))
+    with pytest.raises(RuntimeError):
+        g.check(float("nan"))
+
+
+def test_straggler_watchdog():
+    s = StragglerMitigator(window=10, threshold=2.0)
+    for i in range(8):
+        assert s.record(i, 0.1) is None
+    assert s.record(8, 0.5) == "reshard_recommended"
+    assert 8 in s.flagged
+
+
+# ---------------------------------------------------------------- optimizers
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(name):
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]).reshape(1, 3) * jnp.ones((8, 3))}
+    state = opt_mod.init_optimizer(name, params)
+    cfg = opt_mod.OptimizerConfig(name=name, lr=0.1, warmup_steps=1,
+                                  decay_steps=200, weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, _ = opt_mod.apply_optimizer(name, cfg, grads, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.ones((32, 16)), "b": jnp.ones((16,))}
+    st = opt_mod.init_optimizer("adafactor", params)
+    assert set(st["stats"]["w"].keys()) == {"vr", "vc"}
+    assert st["stats"]["w"]["vr"].shape == (32,)
+    assert st["stats"]["w"]["vc"].shape == (16,)
+    assert set(st["stats"]["b"].keys()) == {"v"}
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = opt_mod.clip_by_global_norm(g, 1.0)
+    assert abs(float(opt_mod.global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(norm) - 20.0) < 1e-4

@@ -1,0 +1,70 @@
+"""PO-ECC low-rank codec properties (paper eq. 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([16, 64]), seed=st.integers(0, 10))
+def test_full_rank_orthonormal_roundtrip_identity(d, seed):
+    params = comp.init_lowrank_1d(jax.random.PRNGKey(seed), d, d)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (32, d))
+    np.testing.assert_allclose(
+        np.asarray(comp.roundtrip_1d(params, x)), np.asarray(x),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_error_monotone_in_rank():
+    d = 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, d))
+    errs = []
+    for r in (4, 16, 32, 64):
+        p = comp.init_lowrank_1d(jax.random.PRNGKey(0), d, r)
+        errs.append(float(comp.recon_loss(x, comp.roundtrip_1d(p, x))))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-8
+
+
+def test_2d_faithful_form():
+    """Z = U^T X V; X_hat = U_hat Z V_hat^T (eq. 8 verbatim)."""
+    h, w, c, r = 16, 12, 3, 12
+    params = comp.init_lowrank_2d(jax.random.PRNGKey(0), h, w, r)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, h, w, c))
+    z = comp.encode_2d(params, x)
+    assert z.shape == (2, r, r, c)
+    x_hat = comp.decode_2d(params, z)
+    assert x_hat.shape == x.shape
+    # r == w implies V is square-orthonormal; error bounded by U truncation
+    err = comp.recon_loss(x, x_hat)
+    assert float(err) < float(comp.recon_loss(x, jnp.zeros_like(x)))
+
+
+def test_joint_loss_combines():
+    x = jnp.ones((4, 8))
+    x_hat = jnp.zeros((4, 8))
+    task = jnp.asarray(2.0)
+    total = comp.joint_loss(x, x_hat, task, recon_weight=1.0, task_weight=0.5)
+    np.testing.assert_allclose(float(total), 1.0 + 1.0, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10))
+def test_int8_codec_error_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 32))
+    q, scale = comp.quantize_int8(x)
+    x_hat = comp.dequantize_int8(q, scale, jnp.float32)
+    # max error is half an LSB = scale/2 per element
+    err = np.abs(np.asarray(x) - np.asarray(x_hat))
+    bound = np.asarray(scale) * 0.5 + 1e-6
+    assert (err <= bound + 1e-5).all()
+
+
+def test_compression_ratio_model():
+    assert comp.compression_ratio(4096, 256, codec="lowrank") == 256 / 4096
+    assert comp.compression_ratio(4096, 0, codec="int8") == 0.5
+    assert comp.compression_ratio(4096, 0, codec="none") == 1.0

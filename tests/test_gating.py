@@ -1,0 +1,107 @@
+"""HL-GGN group gate properties (paper eq. 5-7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core import gating
+
+
+def _setup(d, E, K, T=16, seed=0):
+    mcfg = MoEConfig(num_experts=E, top_k=min(2, E), d_ff_expert=32, num_groups=K)
+    params = gating.init_group_gate(jax.random.PRNGKey(seed), d, mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, d))
+    return mcfg, params, x
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.sampled_from([8, 32]),
+    K=st.sampled_from([1, 2, 4]),
+    mk=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 5),
+)
+def test_probs_form_distribution(d, K, mk, seed):
+    """eq. 7 output is a valid distribution over all E experts."""
+    E = K * mk
+    mcfg, params, x = _setup(d, E, K, seed=seed)
+    probs, p_group, _ = gating.group_gate_probs(params, x, mcfg)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_group.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(probs) >= 0).all()
+
+
+def test_eq7_factorization():
+    """probs restricted to group k, renormalized == stage-2 softmax."""
+    mcfg, params, x = _setup(16, 8, 4)
+    probs, p_group, _ = gating.group_gate_probs(params, x, mcfg)
+    pr = np.asarray(probs).reshape(-1, 4, 2)
+    pg = np.asarray(p_group)
+    np.testing.assert_allclose(pr.sum(-1), pg, rtol=1e-5)
+
+
+def test_single_group_equals_flat_gate():
+    """K=1 degenerates to the traditional single-FC gate."""
+    d, E = 16, 8
+    mcfg, params, x = _setup(d, E, 1)
+    probs, _, _ = gating.group_gate_probs(params, x, mcfg)
+    # manual flat softmax over the same local weights
+    w = params["w_local"][0]
+    logits = x @ w + params["b_local"][0]
+    # stage-1 softmax over one group is identically 1
+    expected = jax.nn.softmax(logits, -1)
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(expected), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_masked=st.integers(1, 7), seed=st.integers(0, 5))
+def test_masking_zeroes_excluded_experts(n_masked, seed):
+    """eq. 4 mask: excluded experts get exactly zero probability; the rest
+    renormalize to 1."""
+    mcfg, params, x = _setup(16, 8, 4, seed=seed)
+    rng = np.random.default_rng(seed)
+    mask = np.ones(8, bool)
+    mask[rng.choice(8, n_masked, replace=False)] = False
+    probs, _, _ = gating.group_gate_probs(params, x, mcfg, jnp.asarray(mask))
+    p = np.asarray(probs)
+    assert (p[:, ~mask] < 1e-12).all()
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-4)
+
+
+def test_topk_selects_allowed_only():
+    mcfg, params, x = _setup(16, 8, 4, T=64)
+    mask = jnp.asarray(np.array([True, True, False, False] * 2))
+    out = gating.gate(params, x, mcfg, mask)
+    chosen = np.asarray(out.topk_idx).ravel()
+    assert set(chosen) <= {i for i in range(8) if bool(mask[i])}
+
+
+def test_group_topk_restriction():
+    """group_top_k=1 confines selected experts to one group per token."""
+    import dataclasses
+
+    mcfg, params, x = _setup(16, 8, 4, T=64)
+    mcfg = dataclasses.replace(mcfg, group_top_k=1, top_k=2)
+    out = gating.gate(params, x, mcfg)
+    idx = np.asarray(out.topk_idx)  # [T, 2]
+    groups = idx // 2  # Mk = 2
+    assert (groups[:, 0] == groups[:, 1]).all()
+
+
+def test_load_balance_loss_at_uniform():
+    """Perfectly uniform routing gives lb loss == 1 (per Switch)."""
+    T, E, K = 128, 8, 4
+    probs = jnp.full((T, E), 1.0 / E)
+    idx = jnp.tile(jnp.arange(E), T // E * 2)[: T * 1].reshape(T, 1)
+    lb = gating.load_balance_loss(probs, idx, E, K)
+    np.testing.assert_allclose(float(lb["lb_expert"]), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(lb["lb_group"]), 1.0, rtol=1e-5)
+
+
+def test_gate_flop_count_grouped_cheaper():
+    g = gating.gate_flop_count(d_model=4096, num_experts=128, num_groups=16,
+                               group_top_k=4)
+    assert g["grouped"] < g["flat"]

@@ -1,0 +1,76 @@
+"""Hardware-aware local expert selection (paper eq. 2-4)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hardware import (
+    PROFILES,
+    DeviceState,
+    capability,
+    expert_complexity,
+)
+from repro.core.selection import end_mask_for, local_expert_mask, shard_masks_for_fleet
+
+
+def test_selection_cap_40pct():
+    """Paper setting: at most 40% of experts evaluated on the end."""
+    for E in (8, 16, 32, 64):
+        mask = end_mask_for(
+            PROFILES["a100"], DeviceState(), 768, 3072, E, max(2, E // 4),
+            selection_cap=0.4,
+        )
+        assert mask.sum() <= int(0.4 * E)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cpu=st.floats(0.0, 1.0), mem=st.floats(0.0, 1.0), power=st.floats(0.0, 1.0)
+)
+def test_capability_monotone_in_state(cpu, mem, power):
+    p = PROFILES["xeon-4214r"]
+    weak = capability(p, DeviceState(cpu_free=cpu, mem_free=mem, power_free=power))
+    strong = capability(p, DeviceState())
+    assert weak.gflop_budget <= strong.gflop_budget + 1e-12
+    assert weak.mem_budget_gb <= strong.mem_budget_gb + 1e-12
+
+
+def test_mask_monotone_in_memory():
+    """A device with more free memory never hosts fewer experts."""
+    p = PROFILES["phone-soc"]
+    sizes = []
+    for mem in (0.1, 0.5, 1.0):
+        m = end_mask_for(p, DeviceState(mem_free=mem), 768, 3072, 16, 4)
+        sizes.append(int(m.sum()))
+    assert sizes == sorted(sizes)
+
+
+def test_group_aligned_selection():
+    """Experts are admitted whole-group-first (dispatch locality)."""
+    mask = end_mask_for(
+        PROFILES["a100"], DeviceState(), 768, 3072, 16, 4, selection_cap=0.4
+    )
+    # 40% of 16 = 6 experts = group 0 (4) + half of group 1 (2)
+    assert mask[:4].all() and mask[4:6].all() and not mask[6:].any()
+
+
+def test_priority_order_respected():
+    mask = end_mask_for(
+        PROFILES["a100"], DeviceState(), 768, 3072, 16, 4,
+        selection_cap=0.25, group_priority=[3, 0, 1, 2],
+    )
+    assert mask[12:16].all() and mask[:12].sum() == 0
+
+
+def test_fleet_masks_never_empty():
+    profs = [PROFILES["phone-soc"], PROFILES["a100"]]
+    states = [DeviceState(mem_free=0.0, cpu_free=0.0), DeviceState()]
+    masks = shard_masks_for_fleet(profs, states, 768, 3072, 16, 4)
+    assert masks.shape == (2, 16)
+    assert masks.any(axis=1).all()
+
+
+def test_expert_complexity_scales():
+    a = expert_complexity(768, 3072)
+    b = expert_complexity(768, 6144)
+    assert b.gflop_per_token > a.gflop_per_token
+    assert b.weight_bytes == 2 * a.weight_bytes

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core.gating import group_gate_probs as core_gate_probs, init_group_gate
+
+from repro.kernels.group_gate.ops import group_gate_probs as kernel_gate
+from repro.kernels.group_gate.ref import group_gate_ref
+from repro.kernels.lowrank.ops import lowrank_decode, lowrank_encode, lowrank_roundtrip
+from repro.kernels.lowrank.ref import roundtrip_ref
+from repro.kernels.expert_mlp.ops import expert_mlp
+from repro.kernels.expert_mlp.ref import expert_mlp_ref
+from repro.kernels.flash_attention.ops import flash_attention_fwd
+from repro.models.attention import reference_attention
+
+
+# ---------------------------------------------------------------------- gate
+
+@pytest.mark.parametrize("d,E,K,T", [(32, 8, 4, 64), (64, 16, 4, 32),
+                                     (128, 32, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_group_gate_kernel_sweep(d, E, K, T, dtype):
+    mcfg = MoEConfig(num_experts=E, top_k=1, d_ff_expert=8, num_groups=K)
+    params = init_group_gate(jax.random.PRNGKey(0), d, mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d)).astype(dtype)
+    probs_k, pg_k = kernel_gate(params, x, num_groups=K)
+    probs_c, pg_c, _ = core_gate_probs(params, x.astype(jnp.float32), mcfg)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(probs_k), np.asarray(probs_c),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(pg_k), np.asarray(pg_c),
+                               rtol=tol, atol=tol)
+
+
+def test_group_gate_kernel_masked():
+    d, E, K = 32, 8, 4
+    mcfg = MoEConfig(num_experts=E, top_k=1, d_ff_expert=8, num_groups=K)
+    params = init_group_gate(jax.random.PRNGKey(0), d, mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, d))
+    mask = jnp.asarray([True, False] * 4)
+    probs_k, _ = kernel_gate(params, x, num_groups=K, expert_mask=mask)
+    assert float(np.asarray(probs_k)[:, ~np.asarray(mask)].max()) < 1e-12
+    np.testing.assert_allclose(np.asarray(probs_k).sum(-1), 1.0, rtol=1e-5)
+
+
+# ------------------------------------------------------------------- lowrank
+
+@pytest.mark.parametrize("T,d,r", [(64, 32, 8), (128, 64, 64), (32, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_kernels_sweep(T, d, r, dtype):
+    import repro.core.compression as comp
+
+    p = comp.init_lowrank_1d(jax.random.PRNGKey(0), d, r)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d)).astype(dtype)
+    enc, dec = p["enc"].astype(dtype), p["dec"].astype(dtype)
+    z = lowrank_encode(x, enc)
+    np.testing.assert_allclose(
+        np.asarray(z, np.float32), np.asarray(x @ enc, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2,
+    )
+    xh_k, err_k = lowrank_roundtrip(x, enc, dec)
+    xh_r, err_r = roundtrip_ref(x, enc, dec)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(xh_k, np.float32),
+                               np.asarray(xh_r, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(err_k), float(err_r), rtol=1e-2 + tol)
+
+
+# ---------------------------------------------------------------- expert_mlp
+
+@pytest.mark.parametrize("E,C,d,f", [(4, 32, 64, 128), (8, 64, 32, 64),
+                                     (2, 16, 128, 512)])
+@pytest.mark.parametrize("gated", [True, False])
+def test_expert_mlp_kernel_sweep(E, C, d, f, gated):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    wi = jax.random.normal(ks[1], (E, d, f)) * 0.05
+    wg = jax.random.normal(ks[2], (E, d, f)) * 0.05 if gated else None
+    wo = jax.random.normal(ks[3], (E, f, d)) * 0.05
+    y_k = expert_mlp(x, wi, wg, wo)
+    y_r = expert_mlp_ref(x, wi, wg, wo)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expert_mlp_bf16():
+    E, C, d, f = 2, 16, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (E, C, d)).astype(jnp.bfloat16)
+    wi = (jax.random.normal(ks[1], (E, d, f)) * 0.05).astype(jnp.bfloat16)
+    wg = (jax.random.normal(ks[2], (E, d, f)) * 0.05).astype(jnp.bfloat16)
+    wo = (jax.random.normal(ks[3], (E, f, d)) * 0.05).astype(jnp.bfloat16)
+    y_k = expert_mlp(x, wi, wg, wo)
+    y_r = expert_mlp_ref(x, wi, wg, wo)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 48),
+                                           (False, None)])
+@pytest.mark.parametrize("H,KV,S", [(4, 4, 128), (8, 2, 256)])
+def test_flash_kernel_sweep(causal, window, H, KV, S):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, S, H, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, KV, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, KV, 32), jnp.float32)
+    o_k = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=64, block_kv=64)
+    o_r = reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32)).astype(jnp.bfloat16)
+    o_k = flash_attention_fwd(q, k, v, block_q=64, block_kv=64)
+    o_r = reference_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=3e-2, atol=3e-2)

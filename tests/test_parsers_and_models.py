@@ -1,0 +1,133 @@
+"""Units for the dry-run HLO parsers and the analytic roofline cost model —
+these feed the §Roofline numbers, so they get their own tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.dryrun import (
+    _computation_multipliers,
+    _group_size,
+    _shape_bytes,
+    _split_computations,
+    parse_collectives,
+)
+
+HLO = """
+HloModule jit_step, is_scheduled=true
+
+%body.1 (arg: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+  %arg = (s32[], f32[8,64]) parameter(0)
+  %ag = f32[8,64]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[8,64]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[16,16]<=[256]
+}
+
+%cond.1 (arg: (s32[], f32[8,64])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[8,64]) -> f32[8,64] {
+  %w = (s32[], f32[8,64]) while(%t), condition=%cond.1, body=%body.1
+  %ar2 = f32[4,4]{1,0} all-reduce(%z), channel_id=3, replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,64]") == 8 * 64 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("s32[]") == 4
+    assert _shape_bytes("pred[7]") == 7
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[16,16]<=[256]", 1) == 16
+    assert _group_size("replica_groups={{0,1,2,3}}", 1) == 4
+    assert _group_size("no groups here", 7) == 7
+
+
+def test_split_and_multipliers():
+    comps = _split_computations(HLO)
+    assert set(comps) == {"%body.1", "%cond.1", "ENTRY"}
+    mult = _computation_multipliers(comps)
+    assert mult["ENTRY"] == 1.0
+    assert mult["%body.1"] == 12.0  # while trip count from the condition
+
+
+def test_parse_collectives_trip_scaled():
+    out = parse_collectives(HLO, default_group=16)
+    b = 8 * 64 * 4
+    frac = 15 / 16
+    # in-loop: (AG + 2x AR) x 12 trips; entry: one 4-group AR of 64 bytes
+    want = 12 * (b * frac + 2 * b * frac) + 2 * 64 * (3 / 4)
+    assert abs(out["total_wire_bytes"] - want) / want < 1e-6
+    assert out["total_wire_bytes_bf16eq"] == out["total_wire_bytes"] / 2
+
+
+# ---------------------------------------------------------------- flops model
+
+from benchmarks.flops_model import cell_cost
+from repro.configs import SHAPE_BY_NAME, get_config
+
+
+def test_flops_model_train_close_to_6nd():
+    """For a dense model the analytic total should be within ~2.5x of
+    6*N*D (extra = attention square, remat, optimizer)."""
+    cfg = get_config("tinyllama-1.1b")
+    cell = SHAPE_BY_NAME["train_4k"]
+    c = cell_cost(cfg, cell, n_devices=256, dp=256)
+    total = c.flops * 256
+    assert c.model_flops < total < 4 * c.model_flops
+
+
+def test_flops_model_modes_ordering():
+    """decode << prefill < train per device for the same arch."""
+    cfg = get_config("qwen3-14b")
+    tr = cell_cost(cfg, SHAPE_BY_NAME["train_4k"], 256, 256).flops
+    pf = cell_cost(cfg, SHAPE_BY_NAME["prefill_32k"], 256, 16).flops
+    dc = cell_cost(cfg, SHAPE_BY_NAME["decode_32k"], 256, 16).flops
+    assert dc < pf < tr
+
+
+def test_moe_model_flops_uses_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    c = cell_cost(cfg, SHAPE_BY_NAME["train_4k"], 256, 16)
+    n_active = cfg.active_param_count()
+    assert abs(c.model_flops - 6 * n_active * 256 * 4096) / c.model_flops < 1e-6
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+# ------------------------------------------------------------------ data
+
+from repro.data.pipeline import DataConfig, batches, eval_accuracy, make_dataset
+
+
+@settings(max_examples=10, deadline=None)
+@given(task=st.sampled_from(["lm", "glue_proxy", "squad_proxy"]),
+       seed=st.integers(0, 100))
+def test_data_shapes_and_masking(task, seed):
+    cfg = DataConfig(task=task, vocab_size=512, seq_len=64, seed=seed)
+    b = next(iter(batches(cfg, 4, 1, seed=seed)))
+    assert b["tokens"].shape == (4, 64) and b["labels"].shape == (4, 64)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 512
+    labs = b["labels"]
+    assert (labs[labs >= 0] < 512).all()
+    assert (labs >= 0).any(), "no supervised positions"
+
+
+def test_lm_task_is_deterministic_per_latent_task():
+    cfg = DataConfig(task="lm", vocab_size=512, seq_len=32, n_latent_tasks=2,
+                     seed=1)
+    sampler = make_dataset(cfg)
+    rng = np.random.default_rng(0)
+    toks, labs = sampler(rng)
+    # next-token labels match the sequence shift
+    np.testing.assert_array_equal(labs[1:-1], toks[2:])
+
+
+def test_eval_accuracy_metric():
+    logits = np.zeros((1, 4, 8))
+    logits[0, :, 3] = 1.0
+    labels = np.array([[3, 3, -1, 5]])
+    assert eval_accuracy(logits, labels) == pytest.approx(2 / 3)

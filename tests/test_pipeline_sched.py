@@ -1,0 +1,87 @@
+"""Route-aware heuristic scheduler properties (paper eq. 9-11)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hardware import Capability
+from repro.core.pipeline import (
+    PipelinePlan,
+    SchedulerConfig,
+    Task,
+    comm_time,
+    plan_pipeline_split,
+    priority,
+    schedule,
+)
+
+END = Capability(gflop_budget=0.4, mem_budget_gb=16, net_gbps=0.3)
+CLOUD = Capability(gflop_budget=10.0, mem_budget_gb=80, net_gbps=0.3)
+
+
+def _tasks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Task(i, gflops=float(rng.uniform(0.1, 30)),
+             comm_bytes=float(rng.uniform(1e3, 1e7)))
+        for i in range(n)
+    ]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 30), seed=st.integers(0, 10),
+       beta=st.floats(0.0, 5.0))
+def test_end_load_threshold_respected(n, seed, beta):
+    """eq. 11: total end load never exceeds T_end."""
+    cfg = SchedulerConfig(beta=beta, t_end=40.0)
+    placements, stats = schedule(_tasks(n, seed), END, CLOUD, cfg)
+    assert stats["end_load"] <= cfg.t_end + 1e-9
+    assert stats["n_end"] + stats["n_cloud"] == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 30), seed=st.integers(0, 10))
+def test_local_tasks_meet_priority_threshold(n, seed):
+    """eq. 11: every task placed on the end has P(t) >= beta."""
+    cfg = SchedulerConfig(beta=1.0, t_end=100.0)
+    placements, _ = schedule(_tasks(n, seed), END, CLOUD, cfg)
+    for p in placements:
+        if p.location == "end":
+            assert p.priority >= cfg.beta
+
+
+def test_priority_ratio_eq10():
+    t = Task(0, gflops=10.0, comm_bytes=1e6)
+    ct = comm_time(t, 0.3)
+    assert abs(priority(t, ct, 1e-6) - 10.0 / (ct + 1e-6)) < 1e-6
+
+
+def test_objective_no_worse_than_all_cloud():
+    """The greedy schedule's eq. 9 objective never exceeds the all-cloud
+    placement's objective."""
+    cfg = SchedulerConfig(beta=0.0, t_end=1e9)
+    tasks = _tasks(20, 3)
+    _, stats = schedule(tasks, END, CLOUD, cfg)
+    all_cloud = sum(
+        cfg.alpha * (t.gflops / (CLOUD.gflop_budget * 1e3))
+        + (1 - cfg.alpha) * comm_time(t, END.net_gbps)
+        for t in tasks
+    )
+    assert stats["objective"] <= all_cloud + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_layers=st.integers(1, 24), seed=st.integers(0, 5),
+       ratio=st.sampled_from([0.1, 0.5, 1.0]))
+def test_pipeline_split_bounds(n_layers, seed, ratio):
+    rng = np.random.default_rng(seed)
+    gfl = list(rng.uniform(0.5, 5.0, n_layers))
+    plan = plan_pipeline_split(gfl, 1e6, END, CLOUD, compression_ratio=ratio)
+    assert 0 <= plan.split_layer <= n_layers
+    assert plan.est_step_time_s <= plan.est_latency_s + 1e-12
+
+
+def test_compression_never_hurts_comm():
+    gfl = [2.0] * 12
+    p_raw = plan_pipeline_split(gfl, 1e7, END, CLOUD, compression_ratio=1.0)
+    p_cmp = plan_pipeline_split(gfl, 1e7, END, CLOUD, compression_ratio=0.1)
+    assert p_cmp.est_comm_time_s <= p_raw.est_comm_time_s + 1e-9

@@ -1,0 +1,137 @@
+"""Serving engine (continuous batching) + end-cloud pipeline."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CompressionConfig, get_config, smoke_config
+from repro.core.hardware import PROFILES, DeviceState
+from repro.models.model import build_model
+from repro.serving.endcloud import EndCloudPipeline, split_block_params
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = smoke_config(get_config("tinyllama-1.1b")).replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_engine_completes_all_requests(tiny_model):
+    model, params = tiny_model
+    eng = ServingEngine(model, params, max_batch=4, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(i, rng.integers(0, 500, size=rng.integers(4, 16)).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(9)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 9
+    for r in done:
+        assert len(r.generated) == 6
+        assert r.finish_time >= r.submit_time
+
+
+def test_engine_matches_sequential_decode(tiny_model):
+    """Tokens from the batched engine == tokens from naive prefill+decode."""
+    model, params = tiny_model
+    prompt = np.arange(10, 22).astype(np.int32)
+
+    lg, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                              max_len=64)
+    want = [int(jnp.argmax(lg[0]))]
+    for _ in range(4):
+        tok = jnp.asarray([[want[-1]]], jnp.int32)
+        lg2, cache = model.decode_step(params, tok, cache)
+        want.append(int(jnp.argmax(lg2[0])))
+
+    eng = ServingEngine(model, params, max_batch=3, max_len=64)
+    req = Request(0, prompt, max_new_tokens=5)
+    eng.submit(req)
+    # distractor requests sharing the batch
+    eng.submit(Request(1, (prompt * 3) % 500, max_new_tokens=5))
+    eng.run()
+    assert req.generated == want
+
+
+def test_eos_terminates(tiny_model):
+    model, params = tiny_model
+    eng = ServingEngine(model, params, max_batch=2, max_len=64)
+    prompt = np.arange(5).astype(np.int32)
+    lg, _ = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                          max_len=64)
+    first = int(jnp.argmax(lg[0]))
+    req = Request(0, prompt, max_new_tokens=50, eos_id=first)
+    eng.submit(req)
+    eng.run()
+    assert len(req.generated) == 1 and req.generated[0] == first
+
+
+def test_split_block_params():
+    cfg = smoke_config(get_config("tinyllama-1.1b")).replace(num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    end, cloud = split_block_params(params, 1)
+    leaf_e = jax.tree.leaves(end["blocks"])[0]
+    leaf_c = jax.tree.leaves(cloud["blocks"])[0]
+    assert leaf_e.shape[0] == 1 and leaf_c.shape[0] == 3
+    assert "lm_head" in cloud and "embed" in end
+
+
+@pytest.mark.parametrize("rank", [0, 32])
+def test_endcloud_pipeline_runs(rank):
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # a strong end tier entices the planner into an interior split, which is
+    # where boundary compression applies (with a weak end it correctly picks
+    # split=0 = all-cloud = nothing to compress)
+    pipe = EndCloudPipeline(
+        model, params,
+        end_profile=PROFILES["a100"],
+        cloud_profile=PROFILES["a100"],
+        compression_rank=rank,
+    )
+    tokens = jnp.arange(2 * 32, dtype=jnp.int32).reshape(2, 32) % 500
+    logits, m = pipe.run_batch(tokens)
+    assert logits.shape == (2, 32, cfg.padded_vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert 0 <= m["split"] <= cfg.block_repeat
+    # invariant: compression happens iff an interior boundary exists + rank>0
+    interior = 0 < m["split"] < cfg.block_repeat
+    assert m["compressed"] == bool(rank and interior)
+    if m["compressed"]:
+        assert m["boundary_bytes"] < 2 * 32 * cfg.d_model * 4
+    # end tier must never route to experts outside its hardware mask
+    if pipe.end_mask is not None:
+        assert int(pipe.end_mask.sum()) <= int(
+            cfg.moe.local_selection_cap * cfg.moe.num_experts
+        )
+
+
+def test_endcloud_full_rank_matches_single_tier():
+    """With split s and an orthonormal full-rank codec, the two-tier pipeline
+    must reproduce the single-tier forward (mask off: plenty capability)."""
+    cfg = smoke_config(get_config("tinyllama-1.1b")).replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = EndCloudPipeline(
+        model, params,
+        end_profile=PROFILES["a100"],  # strong end -> no expert masking
+        cloud_profile=PROFILES["a100"],
+        compression_rank=cfg.d_model,
+    )
+    tokens = jnp.arange(2 * 16, dtype=jnp.int32).reshape(2, 16) % 500
+    logits, _ = pipe.run_batch(tokens)
+    want, _ = model.train_logits(params, {"tokens": tokens}, train=False)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-1)

@@ -1,0 +1,115 @@
+"""End-cloud simulator invariants + policy ordering (paper figs. 5-8)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.switch_base import with_experts
+from repro.sim.policies import PolicyConfig, make_requests
+from repro.sim.simulator import (
+    Link,
+    SimRequest,
+    Stage,
+    poisson_arrivals,
+    simulate,
+)
+
+
+def test_latency_at_least_service_time():
+    reqs = [SimRequest(0, 0.0, [Stage("end", 0.5), Stage("cloud", 0.25)])]
+    m = simulate(reqs, link=Link(1.0))
+    assert m["latency_mean_s"] >= 0.75 - 1e-9
+
+
+def test_queueing_fifo_single_server():
+    reqs = [SimRequest(i, 0.0, [Stage("end", 1.0)]) for i in range(3)]
+    m = simulate(reqs, end_servers=1, link=Link(1.0))
+    assert abs(m["makespan_s"] - 3.0) < 1e-9
+
+
+def test_parallel_servers_cut_makespan():
+    reqs = lambda: [SimRequest(i, 0.0, [Stage("end", 1.0)]) for i in range(4)]
+    m1 = simulate(reqs(), end_servers=1, link=Link(1.0))
+    m4 = simulate(reqs(), end_servers=4, link=Link(1.0))
+    assert m4["makespan_s"] < m1["makespan_s"] / 2
+
+
+def test_pipeline_overlap_beats_serial():
+    """Two-stage requests overlap across requests (PO-ECC's pipelining)."""
+    def reqs():
+        return [
+            SimRequest(i, 0.0, [Stage("end", 1.0), Stage("cloud", 1.0)])
+            for i in range(4)
+        ]
+    m = simulate(reqs(), end_servers=1, cloud_servers=1, link=Link(1.0))
+    assert m["makespan_s"] <= 5.0 + 1e-9  # serial would be 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(fl=st.floats(0.0, 0.4), seed=st.integers(0, 5))
+def test_bandwidth_fluctuation_bounded(fl, seed):
+    link = Link(0.3, fluctuation=fl, seed=seed)
+    for t in np.linspace(0, 10, 50):
+        bw = link.bandwidth(float(t))
+        assert 0.3 * (1 - fl) - 1e-9 <= bw <= 0.3 * (1 + fl) + 1e-9
+
+
+def test_policy_ordering_matches_paper():
+    """EC2MoE >= BrownoutServe >= EdgeMoE in saturation throughput (E=64)."""
+    cfg = with_experts(64)
+    pc = PolicyConfig()
+    arr = poisson_arrivals(60, 300, 0)
+    tput = {}
+    for sysname in ("ec2moe", "brownoutserve", "edgemoe"):
+        m = simulate(
+            make_requests(sysname, cfg, pc, arr),
+            link=Link(0.3, fluctuation=0.2, seed=0),
+            end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+        )
+        tput[sysname] = m["throughput_rps"]
+    assert tput["ec2moe"] > tput["brownoutserve"] > tput["edgemoe"]
+
+
+def test_edgemoe_degrades_with_experts():
+    pc = PolicyConfig()
+    arr = poisson_arrivals(60, 200, 0)
+    caps = []
+    for E in (8, 64):
+        m = simulate(
+            make_requests("edgemoe", with_experts(E), pc, arr),
+            link=Link(0.3, seed=0),
+            end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+        )
+        caps.append(m["throughput_rps"])
+    assert caps[1] < caps[0]
+
+
+def test_ec2moe_load_adaptive_split():
+    """Route-aware planning: low offered load -> latency-lean plan (less end
+    compute per request than the saturation plan)."""
+    from repro.sim.policies import ec2moe_stages
+
+    cfg = with_experts(16)
+    pc = PolicyConfig()
+    sat = ec2moe_stages(cfg, pc, offered_rps=0)
+    low = ec2moe_stages(cfg, pc, offered_rps=2)
+    end_t = lambda stages: sum(s.service_s for s in stages if s.resource == "end")
+    assert end_t(low) <= end_t(sat)
+
+
+def test_ec2moe_less_jitter_sensitive():
+    cfg = with_experts(16)
+    pc = PolicyConfig()
+    arr = poisson_arrivals(6, 150, 0)
+    drop = {}
+    for sysname in ("ec2moe", "brownoutserve"):
+        lat = []
+        for fl in (0.0, 0.4):
+            m = simulate(
+                make_requests(sysname, cfg, pc, arr, offered_rps=6),
+                link=Link(0.3, fluctuation=fl, seed=0),
+                end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus,
+            )
+            lat.append(m["latency_mean_s"])
+        drop[sysname] = lat[1] / lat[0]
+    assert drop["ec2moe"] < drop["brownoutserve"]
