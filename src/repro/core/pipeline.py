@@ -148,6 +148,9 @@ def plan_pipeline_split(
     alpha: float = 0.5,
     end_servers: int = 1,
     cloud_servers: int = 1,
+    edge_boundary: bool = False,
+    pin_split: Optional[int] = None,
+    pin_compress: Optional[bool] = None,
 ) -> PipelinePlan:
     """Pick the layer split (and whether to compress the boundary) that
     minimizes the eq. 9 objective in its pipeline reading: weighted sum of
@@ -157,20 +160,34 @@ def plan_pipeline_split(
     cloud, the throughput bottleneck compares *per-fleet* stage rates
     (end_t / end_servers vs cloud_t / cloud_servers) while latency still
     uses per-request times.
+
+    ``edge_boundary=True`` models executors whose edge splits still ship an
+    activation (the streaming/one-shot engines keep the embedding on the end
+    and the LM head on the cloud, so d_model bytes cross the wire even at
+    split 0 or n — uncompressed, since the codec only applies interior).
+    ``pin_split`` / ``pin_compress`` restrict the search to one split /
+    compress choice (forced-split ablations, parity tests, and re-evaluating
+    an incumbent plan under measured conditions) so the estimates come from
+    the same formulas as the free search.
     """
     n = len(layer_gflops)
+    if pin_split is not None and not 0 <= pin_split <= n:
+        raise ValueError(f"pin_split={pin_split} outside [0, {n}]")
     best: Optional[PipelinePlan] = None
     best_score = None
-    for compress in (False, True):
-        ratio = compression_ratio if compress else 1.0
-        ct = boundary_bytes * ratio * 8.0 / max(end_cap.net_gbps * 1e9, 1e-9)
-        for split in range(0, n + 1):
+    splits = range(0, n + 1) if pin_split is None else (pin_split,)
+    compress_opts = (False, True) if pin_compress is None else (pin_compress,)
+    for compress in compress_opts:
+        for split in splits:
+            interior = 0 < split < n
+            ratio = compression_ratio if (compress and interior) else 1.0
+            ct = boundary_bytes * ratio * 8.0 / max(end_cap.net_gbps * 1e9, 1e-9)
             end_t = sum(layer_gflops[:split]) / max(end_cap.gflop_budget * 1e3, 1e-9)
             cloud_t = sum(layer_gflops[split:]) / max(
                 cloud_cap.gflop_budget * 1e3, 1e-9
             )
-            comm = ct if 0 < split < n else 0.0
-            plan = PipelinePlan(split, compress and 0 < split < n, end_t, cloud_t, comm)
+            comm = ct if (interior or edge_boundary) else 0.0
+            plan = PipelinePlan(split, compress and interior, end_t, cloud_t, comm)
             bottleneck = max(
                 end_t / max(end_servers, 1),
                 cloud_t / max(cloud_servers, 1),
@@ -181,3 +198,104 @@ def plan_pipeline_split(
                 best, best_score = plan, score
     assert best is not None
     return best
+
+
+# ---------------------------------------------------------------------------
+# Replanning (dynamic load and network — paper figs. 7-8)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BandwidthEstimator:
+    """EWMA estimate of the effective end<->cloud link rate.  Feed it
+    observed transfers (``observe(bytes, seconds)`` — the real-deployment
+    path, where wire times are measurable) or direct probe readings
+    (``observe_rate``, the in-process path the streaming engine's
+    ``observe_bandwidth`` uses); consumers replan when the estimate drifts
+    from the bandwidth the current plan was computed against."""
+
+    nominal_gbps: float
+    ewma: float = 0.3  # weight of the newest sample
+    _estimate: Optional[float] = None
+
+    def observe(self, nbytes: float, seconds: float) -> float:
+        if seconds > 0 and nbytes > 0:
+            return self.observe_rate(nbytes * 8.0 / seconds / 1e9)
+        return self.gbps
+
+    def observe_rate(self, gbps: float) -> float:
+        """Direct rate observation (e.g. from an external link probe)."""
+        if self._estimate is None:
+            self._estimate = gbps
+        else:
+            self._estimate = (1 - self.ewma) * self._estimate + self.ewma * gbps
+        return self.gbps
+
+    @property
+    def gbps(self) -> float:
+        return self._estimate if self._estimate is not None else self.nominal_gbps
+
+    def drift(self) -> float:
+        """Relative deviation of the estimate from nominal, in [0, inf)."""
+        return abs(self.gbps - self.nominal_gbps) / max(self.nominal_gbps, 1e-12)
+
+
+def should_replan(
+    current: PipelinePlan,
+    proposed: PipelinePlan,
+    *,
+    rel_threshold: float = 0.15,
+) -> bool:
+    """True when switching plans is worth a pipeline drain: the proposed
+    steady-state step time beats the current estimate by more than
+    ``rel_threshold``.  The threshold applies to split moves too — it is the
+    hysteresis that stops a noisy bandwidth estimate near a split tie from
+    thrashing the pipeline (every adoption costs a drain plus re-jit)."""
+    cur = max(current.est_step_time_s, 1e-12)
+    return (cur - proposed.est_step_time_s) / cur > rel_threshold
+
+
+def replan_pipeline(
+    current: PipelinePlan,
+    layer_gflops: Sequence[float],
+    boundary_bytes: float,
+    end_cap: Capability,
+    cloud_cap: Capability,
+    *,
+    measured_gbps: Optional[float] = None,
+    compression_ratio: float = 1.0,
+    alpha: float = 0.5,
+    rel_threshold: float = 0.15,
+    edge_boundary: bool = False,
+) -> Tuple[PipelinePlan, bool]:
+    """Re-run the split search against measured link/device conditions.
+
+    The incumbent is first *re-evaluated* under the same measured conditions
+    with its split AND compress choice pinned, so stale estimates computed
+    under old bandwidth never bias the comparison, and a compress toggle
+    must clear the hysteresis threshold exactly like a split move (both
+    cost a pipeline drain + re-jit).  Returns ``(plan, changed)``:
+    ``changed`` means adopt ``plan``; when False, ``plan`` is trace-identical
+    to the incumbent (same split, same compress flag) with refreshed
+    estimates.  ``measured_gbps`` overrides the capability's nominal
+    uplink — the measured-bandwidth feedback path.
+    """
+    if measured_gbps is not None:
+        end_cap = replace(end_cap, net_gbps=measured_gbps)
+    kwargs = dict(
+        compression_ratio=compression_ratio,
+        alpha=alpha,
+        edge_boundary=edge_boundary,
+    )
+    refreshed = plan_pipeline_split(
+        layer_gflops, boundary_bytes, end_cap, cloud_cap,
+        pin_split=current.split_layer,
+        pin_compress=current.compress_boundary,
+        **kwargs,
+    )
+    proposed = plan_pipeline_split(
+        layer_gflops, boundary_bytes, end_cap, cloud_cap, **kwargs
+    )
+    if should_replan(refreshed, proposed, rel_threshold=rel_threshold):
+        return proposed, True
+    return refreshed, False

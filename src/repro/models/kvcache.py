@@ -59,6 +59,57 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
     }
 
 
+def split_cache(cache: Dict, split: int) -> tuple:
+    """Split a stacked block cache by layer range: blocks ``[0, split)`` for
+    the end tier, ``[split, R)`` for the cloud tier (the streaming end-cloud
+    engine holds one sub-cache per tier).  Each side gets its own ``lengths``
+    vector — the tiers advance them independently as the pipeline steps.
+    """
+    end = {
+        "blocks": jax.tree.map(lambda l: l[:split], cache["blocks"]),
+        "lengths": cache["lengths"],
+    }
+    cloud = {
+        "blocks": jax.tree.map(lambda l: l[split:], cache["blocks"]),
+        "lengths": cache["lengths"],
+    }
+    return end, cloud
+
+
+def merge_cache(end_cache: Dict, cloud_cache: Dict) -> Dict:
+    """Inverse of :func:`split_cache`: re-stack the per-tier block caches
+    along the leading block axis (used at replan boundaries, when both tiers
+    are at the same ``lengths``)."""
+    blocks = jax.tree.map(
+        lambda a, b: jnp.concatenate([a, b], axis=0),
+        end_cache["blocks"],
+        cloud_cache["blocks"],
+    )
+    return {"blocks": blocks, "lengths": end_cache["lengths"]}
+
+
+def install_slot(batch_cache: Dict, slot: int, one_cache: Dict) -> Dict:
+    """Copy a single-request cache (batch dim 1) into slot ``slot`` of a
+    batched cache.  Block leaves are [R, B, W, ...]; the ring-buffer axis
+    (dim 2) is padded/truncated to the destination window."""
+
+    def copy_leaf(batch_leaf, one_leaf):
+        pad = batch_leaf.shape[2] - one_leaf.shape[2] if batch_leaf.ndim > 2 else 0
+        src = one_leaf
+        if pad > 0:
+            width = [(0, 0)] * src.ndim
+            width[2] = (0, pad)
+            src = jnp.pad(src, width)
+        elif pad < 0:
+            src = jax.lax.slice_in_dim(src, 0, batch_leaf.shape[2], axis=2)
+        return batch_leaf.at[:, slot].set(src[:, 0])
+
+    return {
+        "blocks": jax.tree.map(copy_leaf, batch_cache["blocks"], one_cache["blocks"]),
+        "lengths": batch_cache["lengths"].at[slot].set(one_cache["lengths"][0]),
+    }
+
+
 def ring_key_positions(lengths: jax.Array, W: int) -> jax.Array:
     """Position held by each ring slot AFTER the token at ``lengths`` (the
     current query) has been written.  lengths: [B] -> [B, W]."""

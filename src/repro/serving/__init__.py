@@ -1,4 +1,12 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.common import LinkStats, Request
 from repro.serving.endcloud import EndCloudPipeline
+from repro.serving.engine import ServingEngine
+from repro.serving.stream import EndCloudServingEngine
 
-__all__ = ["Request", "ServingEngine", "EndCloudPipeline"]
+__all__ = [
+    "Request",
+    "LinkStats",
+    "ServingEngine",
+    "EndCloudPipeline",
+    "EndCloudServingEngine",
+]

@@ -1,0 +1,194 @@
+"""Shared serving infrastructure: requests, slot bookkeeping, link metering.
+
+Both the single-tier continuous-batching engine (``serving.engine``) and the
+streaming end-cloud decode engine (``serving.stream``) are slot machines: a
+fixed decode batch of ``max_batch`` slots, finished requests free their slot,
+waiting requests are prefilled into free slots.  ``SlotEngineBase`` owns that
+lifecycle; subclasses provide the actual prefill/decode compute.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1 = never
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_time is not None
+
+
+@dataclass
+class LinkStats:
+    """Meter for the end<->cloud link: bytes on the wire in each direction
+    plus modeled wire seconds.  In a real two-host deployment the measured
+    (bytes, seconds) pairs are what you feed to
+    ``core.pipeline.BandwidthEstimator.observe`` for replanning."""
+
+    bytes_up: int = 0
+    bytes_down: int = 0
+    transfers: int = 0
+    seconds_up: float = 0.0
+
+    def transfer_time(self, nbytes: int, gbps: float) -> float:
+        return nbytes * 8.0 / max(gbps * 1e9, 1e-9)
+
+    def record_up(self, nbytes: int, gbps: float) -> float:
+        """Meter an end->cloud transfer; returns its modeled wire time."""
+        t = self.transfer_time(nbytes, gbps)
+        self.bytes_up += nbytes
+        self.transfers += 1
+        self.seconds_up += t
+        return t
+
+    def record_down(self, nbytes: int) -> None:
+        """Meter a cloud->end transfer (token-id feedback — bytes only; at
+        ~4 bytes/token its wire time is noise next to the boundary uplink)."""
+        self.bytes_down += nbytes
+
+    @property
+    def measured_gbps(self) -> float:
+        """Average realized uplink rate over everything metered so far."""
+        return self.bytes_up * 8.0 / max(self.seconds_up * 1e9, 1e-12)
+
+
+class StageTimeline:
+    """Resource-occupancy clock for the decode pipeline (same queueing model
+    as ``sim.simulator``: a stage starts at max(input-ready, resource-free)).
+
+    The streaming engine feeds it measured compute times and modeled link
+    times; the resulting makespan is the *pipelined* schedule, while
+    ``serial_s`` accumulates the same stages laid end to end — the spread
+    between the two is exactly the overlap the double buffer buys.
+    """
+
+    def __init__(self, resources: Sequence[str] = ("end", "link", "cloud")):
+        self.free_at: Dict[str, float] = {r: 0.0 for r in resources}
+        self.busy_s: Dict[str, float] = {r: 0.0 for r in resources}
+        self.serial_s: float = 0.0
+
+    def occupy(self, resource: str, ready_s: float, service_s: float) -> float:
+        start = max(ready_s, self.free_at[resource])
+        end = start + service_s
+        self.free_at[resource] = end
+        self.busy_s[resource] += service_s
+        self.serial_s += service_s
+        return end
+
+    @property
+    def makespan_s(self) -> float:
+        return max(self.free_at.values())
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "pipelined_s": self.makespan_s,
+            "serial_s": self.serial_s,
+            **{f"busy_{r}_s": t for r, t in self.busy_s.items()},
+        }
+
+
+class SlotEngineBase:
+    """Slot lifecycle shared by the serving engines.
+
+    Subclasses implement ``_prefill_into_slot(slot, req) -> (int, payload)``
+    (run prefill, return the first generated token plus whatever cache state
+    the slot needs) and ``_install_slot(slot, payload)`` (copy that state
+    into the batch cache — called only when the request actually continues
+    past prefill, so requests that finish on their first token skip the
+    copy) and drive decode via ``step``; the base provides admission, token
+    harvesting, and the run loop.
+    """
+
+    def __init__(self, max_batch: int, clock: Optional[Callable[[], float]] = None):
+        import time as _time
+
+        self.max_batch = max_batch
+        self.clock = clock or _time.monotonic
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self._next_token = np.zeros((max_batch, 1), np.int32)
+        self._active = np.zeros((max_batch,), bool)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request):
+        req.submit_time = self.clock()
+        self.waiting.append(req)
+
+    def _admittable(self, slot: int) -> bool:
+        """Hook: may a waiting request be admitted into this free slot now?"""
+        return True
+
+    def _admit(self):
+        """Prefill waiting requests into free slots."""
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            if not self._admittable(slot):
+                continue
+            req = self.waiting.pop(0)
+            tok, payload = self._prefill_into_slot(slot, req)
+            req.generated.append(tok)
+            if req.first_token_time is None:
+                req.first_token_time = self.clock()
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.finish_time = self.clock()
+                self.finished.append(req)
+                continue
+            self._install_slot(slot, payload)
+            self.slots[slot] = req
+            self._next_token[slot, 0] = tok
+            self._active[slot] = True
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        raise NotImplementedError
+
+    def _install_slot(self, slot: int, payload):
+        raise NotImplementedError
+
+    def _harvest(self, next_ids: np.ndarray, slot_range=None) -> int:
+        """Record one decoded token per active slot; retire finished slots.
+        ``next_ids`` is indexed by absolute slot id."""
+        n_emitted = 0
+        for slot in slot_range if slot_range is not None else range(self.max_batch):
+            req = self.slots[slot]
+            if req is None:
+                continue
+            tok = int(next_ids[slot])
+            req.generated.append(tok)
+            n_emitted += 1
+            self._next_token[slot, 0] = tok
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.finish_time = self.clock()
+                self.finished.append(req)
+                self.slots[slot] = None
+                self._active[slot] = False
+        return n_emitted
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> int:
+        raise NotImplementedError
+
+    def run(self, max_steps: int = 10_000):
+        """Run until all submitted requests finish."""
+        for _ in range(max_steps):
+            if not self.waiting and not self._active.any():
+                break
+            self.step()
+        return self.finished

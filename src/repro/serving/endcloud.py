@@ -12,17 +12,24 @@ Both tiers execute in-process (this container has one device) but through
 separate param subtrees and separate jitted functions, so the same code
 drives a real two-host deployment by placing each tier's params on its own
 jax process.
+
+Two executors share the tier setup built by :func:`plan_tiers`:
+
+  * ``EndCloudPipeline`` (here): one-shot full-sequence batches
+    (prefill-style), the paper's fig. 5-6 measurement mode;
+  * ``EndCloudServingEngine`` (``serving.stream``): continuous-batching
+    token-level decode with the boundary double-buffered and replanned
+    under drift — the steady-state serving mode.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import compression as comp
 from repro.core.hardware import Capability, DeviceProfile, DeviceState, capability
@@ -31,10 +38,49 @@ from repro.core.selection import end_mask_for
 from repro.models import attention as attn_mod
 from repro.models import transformer
 from repro.models.model import Model
+from repro.serving.common import LinkStats
+
+__all__ = [
+    "LinkStats",
+    "TierPlan",
+    "plan_tiers",
+    "end_mask_from_state",
+    "split_block_params",
+    "EndCloudPipeline",
+]
+
+
+def end_mask_from_state(
+    cfg,
+    end_profile: DeviceProfile,
+    end_state: DeviceState,
+    *,
+    selection_eps: float = 1.0,
+) -> Optional[jax.Array]:
+    """Hardware-aware local expert mask (eq. 2-4) for the end tier; None for
+    dense models.  Single derivation shared by the initial tier planning and
+    replan-time ``DeviceState`` updates."""
+    if cfg.moe is None:
+        return None
+    mask_np = end_mask_for(
+        end_profile,
+        end_state,
+        cfg.d_model,
+        cfg.moe.d_ff_expert,
+        cfg.moe.num_experts,
+        cfg.moe.num_groups,
+        gated=cfg.ffn_gated,
+        eps=selection_eps,
+        selection_cap=cfg.moe.local_selection_cap,
+    )
+    return jnp.asarray(mask_np)
 
 
 def split_block_params(params: Dict, split: int) -> Tuple[Dict, Dict]:
-    """Split stacked block params [R, ...] into ([0,split), [split,R))."""
+    """Split stacked block params [R, ...] into ([0,split), [split,R)).
+
+    The end tier owns the embedding (it sees raw tokens); the cloud tier
+    owns everything else, including the final norm and LM head."""
     end_blocks = jax.tree.map(lambda l: l[:split], params["blocks"])
     cloud_blocks = jax.tree.map(lambda l: l[split:], params["blocks"])
     end = {"embed": params["embed"], "blocks": end_blocks}
@@ -43,14 +89,97 @@ def split_block_params(params: Dict, split: int) -> Tuple[Dict, Dict]:
     return end, cloud
 
 
-@dataclass
-class LinkStats:
-    bytes_up: int = 0
-    bytes_down: int = 0
-    transfers: int = 0
+def block_gflops(cfg) -> float:
+    """Forward GFLOP per token per *block* — one repeat of the full layer
+    pattern, the unit the split search slices at (embedding/head excluded)."""
+    n = cfg.active_param_count() - 2 * cfg.vocab_size * cfg.d_model
+    per_block = max(n, 1) / max(cfg.block_repeat, 1)
+    return 2.0 * per_block * 1e-9
 
-    def transfer_time(self, nbytes: int, gbps: float) -> float:
-        return nbytes * 8.0 / max(gbps * 1e9, 1e-9)
+
+@dataclass
+class TierPlan:
+    """Everything the split needs beyond raw params: capabilities (eq. 3),
+    the end tier's hardware-aware expert mask (eq. 2-4), the boundary codec
+    (eq. 8), and the route-aware pipeline plan (eq. 9-11) together with the
+    planning inputs it was computed from (so replanning re-runs the search
+    with exactly the same cost model)."""
+
+    end_cap: Capability
+    cloud_cap: Capability
+    end_mask: Optional[jax.Array]
+    codec: Optional[Dict]
+    plan: PipelinePlan
+    alpha: float
+    layer_gflops: Tuple[float, ...] = ()
+    boundary_bytes: float = 0.0
+    compression_ratio: float = 1.0
+
+    @property
+    def split(self) -> int:
+        return self.plan.split_layer
+
+    @property
+    def compress(self) -> bool:
+        return self.codec is not None and self.plan.compress_boundary
+
+
+def plan_tiers(
+    model: Model,
+    *,
+    end_profile: DeviceProfile,
+    cloud_profile: DeviceProfile,
+    end_state: Optional[DeviceState] = None,
+    codec_params: Optional[Dict] = None,
+    compression_rank: int = 0,
+    alpha: float = 0.5,
+    selection_eps: float = 1.0,
+    force_split: Optional[int] = None,
+) -> TierPlan:
+    """Build the shared tier context for both end-cloud executors.
+
+    ``force_split`` pins the split point (used by parity tests and
+    ablations).  Measured-bandwidth feedback at replan time goes through
+    ``core.pipeline.replan_pipeline(measured_gbps=...)``, not here."""
+    cfg = model.cfg
+    end_state = end_state or DeviceState()
+    end_cap = capability(end_profile, end_state)
+    cloud_cap = capability(cloud_profile, DeviceState())
+
+    end_mask = end_mask_from_state(
+        cfg, end_profile, end_state, selection_eps=selection_eps
+    )
+
+    # Codec (eq. 8).
+    codec = codec_params
+    if codec is None and compression_rank > 0:
+        codec = comp.init_lowrank_1d(
+            jax.random.PRNGKey(7), cfg.d_model, compression_rank
+        )
+    rank = codec["enc"].shape[1] if codec is not None else 0
+
+    # Route-aware split (eq. 9-11 pipeline reading).  Both executors keep
+    # the embedding on the end and the LM head on the cloud, so an
+    # activation crosses the wire at every split (edge_boundary).
+    boundary_bytes = float(cfg.d_model * 2)  # per token, bf16
+    ratio = comp.compression_ratio(cfg.d_model, rank) if codec is not None else 1.0
+    layer_gflops = (block_gflops(cfg),) * cfg.block_repeat
+    plan = plan_pipeline_split(
+        layer_gflops,
+        boundary_bytes,
+        end_cap,
+        cloud_cap,
+        compression_ratio=ratio,
+        alpha=alpha,
+        edge_boundary=True,
+        pin_split=force_split,
+    )
+    return TierPlan(
+        end_cap, cloud_cap, end_mask, codec, plan, alpha,
+        layer_gflops=layer_gflops,
+        boundary_bytes=boundary_bytes,
+        compression_ratio=ratio,
+    )
 
 
 class EndCloudPipeline:
@@ -77,61 +206,45 @@ class EndCloudPipeline:
         self.end_state = end_state or DeviceState()
         self.link = LinkStats()
 
-        cfg = self.cfg
-        self.end_cap = capability(end_profile, self.end_state)
-        self.cloud_cap = capability(cloud_profile, DeviceState())
-
-        # Hardware-aware local expert mask (eq. 2-4) for the end tier.
-        self.end_mask = None
-        if cfg.moe is not None:
-            mask_np = end_mask_for(
-                end_profile,
-                self.end_state,
-                cfg.d_model,
-                cfg.moe.d_ff_expert,
-                cfg.moe.num_experts,
-                cfg.moe.num_groups,
-                gated=cfg.ffn_gated,
-                eps=selection_eps,
-                selection_cap=cfg.moe.local_selection_cap,
-            )
-            self.end_mask = jnp.asarray(mask_np)
-
-        # Codec (eq. 8).
-        self.codec = codec_params
-        if self.codec is None and compression_rank > 0:
-            self.codec = comp.init_lowrank_1d(
-                jax.random.PRNGKey(7), cfg.d_model, compression_rank
-            )
-
-        # Route-aware split (eq. 9-11 pipeline reading).
-        per_block_gflops = self._block_gflops()
-        boundary_bytes = float(cfg.d_model * 2)  # per token, bf16
-        ratio = (
-            comp.compression_ratio(cfg.d_model, compression_rank)
-            if self.codec is not None
-            else 1.0
-        )
-        self.plan: PipelinePlan = plan_pipeline_split(
-            [per_block_gflops] * cfg.block_repeat,
-            boundary_bytes,
-            self.end_cap,
-            self.cloud_cap,
-            compression_ratio=ratio,
+        self.tiers = plan_tiers(
+            model,
+            end_profile=end_profile,
+            cloud_profile=cloud_profile,
+            end_state=self.end_state,
+            codec_params=codec_params,
+            compression_rank=compression_rank,
             alpha=alpha,
+            selection_eps=selection_eps,
         )
-        self.split = self.plan.split_layer
         self.end_params, self.cloud_params = split_block_params(params, self.split)
         self._jit_end = jax.jit(self._end_forward)
         self._jit_cloud = jax.jit(self._cloud_forward)
 
-    # -- cost model -----------------------------------------------------------
+    # -- everything the split derives delegates to self.tiers -----------------
 
-    def _block_gflops(self) -> float:
-        cfg = self.cfg
-        n = cfg.active_param_count() - 2 * cfg.vocab_size * cfg.d_model
-        per_layer = max(n, 1) / max(cfg.num_layers, 1)
-        return 2.0 * per_layer * 1e-9  # fwd GFLOP per token per block-layer
+    @property
+    def end_cap(self) -> Capability:
+        return self.tiers.end_cap
+
+    @property
+    def cloud_cap(self) -> Capability:
+        return self.tiers.cloud_cap
+
+    @property
+    def end_mask(self):
+        return self.tiers.end_mask
+
+    @property
+    def codec(self) -> Optional[Dict]:
+        return self.tiers.codec
+
+    @property
+    def plan(self) -> PipelinePlan:
+        return self.tiers.plan
+
+    @property
+    def split(self) -> int:
+        return self.tiers.plan.split_layer
 
     # -- tier forwards ----------------------------------------------------------
 
@@ -157,7 +270,7 @@ class EndCloudPipeline:
 
         if self.split > 0:
             x, _ = jax.lax.scan(block_fn, x, end_params["blocks"])
-        if self.codec is not None and self.plan.compress_boundary:
+        if self.tiers.compress:
             x = comp.encode_1d(self.codec, x)
         return x
 
@@ -170,11 +283,7 @@ class EndCloudPipeline:
         angles = attn_mod.rope_angles(
             pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
         )
-        x = (
-            comp.decode_1d(self.codec, z)
-            if self.codec is not None and self.plan.compress_boundary
-            else z
-        )
+        x = comp.decode_1d(self.codec, z) if self.tiers.compress else z
         x = x.astype(jnp.dtype(cfg.dtype))
 
         def block_fn(carry, block_params):
@@ -200,9 +309,7 @@ class EndCloudPipeline:
         t_end = time.monotonic() - t0
 
         nbytes = z.size * z.dtype.itemsize
-        self.link.bytes_up += nbytes
-        self.link.transfers += 1
-        t_comm = self.link.transfer_time(nbytes, self.end_cap.net_gbps)
+        t_comm = self.link.record_up(nbytes, self.end_cap.net_gbps)
 
         t1 = time.monotonic()
         logits = self._jit_cloud(self.cloud_params, z, None)
@@ -214,5 +321,5 @@ class EndCloudPipeline:
             "t_cloud_s": t_cloud,
             "boundary_bytes": nbytes,
             "split": self.split,
-            "compressed": bool(self.codec is not None and self.plan.compress_boundary),
+            "compressed": self.tiers.compress,
         }

@@ -8,41 +8,27 @@ together — the standard continuous-batching pattern, expressed with one
 jitted decode step over the whole cache.
 
 Single-slot prefill keeps the implementation simple (prefill batch = 1 via
-padding to the slot's prompt bucket); the end-cloud pipeline wraps this
-engine per tier.
+padding to the slot's prompt bucket).  Slot admission/harvesting lives in
+``serving.common.SlotEngineBase``, shared with the streaming end-cloud
+engine (``serving.stream``).
 """
 
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import kvcache
 from repro.models.model import Model
+from repro.serving.common import Request, SlotEngineBase
+
+__all__ = ["Request", "ServingEngine"]
 
 
-@dataclass
-class Request:
-    request_id: int
-    prompt: np.ndarray  # [S] int32
-    max_new_tokens: int = 16
-    eos_id: int = -1  # -1 = never
-    # filled by the engine
-    generated: List[int] = field(default_factory=list)
-    submit_time: float = 0.0
-    first_token_time: Optional[float] = None
-    finish_time: Optional[float] = None
-
-    @property
-    def done(self) -> bool:
-        return self.finish_time is not None
-
-
-class ServingEngine:
+class ServingEngine(SlotEngineBase):
     def __init__(
         self,
         model: Model,
@@ -53,25 +39,15 @@ class ServingEngine:
         expert_mask=None,
         clock: Optional[Callable[[], float]] = None,
     ):
+        super().__init__(max_batch, clock)
         self.model = model
         self.params = params
-        self.max_batch = max_batch
         self.max_len = max_len
         self.expert_mask = expert_mask
-        import time as _time
 
-        self.clock = clock or _time.monotonic
-
-        from repro.models.kvcache import init_cache
-
-        self.cache = init_cache(
+        self.cache = kvcache.init_cache(
             model.cfg, max_batch, max_len, jnp.dtype(model.cfg.dtype)
         )
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.waiting: List[Request] = []
-        self.finished: List[Request] = []
-        self._next_token = np.zeros((max_batch, 1), np.int32)
-        self._active = np.zeros((max_batch,), bool)
 
         self._decode = jax.jit(
             lambda p, t, c: model.decode_step(p, t, c, expert_mask=expert_mask)
@@ -84,51 +60,14 @@ class ServingEngine:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, req: Request):
-        req.submit_time = self.clock()
-        self.waiting.append(req)
+    def _prefill_into_slot(self, slot: int, req: Request):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, pcache = self._prefill_one(self.params, {"tokens": tokens})
+        return int(jnp.argmax(logits[0])), pcache
 
-    def _admit(self):
-        """Prefill waiting requests into free slots."""
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.waiting:
-                continue
-            req = self.waiting.pop(0)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, pcache = self._prefill_one(self.params, {"tokens": tokens})
-            tok = int(jnp.argmax(logits[0]))
-            req.generated.append(tok)
-            if req.first_token_time is None:
-                req.first_token_time = self.clock()
-            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
-                req.finish_time = self.clock()
-                self.finished.append(req)
-                continue
-            # copy the single-request cache into this slot of the batch cache
-            self._install_slot(slot, pcache)
-            self.slots[slot] = req
-            self._next_token[slot, 0] = tok
-            self._active[slot] = True
-
-    def _install_slot(self, slot: int, pcache: Dict):
-        def copy_leaf(batch_leaf, one_leaf):
-            # block-cache leaves are [R, B, ...] (batch at dim 1)
-            pad = batch_leaf.shape[2] - one_leaf.shape[2] if batch_leaf.ndim > 2 else 0
-            src = one_leaf
-            if pad > 0:
-                width = [(0, 0)] * src.ndim
-                width[2] = (0, pad)
-                src = jnp.pad(src, width)
-            elif pad < 0:
-                src = jax.lax.slice_in_dim(src, 0, batch_leaf.shape[2], axis=2)
-            return batch_leaf.at[:, slot].set(src[:, 0])
-
-        self.cache["blocks"] = jax.tree.map(
-            copy_leaf, self.cache["blocks"], pcache["blocks"]
-        )
-        self.cache["lengths"] = self.cache["lengths"].at[slot].set(
-            pcache["lengths"][0]
-        )
+    def _install_slot(self, slot: int, pcache):
+        # copy the single-request cache into this slot of the batch cache
+        self.cache = kvcache.install_slot(self.cache, slot, pcache)
 
     # -- stepping -------------------------------------------------------------
 
@@ -141,27 +80,4 @@ class ServingEngine:
         tokens = jnp.asarray(self._next_token)
         logits, self.cache = self._decode(self.params, tokens, self.cache)
         next_ids = np.asarray(jnp.argmax(logits, -1))
-        n_emitted = 0
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            tok = int(next_ids[slot])
-            req.generated.append(tok)
-            n_emitted += 1
-            self._next_token[slot, 0] = tok
-            hit_eos = tok == req.eos_id
-            # +? first token came from prefill; budget counts generated only
-            if hit_eos or len(req.generated) >= req.max_new_tokens:
-                req.finish_time = self.clock()
-                self.finished.append(req)
-                self.slots[slot] = None
-                self._active[slot] = False
-        return n_emitted
-
-    def run(self, max_steps: int = 10_000):
-        """Run until all submitted requests finish."""
-        for _ in range(max_steps):
-            if not self.waiting and not self._active.any():
-                break
-            self.step()
-        return self.finished
+        return self._harvest(next_ids)

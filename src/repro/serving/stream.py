@@ -1,0 +1,506 @@
+"""Streaming end-cloud decode engine (tentpole of the PO-ECC reproduction).
+
+``EndCloudServingEngine`` is the continuous-batching ``ServingEngine``
+re-expressed as a *two-tier token pipeline*: each decode step is split at
+the route-aware plan's block boundary (eq. 9-11) — blocks ``[0, split)`` and
+the embedding run on the end tier (with the hardware-aware expert mask,
+eq. 2-4), the boundary activation is low-rank compressed (eq. 8) and metered
+through ``LinkStats``, and blocks ``[split, R)`` plus the LM head run on the
+cloud tier.  The per-slot KV cache is split the same way
+(``kvcache.split_cache``): the end tier holds the ring buffers of its
+blocks, the cloud holds the rest, and each advances its own ``lengths``.
+
+**Pipelining.**  The decode batch is partitioned into ``n_groups``
+interleaved micro-batch groups, each with its own boundary buffer (the
+double buffer).  A group alternates between two phases: its end-step writes
+the boundary buffer, and — one engine tick later — the cloud-step drains it
+and feeds the next token back.  While group A's boundary is in flight /
+being decoded on the cloud, group B occupies the end tier, so in steady
+state every stage is busy every tick and the per-step time approaches
+``max(t_end, t_comm, t_cloud)`` (``PipelinePlan.est_step_time_s``) instead
+of the serial sum.  Stage compute times are *measured* on this host, link
+times are modeled from the metered bytes and the (possibly drifting)
+bandwidth, and the overlap is accounted by ``StageTimeline`` — the same
+resource-occupancy model as ``sim.simulator``, so the schedule is exactly
+what a two-host deployment would realize with these stage times.
+
+**Replanning.**  Link measurements arrive through ``observe_bandwidth``
+(an external probe, or — in a real two-host deployment — per-transfer
+(bytes, seconds) samples fed to ``BandwidthEstimator.observe``; in-process
+the wire is modeled, so there is nothing to self-measure) and device drift
+through ``update_device_state``, which also re-derives the end tier's
+expert mask from the new state vector (eq. 2-4).  Either trigger re-runs
+the split search against measured conditions
+(``core.pipeline.replan_pipeline``).  A changed plan or mask is applied at
+the next safe point — all boundary buffers drained, both tiers at equal
+``lengths`` — by merging the per-tier caches, re-splitting params and
+caches at the new block boundary, and rebuilding the stage functions.
+In-flight generations continue bit-exactly across a pure re-split (the
+merge/re-split is a relayout; a mask change intentionally alters routing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.hardware import DeviceProfile, DeviceState, capability
+from repro.core.pipeline import BandwidthEstimator, PipelinePlan, replan_pipeline
+from repro.models import attention as attn_mod
+from repro.models import kvcache, transformer
+from repro.models.model import Model
+from repro.serving.common import LinkStats, Request, SlotEngineBase, StageTimeline
+from repro.serving.endcloud import (
+    TierPlan,
+    end_mask_from_state,
+    plan_tiers,
+    split_block_params,
+)
+
+__all__ = ["EndCloudServingEngine"]
+
+_KEEP = object()  # sentinel: "no pending mask change"
+
+
+def _masks_equal(a, b) -> bool:
+    if a is None or b is None:
+        return a is b
+    return bool(jnp.array_equal(a, b))
+
+
+class EndCloudServingEngine(SlotEngineBase):
+    def __init__(
+        self,
+        model: Model,
+        params: Dict,
+        *,
+        end_profile: DeviceProfile,
+        cloud_profile: DeviceProfile,
+        end_state: Optional[DeviceState] = None,
+        codec_params: Optional[Dict] = None,  # 1-D low-rank codec {"enc","dec"}
+        compression_rank: int = 0,
+        alpha: float = 0.5,
+        selection_eps: float = 1.0,
+        max_batch: int = 8,
+        max_len: int = 512,
+        n_groups: int = 2,
+        force_split: Optional[int] = None,
+        replan_threshold: float = 0.15,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        super().__init__(max_batch, clock)
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_len = max_len
+        self.end_profile = end_profile
+        self.cloud_profile = cloud_profile
+        self.end_state = end_state or DeviceState()
+        self.selection_eps = selection_eps
+        self.replan_threshold = replan_threshold
+
+        self.tiers: TierPlan = plan_tiers(
+            model,
+            end_profile=end_profile,
+            cloud_profile=cloud_profile,
+            end_state=self.end_state,
+            codec_params=codec_params,
+            compression_rank=compression_rank,
+            alpha=alpha,
+            selection_eps=selection_eps,
+            force_split=force_split,
+        )
+        self.end_params, self.cloud_params = split_block_params(params, self.split)
+
+        self.link = LinkStats()
+        self.bw = BandwidthEstimator(self.tiers.end_cap.net_gbps)
+        self.timeline = StageTimeline()
+        self.replan_events: List[Dict] = []
+        self._pending_plan: Optional[PipelinePlan] = None
+        self._pending_mask = _KEEP
+
+        # Micro-batch groups: interleaved slot ranges, one boundary buffer
+        # (the double buffer) per group.
+        self.n_groups = max(1, min(n_groups, max_batch))
+        bounds = np.linspace(0, max_batch, self.n_groups + 1).astype(int)
+        self._group_slices = [
+            (int(bounds[g]), int(bounds[g + 1])) for g in range(self.n_groups)
+        ]
+        dtype = jnp.dtype(self.cfg.dtype)
+        self._end_cache: List[Dict] = []
+        self._cloud_cache: List[Dict] = []
+        for gs, ge in self._group_slices:
+            full = kvcache.init_cache(self.cfg, ge - gs, max_len, dtype)
+            ec, cc = kvcache.split_cache(full, self.split)
+            self._end_cache.append(ec)
+            self._cloud_cache.append(cc)
+        self._phase = ["ready"] * self.n_groups  # "ready" | "boundary"
+        self._boundary: List[Optional[jax.Array]] = [None] * self.n_groups
+        self._boundary_ready_s = [0.0] * self.n_groups  # modeled arrival time
+        self._group_ready_s = [0.0] * self.n_groups  # modeled token-ready time
+
+        self.n_stage_steps = 0  # decode end-steps (== drained cloud-steps)
+        self._prefill_busy = {"end": 0.0, "link": 0.0, "cloud": 0.0}
+        self._build_stage_fns()
+
+    # -- the active plan lives on self.tiers; everything else delegates ------
+
+    @property
+    def plan(self) -> PipelinePlan:
+        return self.tiers.plan
+
+    @property
+    def split(self) -> int:
+        return self.tiers.plan.split_layer
+
+    # -- stage functions (rebuilt on every replan so the captured split /
+    # -- codec flags can never go stale in a cached trace) --------------------
+
+    def _build_stage_fns(self):
+        cfg = self.cfg
+        topo = self.model.topo
+        tiers = self.tiers
+        codec, compress, end_mask = tiers.codec, tiers.compress, tiers.end_mask
+        act = jnp.dtype(cfg.dtype)
+
+        def decode_angles(lengths, B):
+            pos = lengths[:, None]
+            if cfg.mrope_sections is not None:
+                pos = jnp.broadcast_to(pos[:, None], (B, 3, 1))
+            return attn_mod.rope_angles(
+                pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+            )
+
+        def prefill_angles(B, S):
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            if cfg.mrope_sections is not None:
+                pos = jnp.broadcast_to(pos[:, None], (B, 3, S))
+            return attn_mod.rope_angles(
+                pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+            )
+
+        def end_step(end_params, tokens, cache):
+            lengths = cache["lengths"]
+            angles = decode_angles(lengths, tokens.shape[0])
+            x = transformer.embed_inputs(end_params, cfg, tokens)
+            x, new_blocks, _ = transformer.apply_stack_decode(
+                end_params, x, cfg, topo, angles, cache["blocks"], lengths,
+                expert_mask=end_mask,
+            )
+            z = comp.encode_1d(codec, x) if compress else x
+            return z, {"blocks": new_blocks, "lengths": lengths + 1}
+
+        def cloud_step(cloud_params, z, cache):
+            lengths = cache["lengths"]
+            angles = decode_angles(lengths, z.shape[0])
+            x = comp.decode_1d(codec, z) if compress else z
+            x = x.astype(act)
+            x, new_blocks, _ = transformer.apply_stack_decode(
+                cloud_params, x, cfg, topo, angles, cache["blocks"], lengths,
+                expert_mask=None,
+            )
+            logits = transformer.lm_logits(cloud_params, cfg, x)[:, 0]
+            return logits, {"blocks": new_blocks, "lengths": lengths + 1}
+
+        def end_prefill(end_params, tokens):
+            B, S = tokens.shape
+            angles = prefill_angles(B, S)
+            x = transformer.embed_inputs(end_params, cfg, tokens)
+            x, _, cache_blocks = transformer.apply_stack_full(
+                x=x, params=end_params, cfg=cfg, topo=topo, angles=angles,
+                causal=True, expert_mask=end_mask, train=False,
+                collect_cache=True, max_len=self.max_len,
+            )
+            z = comp.encode_1d(codec, x) if compress else x
+            cache = {
+                "blocks": cache_blocks,
+                "lengths": jnp.full((B,), S, jnp.int32),
+            }
+            return z, cache
+
+        def cloud_prefill(cloud_params, z):
+            B, S = z.shape[:2]
+            angles = prefill_angles(B, S)
+            x = comp.decode_1d(codec, z) if compress else z
+            x = x.astype(act)
+            x, _, cache_blocks = transformer.apply_stack_full(
+                x=x, params=cloud_params, cfg=cfg, topo=topo, angles=angles,
+                causal=True, expert_mask=None, train=False,
+                collect_cache=True, max_len=self.max_len,
+            )
+            logits = transformer.lm_logits(cloud_params, cfg, x[:, -1:])[:, 0]
+            cache = {
+                "blocks": cache_blocks,
+                "lengths": jnp.full((B,), S, jnp.int32),
+            }
+            return logits, cache
+
+        self._end_step = jax.jit(end_step)
+        self._cloud_step = jax.jit(cloud_step)
+        self._end_prefill = jax.jit(end_prefill)
+        self._cloud_prefill = jax.jit(cloud_prefill)
+        self._warmup_stage_fns()
+
+    def _warmup_stage_fns(self):
+        """Compile the decode stage functions for every group shape so
+        measured stage times reflect steady-state compute, not tracing."""
+        seen = set()
+        for g, (gs, ge) in enumerate(self._group_slices):
+            if ge - gs in seen:
+                continue
+            seen.add(ge - gs)
+            tokens = jnp.zeros((ge - gs, 1), jnp.int32)
+            z, _ = self._end_step(self.end_params, tokens, self._end_cache[g])
+            logits, _ = self._cloud_step(self.cloud_params, z, self._cloud_cache[g])
+            logits.block_until_ready()
+
+    # -- admission (both tiers prefilled; boundary metered) -------------------
+
+    def _group_of(self, slot: int) -> int:
+        for g, (gs, ge) in enumerate(self._group_slices):
+            if gs <= slot < ge:
+                return g
+        raise ValueError(slot)
+
+    def _admittable(self, slot: int) -> bool:
+        # Never admit into a group whose boundary is in flight: the pending
+        # cloud-step was traced against the pre-admission batch state.
+        return self._phase[self._group_of(slot)] == "ready"
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        g = self._group_of(slot)
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+
+        t0 = time.perf_counter()
+        z, end_one = self._end_prefill(self.end_params, tokens)
+        z.block_until_ready()
+        te = time.perf_counter() - t0
+
+        nbytes = int(z.size * z.dtype.itemsize)
+        t_comm = self.link.record_up(nbytes, self.bw.gbps)
+
+        t1 = time.perf_counter()
+        logits, cloud_one = self._cloud_prefill(self.cloud_params, z)
+        logits.block_until_ready()
+        tc = time.perf_counter() - t1
+
+        # Prefill is accounted separately: the StageTimeline tracks only the
+        # steady-state decode schedule (prefill wall time includes per-shape
+        # tracing, which would drown the overlap signal).
+        self._prefill_busy["end"] += te
+        self._prefill_busy["link"] += t_comm
+        self._prefill_busy["cloud"] += tc
+        self.link.record_down(4)  # first token back to the end tier
+        return int(jnp.argmax(logits[0])), (g, end_one, cloud_one)
+
+    def _install_slot(self, slot: int, payload):
+        g, end_one, cloud_one = payload
+        gs, _ = self._group_slices[g]
+        self._end_cache[g] = kvcache.install_slot(self._end_cache[g], slot - gs, end_one)
+        self._cloud_cache[g] = kvcache.install_slot(
+            self._cloud_cache[g], slot - gs, cloud_one
+        )
+
+    # -- pipelined stepping ---------------------------------------------------
+
+    def _group_active(self, g: int) -> bool:
+        gs, ge = self._group_slices[g]
+        return bool(self._active[gs:ge].any())
+
+    def _run_end_stage(self, g: int):
+        gs, ge = self._group_slices[g]
+        tokens = jnp.asarray(self._next_token[gs:ge])
+        t0 = time.perf_counter()
+        z, self._end_cache[g] = self._end_step(
+            self.end_params, tokens, self._end_cache[g]
+        )
+        z.block_until_ready()
+        te = time.perf_counter() - t0
+
+        nbytes = int(z.size * z.dtype.itemsize)
+        t_comm = self.link.record_up(nbytes, self.bw.gbps)
+
+        done_e = self.timeline.occupy("end", self._group_ready_s[g], te)
+        done_l = self.timeline.occupy("link", done_e, t_comm)
+        self.n_stage_steps += 1
+
+        self._boundary[g] = z
+        self._boundary_ready_s[g] = done_l
+        self._phase[g] = "boundary"
+
+    def _run_cloud_stage(self, g: int) -> int:
+        gs, ge = self._group_slices[g]
+        z = self._boundary[g]
+        t0 = time.perf_counter()
+        logits, self._cloud_cache[g] = self._cloud_step(
+            self.cloud_params, z, self._cloud_cache[g]
+        )
+        logits.block_until_ready()
+        tc = time.perf_counter() - t0
+
+        done_c = self.timeline.occupy("cloud", self._boundary_ready_s[g], tc)
+        self._group_ready_s[g] = done_c
+        self.link.record_down((ge - gs) * 4)  # token ids back to the end tier
+
+        self._boundary[g] = None
+        self._phase[g] = "ready"
+
+        ids = np.zeros((self.max_batch,), np.int64)
+        ids[gs:ge] = np.asarray(jnp.argmax(logits, -1))
+        return self._harvest(ids, slot_range=range(gs, ge))
+
+    def step(self) -> int:
+        """One engine tick: drain in-flight boundaries on the cloud tier,
+        apply a pending replan at the safe point, admit, then refill the end
+        tier — so group A's cloud-step overlaps group B's end-step."""
+        emitted = 0
+        for g in range(self.n_groups):
+            if self._phase[g] == "boundary":
+                emitted += self._run_cloud_stage(g)
+        self._apply_pending_replan()
+        self._admit()
+        for g in range(self.n_groups):
+            if self._phase[g] == "ready" and self._group_active(g):
+                self._run_end_stage(g)
+        return emitted
+
+    # -- dynamic replanning ---------------------------------------------------
+
+    def observe_bandwidth(self, gbps: float):
+        """Feed a link measurement (e.g. from a probe or the paper's TC
+        setup); triggers a replan check against measured conditions."""
+        self.bw.observe_rate(gbps)
+        self._check_replan()
+
+    def update_device_state(self, end_state: DeviceState):
+        """Feed a new end-device state vector (eq. 2): re-derive the end
+        capability AND the hardware-aware expert mask (eq. 2-4), then
+        re-check the plan.  Mask changes are applied at the same safe point
+        as split changes."""
+        self.end_state = end_state
+        self.tiers = dataclasses.replace(
+            self.tiers, end_cap=capability(self.end_profile, end_state)
+        )
+        new_mask = end_mask_from_state(
+            self.cfg, self.end_profile, end_state, selection_eps=self.selection_eps
+        )
+        mask_changed = not _masks_equal(new_mask, self.tiers.end_mask)
+        if mask_changed:
+            self._pending_mask = new_mask
+        else:
+            # latest state agrees with the applied mask: cancel any pending
+            # change from an earlier (now recovered-from) observation
+            self._pending_mask = _KEEP
+        # The state vector's B_bw component is a link observation only when
+        # it reports a non-default value; a default-constructed 1.0 means
+        # "not measured" and must not overwrite probe readings fed through
+        # observe_bandwidth (report recovery explicitly via either channel).
+        if end_state.bandwidth_free != 1.0:
+            self.bw.observe_rate(self.tiers.end_cap.net_gbps)
+        self._check_replan(force=mask_changed)
+
+    def _check_replan(self, force: bool = False):
+        # planning inputs come from TierPlan so replanning uses exactly the
+        # cost model the initial plan was computed with
+        plan, changed = replan_pipeline(
+            self.plan,
+            self.tiers.layer_gflops,
+            self.tiers.boundary_bytes,
+            self.tiers.end_cap,
+            self.tiers.cloud_cap,
+            measured_gbps=self.bw.gbps,
+            compression_ratio=self.tiers.compression_ratio,
+            alpha=self.tiers.alpha,
+            rel_threshold=self.replan_threshold,
+            edge_boundary=True,
+        )
+        trace_changed = (
+            plan.split_layer != self.plan.split_layer
+            or plan.compress_boundary != self.plan.compress_boundary
+        )
+        if changed or trace_changed or force:
+            # needs the drained safe point (and possibly a re-split/rebuild)
+            self._pending_plan = plan
+        else:
+            # current split/codec stand: drop any stale pending change and
+            # adopt the refreshed estimates in place (nothing a trace
+            # captures differs, so no rebuild is needed)
+            self._pending_plan = None
+            self.tiers = dataclasses.replace(self.tiers, plan=plan)
+
+    def _apply_pending_replan(self):
+        """Adopt a pending plan/mask once no boundary is in flight (both
+        tiers at equal ``lengths``): merge the per-tier caches, re-split
+        params and caches at the new block boundary, and rebuild the stage
+        functions — but only when something a trace captures (split, codec
+        flag, expert mask) actually changed."""
+        if self._pending_plan is None and self._pending_mask is _KEEP:
+            return
+        if any(p == "boundary" for p in self._phase):
+            return
+        plan = self._pending_plan or self.plan
+        self._pending_plan = None
+        old_split = self.split
+        old_compress = self.tiers.compress
+        mask_changed = self._pending_mask is not _KEEP
+        updates: Dict = {"plan": plan}
+        if mask_changed:
+            updates["end_mask"] = self._pending_mask
+            self._pending_mask = _KEEP
+        self.tiers = dataclasses.replace(self.tiers, **updates)
+        if self.split != old_split:
+            self.end_params, self.cloud_params = split_block_params(
+                self.params, self.split
+            )
+            for g in range(self.n_groups):
+                merged = kvcache.merge_cache(self._end_cache[g], self._cloud_cache[g])
+                self._end_cache[g], self._cloud_cache[g] = kvcache.split_cache(
+                    merged, self.split
+                )
+        if (
+            self.split != old_split
+            or self.tiers.compress != old_compress
+            or mask_changed
+        ):
+            self._build_stage_fns()
+        self.replan_events.append(
+            {
+                "old_split": old_split,
+                "new_split": self.split,
+                "measured_gbps": self.bw.gbps,
+                "compress": self.tiers.compress,
+                "mask_changed": mask_changed,
+            }
+        )
+
+    # -- metrics --------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        n = max(self.n_stage_steps, 1)
+        mean = {r: t / n for r, t in self.timeline.busy_s.items()}
+        return {
+            "split": self.split,
+            "compressed": self.tiers.compress,
+            "n_groups": self.n_groups,
+            "bytes_up": self.link.bytes_up,
+            "transfers": self.link.transfers,
+            "n_stage_steps": self.n_stage_steps,
+            "mean_t_end_s": mean["end"],
+            "mean_t_comm_s": mean["link"],
+            "mean_t_cloud_s": mean["cloud"],
+            # serial layout vs the pipelined resource-occupancy schedule
+            "serial_step_s": mean["end"] + mean["link"] + mean["cloud"],
+            "pipelined_step_s": self.timeline.makespan_s / n,
+            "plan_est_step_s": self.plan.est_step_time_s,
+            "pipelined_total_s": self.timeline.makespan_s,
+            "serial_total_s": self.timeline.serial_s,
+            "prefill_s": sum(self._prefill_busy.values()),
+            "replan_events": len(self.replan_events),
+            "measured_gbps": self.bw.gbps,
+        }

@@ -180,8 +180,60 @@ def edgemoe_stages(cfg: ModelConfig, pc: PolicyConfig) -> List[Stage]:
     return [Stage("end", gflops / (end_cap.gflop_budget * 1e3) + page_in_s)]
 
 
+def ec2moe_stream_stages(
+    cfg: ModelConfig, pc: PolicyConfig, n_decode_tokens: int = 32
+) -> List[Stage]:
+    """Token-level decode stages for the streaming end-cloud engine
+    (``serving.stream.EndCloudServingEngine``): each decode step is an
+    (end, link, cloud) triple — split by the REAL route-aware planner
+    (``plan_pipeline_split``), boundary compressed at the eq. 8 ratio — and
+    the simulator's resource-occupancy model reproduces the double-buffered
+    overlap: steady-state step time approaches max(t_end, t_comm, t_cloud).
+    """
+    end_cap = _eff_cap(pc.end_profile, pc.end_state, pc.end_efficiency)
+    cloud_cap = _eff_cap(pc.cloud_profile, DeviceState(), pc.cloud_efficiency)
+    # per decode step the batch advances one token per sequence
+    step_tokens = pc.batch
+    per_layer = 2.0 * cfg.active_param_count() / cfg.num_layers * step_tokens * 1e-9
+    boundary_bytes = step_tokens * cfg.d_model * 2.0
+    # rank 0 means codec off (full bytes), matching the engine — not a
+    # 0/d "free" ratio
+    ratio = (
+        compression_ratio(cfg.d_model, pc.compression_rank)
+        if pc.compression_rank > 0
+        else 1.0
+    )
+    # edge_boundary matches the engine: the embedding stays on the end and
+    # the LM head on the cloud, so an activation crosses the wire at every
+    # split (uncompressed at the edges — the codec only applies interior)
+    plan = plan_pipeline_split(
+        [per_layer] * cfg.num_layers,
+        boundary_bytes,
+        end_cap,
+        cloud_cap,
+        compression_ratio=ratio,
+        alpha=pc.alpha,
+        edge_boundary=True,
+    )
+    split = plan.split_layer
+    end_t = per_layer * split / (end_cap.gflop_budget * 1e3)
+    cloud_t = per_layer * (cfg.num_layers - split) / (cloud_cap.gflop_budget * 1e3)
+    wire = boundary_bytes * (ratio if plan.compress_boundary else 1.0)
+    jitter = pc.jitter_sensitivity.get(
+        "ec2moe-stream", pc.jitter_sensitivity.get("ec2moe", 0.3)
+    )
+    stages: List[Stage] = []
+    for _ in range(n_decode_tokens):
+        if split > 0:
+            stages.append(Stage("end", end_t))
+        stages.append(Stage("link", payload_bytes=wire))
+        stages.append(Stage("cloud", cloud_t, jitter=jitter))
+    return stages
+
+
 POLICIES: Dict[str, Callable[[ModelConfig, PolicyConfig], List[Stage]]] = {
     "ec2moe": ec2moe_stages,
+    "ec2moe-stream": ec2moe_stream_stages,
     "brownoutserve": brownout_stages,
     "edgemoe": edgemoe_stages,
 }

@@ -1,0 +1,97 @@
+"""Optional-hypothesis shim.
+
+Test modules import ``given``/``settings``/``st`` through a try/except:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+When hypothesis is installed the real library runs the full property-based
+search.  When it is not (the container image has no network access), this
+shim keeps the suite collectable and runs each ``@given`` test over a small
+deterministic grid: every strategy contributes its boundary values plus a
+midpoint, and example i of the test takes element ``i % len(examples)`` of
+each strategy, so all boundaries are exercised at least once without a
+combinatorial blow-up.
+
+Only the strategy constructors this repo's tests actually use are provided
+(``sampled_from``, ``integers``, ``floats``, ``booleans``); extend the shim
+alongside any test that needs more.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    """A fixed, ordered list of deterministic examples."""
+
+    def __init__(self, examples: List[Any]):
+        assert examples, "strategy must yield at least one example"
+        self.examples = examples
+
+
+class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def sampled_from(values) -> _Strategy:
+        return _Strategy(list(values))
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 10) -> _Strategy:
+        mid = (min_value + max_value) // 2
+        return _Strategy(sorted({min_value, mid, max_value}))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        mid = 0.5 * (min_value + max_value)
+        out = [min_value]
+        if mid not in out:
+            out.append(mid)
+        if max_value not in out:
+            out.append(max_value)
+        return _Strategy(out)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy([False, True])
+
+
+def settings(*_args, **_kwargs) -> Callable:
+    """No-op stand-in for ``hypothesis.settings``."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strategies: _Strategy) -> Callable:
+    """Run the test once per grid example (cycling each strategy's list)."""
+
+    n_examples = max(len(s.examples) for s in strategies.values())
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            for i in range(n_examples):
+                drawn = {
+                    name: s.examples[i % len(s.examples)]
+                    for name, s in strategies.items()
+                }
+                fn(*args, **drawn, **kwargs)
+
+        # Hide the strategy-drawn parameters from pytest's fixture resolver
+        # (functools.wraps would re-expose them via __wrapped__).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+        )
+        return wrapper
+
+    return deco

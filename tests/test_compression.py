@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback grid
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import compression as comp
 

@@ -1,7 +1,10 @@
 """Hardware-aware local expert selection (paper eq. 2-4)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback grid
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.hardware import (
     PROFILES,

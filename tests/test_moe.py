@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback grid
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs import CompressionConfig, get_config, smoke_config
 from repro.core import moe as moe_mod

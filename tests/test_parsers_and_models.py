@@ -3,7 +3,10 @@ these feed the §Roofline numbers, so they get their own tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback grid
+    from _hypothesis_compat import given, settings, st
 
 from repro.launch.dryrun import (
     _computation_multipliers,

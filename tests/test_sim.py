@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback grid
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs.switch_base import with_experts
 from repro.sim.policies import PolicyConfig, make_requests
@@ -95,6 +98,23 @@ def test_ec2moe_load_adaptive_split():
     low = ec2moe_stages(cfg, pc, offered_rps=2)
     end_t = lambda stages: sum(s.service_s for s in stages if s.resource == "end")
     assert end_t(low) <= end_t(sat)
+
+
+def test_stream_policy_pipelines_decode_tokens():
+    """The streaming-decode policy emits per-token (end, link, cloud)
+    triples; the queueing model overlaps them across requests, so makespan
+    beats the serial stage sum."""
+    from repro.sim.policies import ec2moe_stream_stages
+
+    cfg = with_experts(16)
+    pc = PolicyConfig()
+    proto = ec2moe_stream_stages(cfg, pc, n_decode_tokens=8)
+    assert proto and {s.resource for s in proto} <= {"end", "link", "cloud"}
+    reqs = make_requests("ec2moe-stream", cfg, pc, poisson_arrivals(20, 40, 0))
+    m = simulate(reqs, link=Link(0.3, seed=0),
+                 end_servers=pc.n_end_devices, cloud_servers=pc.n_cloud_gpus)
+    serial = sum(r.latency_s for r in reqs)
+    assert 0 < m["makespan_s"] < serial
 
 
 def test_ec2moe_less_jitter_sensitive():
