@@ -76,6 +76,13 @@ def group_gate_probs(
     T = x.shape[0]
     local, glob = group_gate_logits(params, x)
 
+    # z-losses regularize the *router* logit scale, so they are computed on
+    # the pre-mask logits: a hardware mask (eq. 4) turning off experts must
+    # not inject logsumexp(NEG_INF)^2 ~ 1e60 into the loss whenever it
+    # disables a whole group.
+    z_global = jnp.mean(jax.nn.logsumexp(glob, axis=-1) ** 2)
+    z_local = jnp.mean(jax.nn.logsumexp(local, axis=-1) ** 2)
+
     if expert_mask is not None:
         em = expert_mask.reshape((-1, K, Mk)) if expert_mask.ndim == 2 else (
             expert_mask.reshape((K, Mk))[None]
@@ -90,17 +97,19 @@ def group_gate_probs(
 
     if moe_cfg.group_top_k and moe_cfg.group_top_k < K:
         # Hard locality restriction: keep only the top-g groups, renormalize.
+        # Selection is by top-k *indices* scattered back to a keep mask: a
+        # probability threshold would keep every tied group (e.g. uniform
+        # post-mask probs) and break the dispatch fan-out bound group_top_k
+        # guarantees on the a2a path.  top_k tie-breaks by lowest index, so
+        # exactly g groups survive.
         g = moe_cfg.group_top_k
-        thresh = jax.lax.top_k(p_group, g)[0][:, -1:]
-        keep = p_group >= thresh
+        _, top_groups = jax.lax.top_k(p_group, g)  # [T, g]
+        keep = jnp.any(jax.nn.one_hot(top_groups, K, dtype=jnp.bool_), axis=-2)
         p_group = jnp.where(keep, p_group, 0.0)
         p_group = p_group / jnp.maximum(p_group.sum(-1, keepdims=True), 1e-9)
 
     probs = (p_group[:, :, None] * p_local).reshape(T, K * Mk)  # (eq. 7)
 
-    # z-losses on both stages' logits keep the router numerically tame.
-    z_global = jnp.mean(jax.nn.logsumexp(glob, axis=-1) ** 2)
-    z_local = jnp.mean(jax.nn.logsumexp(local, axis=-1) ** 2)
     aux = {"router_z": z_global + z_local}
     return probs, p_group, aux
 

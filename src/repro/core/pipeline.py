@@ -201,6 +201,139 @@ def plan_pipeline_split(
 
 
 # ---------------------------------------------------------------------------
+# Fleet planning (N heterogeneous end devices sharing one cloud tier)
+# ---------------------------------------------------------------------------
+
+
+def fleet_cloud_share(
+    cloud_cap: Capability, cloud_servers: int, n_devices: int
+) -> Capability:
+    """Per-device view of a shared cloud tier: ``cloud_servers`` servers
+    split across ``n_devices`` end devices.  Scaling the capability (rather
+    than passing fractional server counts) keeps every downstream formula —
+    split search, replan hysteresis, est_step_time — in per-device units."""
+    share = cloud_servers / max(n_devices, 1)
+    return replace(cloud_cap, gflop_budget=cloud_cap.gflop_budget * share)
+
+
+def plan_fleet_splits(
+    layer_gflops: Sequence[float],
+    boundary_bytes: float,
+    end_caps: Sequence[Capability],
+    cloud_cap: Capability,
+    *,
+    cloud_servers: int = 1,
+    compression_ratio: float = 1.0,
+    alpha: float = 0.5,
+    edge_boundary: bool = False,
+    pin_splits: Optional[Sequence[Optional[int]]] = None,
+) -> List[PipelinePlan]:
+    """Route-aware split per end device (eq. 9-11), fleet reading: every
+    device plans against its *share* of the cloud tier, so a weak device
+    (whose end stage would bottleneck) offloads more layers while a strong
+    one keeps more local — the per-device cost model the fleet engine's
+    replanning re-runs when that device's link or state drifts."""
+    share_cap = fleet_cloud_share(cloud_cap, cloud_servers, len(end_caps))
+    plans = []
+    for i, end_cap in enumerate(end_caps):
+        plans.append(
+            plan_pipeline_split(
+                layer_gflops,
+                boundary_bytes,
+                end_cap,
+                share_cap,
+                compression_ratio=compression_ratio,
+                alpha=alpha,
+                edge_boundary=edge_boundary,
+                pin_split=pin_splits[i] if pin_splits is not None else None,
+            )
+        )
+    return plans
+
+
+def place_fleet(
+    tasks: Sequence[Task],
+    end_caps: Sequence[Capability],
+    cfg: SchedulerConfig,
+    *,
+    loads: Optional[Sequence[float]] = None,
+    measured_gbps: Optional[Sequence[float]] = None,
+    capacity: Optional[Sequence[int]] = None,
+    max_spill: Optional[float] = None,
+) -> Tuple[List[int], Dict[str, float]]:
+    """Route-aware request placement across N end devices — ``schedule``'s
+    eq. 10/11 greedy generalized from the binary end/cloud choice to a
+    device fleet.
+
+    Tasks are ranked by their best-case eq. 10 priority (compute-heavy,
+    cheap-to-ship first — those gain most from a good pick), then each goes
+    to the device minimizing the eq. 9 marginal cost
+
+        alpha * (load_d + C) / rate_d + (1 - alpha) * Comm_d
+
+    over devices with admission ``capacity`` left, preferring devices whose
+    load stays under the eq. 11 threshold ``cfg.t_end``.  ``loads`` seeds
+    per-device in-flight GFLOPs, ``measured_gbps`` overrides each device's
+    nominal uplink with its measured rate.  ``max_spill`` is the
+    late-binding guard: when the cheapest *open* device is more than
+    ``max_spill`` times worse than the fleet-wide best (which may merely be
+    out of slots right now), the task is left unplaced rather than dumped
+    on a straggler — a queued request can still take a good device next
+    tick, a placed one cannot.  Returns one device index per task (-1 =
+    leave it queued) plus stats.
+    """
+    n = len(end_caps)
+    load = list(loads) if loads is not None else [0.0] * n
+    cap_left = list(capacity) if capacity is not None else [len(tasks)] * n
+    gbps = [
+        (measured_gbps[d] if measured_gbps is not None else end_caps[d].net_gbps)
+        for d in range(n)
+    ]
+
+    def marginal(t: Task, d: int) -> float:
+        ex = (load[d] + t.gflops) / max(end_caps[d].gflop_budget * 1e3, 1e-9)
+        cm = t.comm_bytes * 8.0 / max(gbps[d] * 1e9, 1e-9)
+        return cfg.alpha * ex + (1.0 - cfg.alpha) * cm
+
+    order = sorted(
+        range(len(tasks)),
+        key=lambda i: -max(
+            priority(tasks[i], comm_time(tasks[i], g), cfg.eps) for g in gbps
+        ),
+    )
+    assignment = [-1] * len(tasks)
+    obj = 0.0
+    for i in order:
+        t = tasks[i]
+        open_d = [d for d in range(n) if cap_left[d] > 0]
+        if not open_d:
+            continue
+        # eq. 11 reading: devices with headroom are first-class targets;
+        # only spill past the t_end threshold when every device is loaded.
+        headroom = [d for d in open_d if load[d] + t.gflops <= cfg.t_end]
+        best = min(headroom or open_d, key=lambda d: marginal(t, d))
+        if max_spill is not None:
+            best_any = min(marginal(t, d) for d in range(n))
+            if marginal(t, best) > max_spill * best_any:
+                # the headroom-preferred pick is poor; before waiting, fall
+                # back to the cheapest open device regardless of headroom
+                # (eq. 11 spills past t_end when every option is loaded)
+                best = min(open_d, key=lambda d: marginal(t, d))
+                if marginal(t, best) > max_spill * best_any:
+                    continue  # wait for a better device to free a slot
+        obj += marginal(t, best)
+        assignment[i] = best
+        load[best] += t.gflops
+        cap_left[best] -= 1
+    stats = {
+        "objective": obj,
+        "n_unplaced": sum(1 for a in assignment if a < 0),
+        **{f"load_dev{d}": load[d] for d in range(n)},
+    }
+    return assignment, stats
+
+
+# ---------------------------------------------------------------------------
 # Replanning (dynamic load and network — paper figs. 7-8)
 # ---------------------------------------------------------------------------
 
@@ -267,6 +400,8 @@ def replan_pipeline(
     alpha: float = 0.5,
     rel_threshold: float = 0.15,
     edge_boundary: bool = False,
+    end_servers: int = 1,
+    cloud_servers: int = 1,
 ) -> Tuple[PipelinePlan, bool]:
     """Re-run the split search against measured link/device conditions.
 
@@ -278,7 +413,9 @@ def replan_pipeline(
     ``changed`` means adopt ``plan``; when False, ``plan`` is trace-identical
     to the incumbent (same split, same compress flag) with refreshed
     estimates.  ``measured_gbps`` overrides the capability's nominal
-    uplink — the measured-bandwidth feedback path.
+    uplink — the measured-bandwidth feedback path.  ``end_servers`` /
+    ``cloud_servers`` carry the fleet bottleneck into the split search
+    (alternatively pre-scale ``cloud_cap`` via ``fleet_cloud_share``).
     """
     if measured_gbps is not None:
         end_cap = replace(end_cap, net_gbps=measured_gbps)
@@ -286,6 +423,8 @@ def replan_pipeline(
         compression_ratio=compression_ratio,
         alpha=alpha,
         edge_boundary=edge_boundary,
+        end_servers=end_servers,
+        cloud_servers=cloud_servers,
     )
     refreshed = plan_pipeline_split(
         layer_gflops, boundary_bytes, end_cap, cloud_cap,

@@ -89,6 +89,30 @@ def end_mask_for(
     )
 
 
+def fleet_device_mask(
+    profile: DeviceProfile,
+    state: DeviceState,
+    d_model: int,
+    d_ff_expert: int,
+    num_experts: int,
+    num_groups: int,
+    **kw,
+) -> np.ndarray:
+    """One device's slice of the fleet mask: the eq. 2-4 hardware mask with
+    the fleet's never-empty guarantee — a device whose budget admits no
+    expert still exposes its first one (the runtime re-balances via the
+    group gate's load-balance loss).  The fleet serving engine re-derives
+    masks through this on per-device state updates so they stay consistent
+    with ``shard_masks_for_fleet``."""
+    m = end_mask_for(
+        profile, state, d_model, d_ff_expert, num_experts, num_groups, **kw
+    )
+    if not m.any():
+        m = m.copy()
+        m[0] = True
+    return m
+
+
 def shard_masks_for_fleet(
     profiles: Sequence[DeviceProfile],
     states: Sequence[DeviceState],
@@ -98,17 +122,13 @@ def shard_masks_for_fleet(
     num_groups: int,
     **kw,
 ) -> np.ndarray:
-    """Heterogeneous-mesh adaptation: one mask per expert-parallel shard,
-    [n_shards, E].  A shard whose budget cannot host its own expert slice
-    still exposes at least its first expert (the runtime re-balances via the
-    group gate's load-balance loss)."""
-    masks = []
-    for p, s in zip(profiles, states):
-        m = end_mask_for(
-            p, s, d_model, d_ff_expert, num_experts, num_groups, **kw
-        )
-        if not m.any():
-            m = m.copy()
-            m[0] = True
-        masks.append(m)
-    return np.stack(masks)
+    """Heterogeneous-mesh adaptation: one mask per expert-parallel shard /
+    fleet device, [n_shards, E]."""
+    return np.stack(
+        [
+            fleet_device_mask(
+                p, s, d_model, d_ff_expert, num_experts, num_groups, **kw
+            )
+            for p, s in zip(profiles, states)
+        ]
+    )

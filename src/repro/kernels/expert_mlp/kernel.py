@@ -29,7 +29,7 @@ from jax.experimental import pallas as pl
 ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 
 
-def _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str, n_ff: int):
+def _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str):
     j = pl.program_id(2)  # ff tile (minor-most: sequential accumulation)
 
     @pl.when(j == 0)
@@ -79,7 +79,7 @@ def expert_mlp_pallas(
     args.append(wo)
 
     kernel = functools.partial(
-        _kernel if wg is not None else _kernel_nogate, act=act, n_ff=f // bf
+        _kernel if wg is not None else _kernel_nogate, act=act
     )
     return pl.pallas_call(
         kernel,
@@ -91,5 +91,5 @@ def expert_mlp_pallas(
     )(*args)
 
 
-def _kernel_nogate(x_ref, wi_ref, wo_ref, o_ref, *, act: str, n_ff: int):
-    _kernel(x_ref, wi_ref, None, wo_ref, o_ref, act=act, n_ff=n_ff)
+def _kernel_nogate(x_ref, wi_ref, wo_ref, o_ref, *, act: str):
+    _kernel(x_ref, wi_ref, None, wo_ref, o_ref, act=act)

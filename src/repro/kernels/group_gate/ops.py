@@ -4,7 +4,8 @@ Accepts the same parameter pytree as ``repro.core.gating`` ({"w_local":
 [K, d, Mk], "b_local": [K, Mk], "w_global": [d, K], "b_global": [K]}),
 re-lays-out the local gates into one column-grouped [d, E] matrix (done
 once under jit; XLA folds it), and dispatches to the Pallas kernel —
-interpreted on CPU, compiled on TPU.
+interpreted on CPU, compiled on TPU (``interpret=None`` autodetects from
+the backend, so the fused gate is never silently interpreted on TPU).
 """
 
 from __future__ import annotations
@@ -38,9 +39,14 @@ def group_gate_probs(
     *,
     num_groups: int,
     expert_mask: Optional[jax.Array] = None,  # bool [E]
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused eq. 5-7.  Returns (probs [T, E], p_group [T, K])."""
+    """Fused eq. 5-7.  Returns (probs [T, E], p_group [T, K]).
+
+    ``interpret=None`` (the default) resolves per backend: compiled on TPU,
+    interpreted elsewhere (CPU validation) — an explicit bool forces it."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     wl = params["w_local"]  # [K, d, Mk]
     K, d, Mk = wl.shape
     E = K * Mk

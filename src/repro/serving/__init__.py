@@ -1,12 +1,15 @@
-from repro.serving.common import LinkStats, Request
+from repro.serving.common import LinkStats, Request, StageTimeline
 from repro.serving.endcloud import EndCloudPipeline
 from repro.serving.engine import ServingEngine
+from repro.serving.fleet import FleetServingEngine
 from repro.serving.stream import EndCloudServingEngine
 
 __all__ = [
     "Request",
     "LinkStats",
+    "StageTimeline",
     "ServingEngine",
     "EndCloudPipeline",
     "EndCloudServingEngine",
+    "FleetServingEngine",
 ]

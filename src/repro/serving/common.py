@@ -9,8 +9,9 @@ lifecycle; subclasses provide the actual prefill/decode compute.
 
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,24 +75,94 @@ class StageTimeline:
     times; the resulting makespan is the *pipelined* schedule, while
     ``serial_s`` accumulates the same stages laid end to end — the spread
     between the two is exactly the overlap the double buffer buys.
+
+    A resource may have multiple servers (``capacity``), and each server
+    books jobs into *busy intervals*: a job starts in the earliest gap at
+    or after its ready time (backfill).  Interval booking — rather than a
+    single ratcheting free-time per server — matters because callers may
+    arrive out of virtual-time order: fleet lanes advance their own clocks
+    at different rates, so a slow lane can book the shared cloud at t=150ms
+    before a fast lane asks for t=50ms; the fast lane's job must land in
+    the earlier gap, exactly as a real FCFS queue (or ``sim.simulator``'s
+    event heap) would serve it.  The fleet engine uses capacity for the
+    shared cloud tier (N end devices, ``cloud_servers`` cloud GPUs) and
+    registers per-device end/link resources via ``add_resource``.
     """
 
-    def __init__(self, resources: Sequence[str] = ("end", "link", "cloud")):
-        self.free_at: Dict[str, float] = {r: 0.0 for r in resources}
+    def __init__(
+        self,
+        resources: Sequence[str] = ("end", "link", "cloud"),
+        capacity: Optional[Dict[str, int]] = None,
+    ):
+        capacity = capacity or {}
+        # per resource: per server: sorted [start, end) busy intervals
+        self._servers: Dict[str, List[List[Tuple[float, float]]]] = {
+            r: [[] for _ in range(max(capacity.get(r, 1), 1))]
+            for r in resources
+        }
         self.busy_s: Dict[str, float] = {r: 0.0 for r in resources}
         self.serial_s: float = 0.0
+        self._max_end = 0.0
+
+    def add_resource(self, name: str, capacity: int = 1):
+        """Register a resource if absent (idempotent; capacity of an
+        existing resource is left untouched)."""
+        if name not in self._servers:
+            self._servers[name] = [[] for _ in range(max(capacity, 1))]
+            self.busy_s[name] = 0.0
+
+    @staticmethod
+    def _earliest_start(
+        intervals: List[Tuple[float, float]], ready_s: float, service_s: float
+    ) -> float:
+        start = ready_s
+        for s, e in intervals:
+            if start + service_s <= s:
+                break  # fits in the gap before this interval
+            if e > start:
+                start = e
+        return start
+
+    @property
+    def free_at(self) -> Dict[str, float]:
+        """Time each resource's earliest-draining server runs dry."""
+        return {
+            r: min((ivals[-1][1] if ivals else 0.0) for ivals in servers)
+            for r, servers in self._servers.items()
+        }
 
     def occupy(self, resource: str, ready_s: float, service_s: float) -> float:
-        start = max(ready_s, self.free_at[resource])
-        end = start + service_s
-        self.free_at[resource] = end
+        servers = self._servers[resource]
+        best, best_start = 0, None
+        for i, ivals in enumerate(servers):
+            start = self._earliest_start(ivals, ready_s, service_s)
+            if best_start is None or start < best_start:
+                best, best_start = i, start
+        end = best_start + service_s
+        if service_s > 0:
+            ivals = servers[best]
+            j = bisect.bisect_left(ivals, (best_start, end))
+            # coalesce with touching neighbours — the common booking is
+            # contiguous at a server's tail, so lists stay short and the
+            # gap scan near-O(1) instead of growing one tuple per step
+            s, e = best_start, end
+            if j < len(ivals) and ivals[j][0] <= e:
+                e = max(e, ivals[j][1])
+                del ivals[j]
+            if j > 0 and ivals[j - 1][1] >= s:
+                s = ivals[j - 1][0]
+                e = max(e, ivals[j - 1][1])
+                del ivals[j - 1]
+                j -= 1
+            ivals.insert(j, (s, e))
         self.busy_s[resource] += service_s
         self.serial_s += service_s
+        self._max_end = max(self._max_end, end)
         return end
 
     @property
     def makespan_s(self) -> float:
-        return max(self.free_at.values())
+        return self._max_end
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -113,10 +184,16 @@ class SlotEngineBase:
     harvesting, and the run loop.
     """
 
-    def __init__(self, max_batch: int, clock: Optional[Callable[[], float]] = None):
+    def __init__(
+        self,
+        max_batch: int,
+        clock: Optional[Callable[[], float]] = None,
+        max_len: Optional[int] = None,
+    ):
         import time as _time
 
         self.max_batch = max_batch
+        self.max_len = max_len
         self.clock = clock or _time.monotonic
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
@@ -126,7 +203,28 @@ class SlotEngineBase:
 
     # -- request lifecycle ---------------------------------------------------
 
+    def validate(self, req: Request):
+        """Reject a request that cannot fit the slot's KV ring buffer: past
+        ``max_len`` positions the ring wraps and silently corrupts attention,
+        so over-long requests must fail loudly at submit time."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.request_id}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.request_id}: max_new_tokens="
+                f"{req.max_new_tokens} (prefill always emits one token)"
+            )
+        if self.max_len is not None:
+            need = len(req.prompt) + req.max_new_tokens
+            if need > self.max_len:
+                raise ValueError(
+                    f"request {req.request_id}: prompt ({len(req.prompt)}) + "
+                    f"max_new_tokens ({req.max_new_tokens}) = {need} exceeds "
+                    f"max_len={self.max_len}; the KV ring buffer would wrap"
+                )
+
     def submit(self, req: Request):
+        self.validate(req)
         req.submit_time = self.clock()
         self.waiting.append(req)
 
@@ -135,25 +233,32 @@ class SlotEngineBase:
         return True
 
     def _admit(self):
-        """Prefill waiting requests into free slots."""
+        """Prefill waiting requests into free slots.
+
+        A request that finishes at its prefill token (EOS, or
+        ``max_new_tokens == 1``) leaves its slot free, so the same slot is
+        retried until it is actually occupied or the queue drains — skipping
+        ahead would idle the slot for a whole engine tick per short request.
+        """
         for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.waiting:
-                continue
-            if not self._admittable(slot):
-                continue
-            req = self.waiting.pop(0)
-            tok, payload = self._prefill_into_slot(slot, req)
-            req.generated.append(tok)
-            if req.first_token_time is None:
-                req.first_token_time = self.clock()
-            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
-                req.finish_time = self.clock()
-                self.finished.append(req)
-                continue
-            self._install_slot(slot, payload)
-            self.slots[slot] = req
-            self._next_token[slot, 0] = tok
-            self._active[slot] = True
+            while (
+                self.slots[slot] is None
+                and self.waiting
+                and self._admittable(slot)
+            ):
+                req = self.waiting.pop(0)
+                tok, payload = self._prefill_into_slot(slot, req)
+                req.generated.append(tok)
+                if req.first_token_time is None:
+                    req.first_token_time = self.clock()
+                if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                    req.finish_time = self.clock()
+                    self.finished.append(req)
+                    continue  # slot still free: offer it to the next waiter
+                self._install_slot(slot, payload)
+                self.slots[slot] = req
+                self._next_token[slot, 0] = tok
+                self._active[slot] = True
 
     def _prefill_into_slot(self, slot: int, req: Request):
         raise NotImplementedError

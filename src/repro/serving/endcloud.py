@@ -25,7 +25,7 @@ Two executors share the tier setup built by :func:`plan_tiers`:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -124,31 +124,46 @@ class TierPlan:
         return self.codec is not None and self.plan.compress_boundary
 
 
+_DERIVE_MASK = object()  # sentinel: "derive the end mask from the state"
+
+
 def plan_tiers(
     model: Model,
     *,
     end_profile: DeviceProfile,
     cloud_profile: DeviceProfile,
     end_state: Optional[DeviceState] = None,
+    end_mask=_DERIVE_MASK,
     codec_params: Optional[Dict] = None,
     compression_rank: int = 0,
     alpha: float = 0.5,
     selection_eps: float = 1.0,
     force_split: Optional[int] = None,
+    cloud_share: float = 1.0,
 ) -> TierPlan:
     """Build the shared tier context for both end-cloud executors.
 
     ``force_split`` pins the split point (used by parity tests and
-    ablations).  Measured-bandwidth feedback at replan time goes through
+    ablations).  ``end_mask`` overrides the eq. 2-4 derivation (the fleet
+    engine passes per-device masks from ``selection.shard_masks_for_fleet``).
+    ``cloud_share`` scales the cloud capability to this device's share of a
+    fleet-shared cloud tier (``cloud_servers / n_devices``), so the split
+    search and every subsequent replan see the fleet bottleneck.
+    Measured-bandwidth feedback at replan time goes through
     ``core.pipeline.replan_pipeline(measured_gbps=...)``, not here."""
     cfg = model.cfg
     end_state = end_state or DeviceState()
     end_cap = capability(end_profile, end_state)
     cloud_cap = capability(cloud_profile, DeviceState())
+    if cloud_share != 1.0:
+        cloud_cap = replace(
+            cloud_cap, gflop_budget=cloud_cap.gflop_budget * cloud_share
+        )
 
-    end_mask = end_mask_from_state(
-        cfg, end_profile, end_state, selection_eps=selection_eps
-    )
+    if end_mask is _DERIVE_MASK:
+        end_mask = end_mask_from_state(
+            cfg, end_profile, end_state, selection_eps=selection_eps
+        )
 
     # Codec (eq. 8).
     codec = codec_params

@@ -39,10 +39,9 @@ class ServingEngine(SlotEngineBase):
         expert_mask=None,
         clock: Optional[Callable[[], float]] = None,
     ):
-        super().__init__(max_batch, clock)
+        super().__init__(max_batch, clock, max_len=max_len)
         self.model = model
         self.params = params
-        self.max_len = max_len
         self.expert_mask = expert_mask
 
         self.cache = kvcache.init_cache(

@@ -1,0 +1,288 @@
+"""Heterogeneous multi-end fleet serving engine (the paper's scalability
+setting: many end devices sharing one cloud tier).
+
+``FleetServingEngine`` runs N heterogeneous end devices against one shared
+cloud.  Each device is a ``FleetLane`` — the streaming end-cloud engine
+(``serving.stream.EndCloudServingEngine``) with
+
+  * its own hardware-aware expert mask carrying the fleet semantics of
+    ``selection.shard_masks_for_fleet`` (eq. 2-4 plus the never-empty
+    guarantee: a device too weak to host any expert still exposes one);
+  * its own route-aware ``PipelinePlan`` computed against the device's
+    *share* of the cloud tier (``core.pipeline.fleet_cloud_share``:
+    ``cloud_servers / n_devices``), so a weak or badly-connected device
+    plans a more cloud-heavy split than a strong one;
+  * its own ``BandwidthEstimator`` + ``LinkStats`` — per-device links drift
+    independently, and a drift replans *only that device* at its own
+    drained safe point (``EndCloudServingEngine._apply_pending_replan``).
+
+The cloud tier is one shared resource: every lane's boundary activations
+drain into the same multi-server ``"cloud"`` entry of one fleet-wide
+``StageTimeline`` (capacity = ``cloud_servers``), so the modeled schedule
+charges cloud contention across devices exactly like ``sim.simulator``'s
+FCFS multi-server queue — the fleet's aggregate decode batch is whatever
+set of boundaries is in flight at a tick.
+
+**Request placement** is route-aware (eq. 10/11 via
+``core.pipeline.place_fleet``): waiting requests are ranked by priority
+P = C/(Comm+eps) and each goes to the device minimizing the eq. 9 marginal
+cost over per-device *measured* bandwidth and in-flight load, subject to
+free-slot capacity.  Placement is late-binding — requests wait at the
+fleet frontend, not on a device queue, so a mid-run bandwidth cut steers
+subsequent requests away from the straggler while its in-flight work
+replans.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.hardware import DeviceProfile, DeviceState
+from repro.core.pipeline import SchedulerConfig, Task, place_fleet
+from repro.core.selection import fleet_device_mask
+from repro.models.model import Model
+from repro.serving.common import Request, StageTimeline
+from repro.serving.stream import EndCloudServingEngine
+
+__all__ = ["FleetLane", "FleetServingEngine"]
+
+
+class FleetLane(EndCloudServingEngine):
+    """One end device's streaming engine inside a fleet.  Identical stage
+    machinery; only the expert-mask derivation differs — it goes through
+    ``selection.fleet_device_mask`` so replan-time state updates keep the
+    fleet's never-empty guarantee (matching ``shard_masks_for_fleet``)."""
+
+    def _derive_end_mask(self, end_state: DeviceState):
+        cfg = self.cfg
+        if cfg.moe is None:
+            return None
+        mask = fleet_device_mask(
+            self.end_profile,
+            end_state,
+            cfg.d_model,
+            cfg.moe.d_ff_expert,
+            cfg.moe.num_experts,
+            cfg.moe.num_groups,
+            gated=cfg.ffn_gated,
+            eps=self.selection_eps,
+            selection_cap=cfg.moe.local_selection_cap,
+        )
+        return jnp.asarray(mask)
+
+
+class FleetServingEngine:
+    """N heterogeneous end devices + one shared cloud tier."""
+
+    def __init__(
+        self,
+        model: Model,
+        params: Dict,
+        *,
+        end_profiles: Sequence[DeviceProfile],
+        cloud_profile: DeviceProfile,
+        end_states: Optional[Sequence[DeviceState]] = None,
+        cloud_servers: int = 1,
+        codec_params: Optional[Dict] = None,
+        compression_rank: int = 0,
+        alpha: float = 0.5,
+        selection_eps: float = 1.0,
+        max_batch: int = 4,  # decode slots per end device
+        max_len: int = 512,
+        n_groups: int = 2,
+        force_splits: Optional[Sequence[Optional[int]]] = None,
+        replan_threshold: float = 0.15,
+        scheduler: Optional[SchedulerConfig] = None,
+        max_spill: float = 1.5,
+        clock: Optional[Callable[[], float]] = None,
+        timing: str = "measured",
+    ):
+        n = len(end_profiles)
+        if n < 1:
+            raise ValueError("fleet needs at least one end device")
+        states = list(end_states) if end_states is not None else [
+            DeviceState() for _ in range(n)
+        ]
+        if len(states) != n:
+            raise ValueError(f"{len(states)} states for {n} profiles")
+        self.model = model
+        self.cfg = model.cfg
+        self.n_devices = n
+        self.cloud_servers = cloud_servers
+        self.clock = clock or time.monotonic
+        self.scheduler = scheduler or SchedulerConfig(alpha=alpha)
+        self.max_spill = max_spill
+        self.waiting: List[Request] = []  # fleet frontend queue (pre-placement)
+        self.placed: List[Dict] = []  # placement log: request -> device
+
+        # One fleet-wide occupancy clock: per-device end/link resources, one
+        # shared multi-server cloud resource every lane's boundaries drain to.
+        self.timeline = StageTimeline(
+            resources=["cloud"], capacity={"cloud": cloud_servers}
+        )
+        self.lanes: List[FleetLane] = []
+        for i in range(n):
+            self.lanes.append(
+                FleetLane(
+                    model,
+                    params,
+                    end_profile=end_profiles[i],
+                    cloud_profile=cloud_profile,
+                    end_state=states[i],
+                    codec_params=codec_params,
+                    compression_rank=compression_rank,
+                    alpha=alpha,
+                    selection_eps=selection_eps,
+                    max_batch=max_batch,
+                    max_len=max_len,
+                    n_groups=n_groups,
+                    force_split=(
+                        force_splits[i] if force_splits is not None else None
+                    ),
+                    replan_threshold=replan_threshold,
+                    clock=self.clock,
+                    timeline=self.timeline,
+                    resources=(f"end{i}", f"link{i}", "cloud"),
+                    cloud_share=cloud_servers / n,
+                    timing=timing,
+                )
+            )
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def submit(self, req: Request):
+        self.lanes[0].validate(req)  # all lanes share max_len
+        req.submit_time = self.clock()
+        self.waiting.append(req)
+
+    def _request_gflops(self, req: Request) -> float:
+        """C(t): total forward GFLOPs this request will cost a device that
+        keeps everything local (prefill + decode; the placement cost model's
+        compute-complexity term)."""
+        tokens = len(req.prompt) + req.max_new_tokens
+        return 2.0 * self.cfg.active_param_count() * tokens * 1e-9
+
+    def _lane_load(self, lane: FleetLane) -> float:
+        """In-flight GFLOPs on a device: queued plus slotted requests."""
+        live = list(lane.waiting) + [r for r in lane.slots if r is not None]
+        return sum(self._request_gflops(r) for r in live)
+
+    def _place(self):
+        """Route-aware placement of frontend requests onto devices with free
+        admission capacity (eq. 10/11 over measured per-device bandwidth and
+        load).  Dispatch preserves submit order within each lane so a
+        single-device fleet admits exactly like a standalone engine."""
+        if not self.waiting:
+            return
+        capacity = [
+            max(0, sum(1 for s in lane.slots if s is None) - len(lane.waiting))
+            for lane in self.lanes
+        ]
+        if not any(capacity):
+            return
+        tasks = [
+            Task(
+                task_id=i,
+                gflops=self._request_gflops(r),
+                comm_bytes=4.0 * len(r.prompt),  # token ids to the device
+                request_id=r.request_id,
+                stage="request",
+            )
+            for i, r in enumerate(self.waiting)
+        ]
+        assignment, _ = place_fleet(
+            tasks,
+            [lane.tiers.end_cap for lane in self.lanes],
+            self.scheduler,
+            loads=[self._lane_load(lane) for lane in self.lanes],
+            measured_gbps=[lane.bw.gbps for lane in self.lanes],
+            capacity=capacity,
+            max_spill=self.max_spill,
+        )
+        still_waiting: List[Request] = []
+        for i, req in enumerate(self.waiting):
+            d = assignment[i]
+            if d < 0:
+                still_waiting.append(req)
+                continue
+            # direct dispatch (already validated + stamped at fleet submit;
+            # lane.submit would re-stamp submit_time and hide frontend wait)
+            self.lanes[d].waiting.append(req)
+            self.placed.append(
+                {"request_id": req.request_id, "device": d,
+                 "gflops": tasks[i].gflops}
+            )
+        self.waiting = still_waiting
+
+    # -- stepping -------------------------------------------------------------
+
+    def step(self) -> int:
+        """One fleet tick: place frontend requests, then advance every lane
+        (each lane drains its cloud boundaries on the shared resource, admits
+        from its own queue, and refills its end tier)."""
+        self._place()
+        emitted = 0
+        for lane in self.lanes:
+            emitted += lane.step()
+        return emitted
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.waiting and not any(
+                lane.waiting or lane._active.any() for lane in self.lanes
+            ):
+                break
+            self.step()
+        return self.finished
+
+    # -- dynamic conditions (per-device: only that lane replans) --------------
+
+    def observe_bandwidth(self, device: int, gbps: float):
+        """Feed one device's link measurement; replans only that lane, at
+        its own drained safe point."""
+        self.lanes[device].observe_bandwidth(gbps)
+
+    def update_device_state(self, device: int, state: DeviceState):
+        """Feed one device's state vector (eq. 2); re-derives that lane's
+        fleet expert mask and replan-checks it alone."""
+        self.lanes[device].update_device_state(state)
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def finished(self) -> List[Request]:
+        return [r for lane in self.lanes for r in lane.finished]
+
+    @property
+    def replan_events(self) -> List[Dict]:
+        return [
+            {"device": i, **ev}
+            for i, lane in enumerate(self.lanes)
+            for ev in lane.replan_events
+        ]
+
+    @property
+    def end_masks(self):
+        return [lane.tiers.end_mask for lane in self.lanes]
+
+    def metrics(self) -> Dict:
+        per_device = [lane.metrics() for lane in self.lanes]
+        tokens = sum(len(r.generated) for r in self.finished)
+        makespan = self.timeline.makespan_s
+        return {
+            "n_devices": self.n_devices,
+            "cloud_servers": self.cloud_servers,
+            "splits": [lane.split for lane in self.lanes],
+            "tokens": tokens,
+            "fleet_makespan_s": makespan,
+            # modeled steady-state fleet rate: every device pipelines against
+            # the shared cloud on one occupancy timeline
+            "aggregate_tokens_per_s": tokens / max(makespan, 1e-12),
+            "cloud_busy_s": self.timeline.busy_s.get("cloud", 0.0),
+            "replan_events": len(self.replan_events),
+            "n_placed": len(self.placed),
+            "per_device": per_device,
+        }

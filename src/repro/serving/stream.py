@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,12 +93,15 @@ class EndCloudServingEngine(SlotEngineBase):
         force_split: Optional[int] = None,
         replan_threshold: float = 0.15,
         clock: Optional[Callable[[], float]] = None,
+        timeline: Optional[StageTimeline] = None,
+        resources: Tuple[str, str, str] = ("end", "link", "cloud"),
+        cloud_share: float = 1.0,
+        timing: str = "measured",
     ):
-        super().__init__(max_batch, clock)
+        super().__init__(max_batch, clock, max_len=max_len)
         self.model = model
         self.cfg = model.cfg
         self.params = params
-        self.max_len = max_len
         self.end_profile = end_profile
         self.cloud_profile = cloud_profile
         self.end_state = end_state or DeviceState()
@@ -110,17 +113,38 @@ class EndCloudServingEngine(SlotEngineBase):
             end_profile=end_profile,
             cloud_profile=cloud_profile,
             end_state=self.end_state,
+            end_mask=self._derive_end_mask(self.end_state),
             codec_params=codec_params,
             compression_rank=compression_rank,
             alpha=alpha,
             selection_eps=selection_eps,
             force_split=force_split,
+            cloud_share=cloud_share,
         )
         self.end_params, self.cloud_params = split_block_params(params, self.split)
 
         self.link = LinkStats()
         self.bw = BandwidthEstimator(self.tiers.end_cap.net_gbps)
-        self.timeline = StageTimeline()
+        # ``timeline``/``resources`` let a fleet share one occupancy clock:
+        # each device brings its own end/link resources while every device's
+        # cloud stage queues on one shared (possibly multi-server) resource.
+        self._res_end, self._res_link, self._res_cloud = resources
+        if timeline is None:
+            timeline = StageTimeline(resources)
+        else:
+            for r in resources:
+                timeline.add_resource(r)
+        self.timeline = timeline
+        # ``timing="measured"`` (default) feeds the timeline this host's
+        # wall-clock stage times; ``"modeled"`` substitutes the planner's
+        # capability cost model (gflops / device budget) — tokens are still
+        # computed for real, but the schedule is deterministic and honors
+        # the *declared* device speeds, which one host cannot reproduce.
+        # Heterogeneous-fleet benchmarks use "modeled".
+        if timing not in ("measured", "modeled"):
+            raise ValueError(f"timing={timing!r}")
+        self.timing = timing
+        self._cloud_share = cloud_share
         self.replan_events: List[Dict] = []
         self._pending_plan: Optional[PipelinePlan] = None
         self._pending_mask = _KEEP
@@ -146,10 +170,22 @@ class EndCloudServingEngine(SlotEngineBase):
         self._group_ready_s = [0.0] * self.n_groups  # modeled token-ready time
 
         self.n_stage_steps = 0  # decode end-steps (== drained cloud-steps)
+        # This engine's own stage seconds (the timeline's busy_s would mix in
+        # other lanes' cloud time when the cloud resource is fleet-shared).
+        self._stage_busy = {"end": 0.0, "link": 0.0, "cloud": 0.0}
         self._prefill_busy = {"end": 0.0, "link": 0.0, "cloud": 0.0}
         self._build_stage_fns()
 
     # -- the active plan lives on self.tiers; everything else delegates ------
+
+    def _derive_end_mask(self, end_state: DeviceState):
+        """Hardware-aware expert mask for this end device (eq. 2-4).  One
+        derivation shared by initial tier planning and replan-time state
+        updates; the fleet lane overrides it with the fleet-mask semantics
+        (``selection.shard_masks_for_fleet``'s never-empty guarantee)."""
+        return end_mask_from_state(
+            self.cfg, self.end_profile, end_state, selection_eps=self.selection_eps
+        )
 
     @property
     def plan(self) -> PipelinePlan:
@@ -313,6 +349,28 @@ class EndCloudServingEngine(SlotEngineBase):
         gs, ge = self._group_slices[g]
         return bool(self._active[gs:ge].any())
 
+    def _stage_seconds(self, stage: str, batch: int) -> Optional[float]:
+        """Modeled per-step service time for ``timing="modeled"`` (None in
+        measured mode): batch tokens through this tier's block range at the
+        device's capability rate.  The cloud rate is un-share-scaled back to
+        one server — contention across fleet lanes is the timeline's job
+        (multi-server queue), not the service time's."""
+        if self.timing != "modeled":
+            return None
+        lg = self.tiers.layer_gflops
+        s = self.split
+        if stage == "end":
+            gflops = batch * sum(lg[:s])
+            rate = self.tiers.end_cap.gflop_budget * 1e3
+        else:
+            gflops = batch * sum(lg[s:])
+            rate = (
+                self.tiers.cloud_cap.gflop_budget
+                / max(self._cloud_share, 1e-12)
+                * 1e3
+            )
+        return gflops / max(rate, 1e-9)
+
     def _run_end_stage(self, g: int):
         gs, ge = self._group_slices[g]
         tokens = jnp.asarray(self._next_token[gs:ge])
@@ -321,13 +379,17 @@ class EndCloudServingEngine(SlotEngineBase):
             self.end_params, tokens, self._end_cache[g]
         )
         z.block_until_ready()
-        te = time.perf_counter() - t0
+        te = self._stage_seconds("end", ge - gs)
+        if te is None:
+            te = time.perf_counter() - t0
 
         nbytes = int(z.size * z.dtype.itemsize)
         t_comm = self.link.record_up(nbytes, self.bw.gbps)
 
-        done_e = self.timeline.occupy("end", self._group_ready_s[g], te)
-        done_l = self.timeline.occupy("link", done_e, t_comm)
+        done_e = self.timeline.occupy(self._res_end, self._group_ready_s[g], te)
+        done_l = self.timeline.occupy(self._res_link, done_e, t_comm)
+        self._stage_busy["end"] += te
+        self._stage_busy["link"] += t_comm
         self.n_stage_steps += 1
 
         self._boundary[g] = z
@@ -342,9 +404,12 @@ class EndCloudServingEngine(SlotEngineBase):
             self.cloud_params, z, self._cloud_cache[g]
         )
         logits.block_until_ready()
-        tc = time.perf_counter() - t0
+        tc = self._stage_seconds("cloud", ge - gs)
+        if tc is None:
+            tc = time.perf_counter() - t0
 
-        done_c = self.timeline.occupy("cloud", self._boundary_ready_s[g], tc)
+        done_c = self.timeline.occupy(self._res_cloud, self._boundary_ready_s[g], tc)
+        self._stage_busy["cloud"] += tc
         self._group_ready_s[g] = done_c
         self.link.record_down((ge - gs) * 4)  # token ids back to the end tier
 
@@ -387,9 +452,7 @@ class EndCloudServingEngine(SlotEngineBase):
         self.tiers = dataclasses.replace(
             self.tiers, end_cap=capability(self.end_profile, end_state)
         )
-        new_mask = end_mask_from_state(
-            self.cfg, self.end_profile, end_state, selection_eps=self.selection_eps
-        )
+        new_mask = self._derive_end_mask(end_state)
         mask_changed = not _masks_equal(new_mask, self.tiers.end_mask)
         if mask_changed:
             self._pending_mask = new_mask
@@ -483,7 +546,13 @@ class EndCloudServingEngine(SlotEngineBase):
 
     def metrics(self) -> Dict[str, float]:
         n = max(self.n_stage_steps, 1)
-        mean = {r: t / n for r, t in self.timeline.busy_s.items()}
+        mean = {r: t / n for r, t in self._stage_busy.items()}
+        # This engine's own pipelined span: when the last cloud drain of
+        # every group has landed (== the timeline makespan for a private
+        # timeline, but free of other lanes' time when the timeline is
+        # fleet-shared).  serial likewise sums only this engine's stages.
+        pipelined_total = max(self._group_ready_s)
+        serial_total = sum(self._stage_busy.values())
         return {
             "split": self.split,
             "compressed": self.tiers.compress,
@@ -496,10 +565,10 @@ class EndCloudServingEngine(SlotEngineBase):
             "mean_t_cloud_s": mean["cloud"],
             # serial layout vs the pipelined resource-occupancy schedule
             "serial_step_s": mean["end"] + mean["link"] + mean["cloud"],
-            "pipelined_step_s": self.timeline.makespan_s / n,
+            "pipelined_step_s": pipelined_total / n,
             "plan_est_step_s": self.plan.est_step_time_s,
-            "pipelined_total_s": self.timeline.makespan_s,
-            "serial_total_s": self.timeline.serial_s,
+            "pipelined_total_s": pipelined_total,
+            "serial_total_s": serial_total,
             "prefill_s": sum(self._prefill_busy.values()),
             "replan_events": len(self.replan_events),
             "measured_gbps": self.bw.gbps,

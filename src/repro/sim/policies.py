@@ -17,7 +17,7 @@ Baselines:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -31,7 +31,7 @@ from repro.core.hardware import (
     DeviceState,
     capability,
 )
-from repro.core.pipeline import plan_pipeline_split
+from repro.core.pipeline import plan_fleet_splits, plan_pipeline_split
 from repro.core.selection import end_mask_for
 from repro.sim.simulator import SimRequest, Stage
 
@@ -48,6 +48,9 @@ class PolicyConfig:
     # paper's aggregate-throughput setting).
     n_end_devices: int = 10
     n_cloud_gpus: int = 2
+    # Heterogeneous fleet (ec2moe-fleet policy): one profile per end device;
+    # None -> n_end_devices copies of end_profile.
+    fleet_profiles: Optional[List[DeviceProfile]] = None
     # effective fraction of peak realized at serving batch sizes
     end_efficiency: float = 0.30
     cloud_efficiency: float = 0.004  # batch-4 seq-256 MoE serving: launch-bound
@@ -231,19 +234,87 @@ def ec2moe_stream_stages(
     return stages
 
 
+def _fleet_context(cfg: ModelConfig, pc: PolicyConfig):
+    """Plan the whole fleet once: per-device caps + splits (each device
+    against its ``n_cloud_gpus / n_devices`` cloud share) plus the shared
+    per-layer/boundary constants — reused across all of a run's requests."""
+    profiles = pc.fleet_profiles or [pc.end_profile] * pc.n_end_devices
+    end_caps = [_eff_cap(p, pc.end_state, pc.end_efficiency) for p in profiles]
+    cloud_cap = _eff_cap(pc.cloud_profile, DeviceState(), pc.cloud_efficiency)
+    step_tokens = pc.batch
+    per_layer = 2.0 * cfg.active_param_count() / cfg.num_layers * step_tokens * 1e-9
+    boundary_bytes = step_tokens * cfg.d_model * 2.0
+    ratio = (
+        compression_ratio(cfg.d_model, pc.compression_rank)
+        if pc.compression_rank > 0
+        else 1.0
+    )
+    plans = plan_fleet_splits(
+        [per_layer] * cfg.num_layers,
+        boundary_bytes,
+        end_caps,
+        cloud_cap,
+        cloud_servers=pc.n_cloud_gpus,
+        compression_ratio=ratio,
+        alpha=pc.alpha,
+        edge_boundary=True,
+    )
+    return profiles, end_caps, cloud_cap, plans, per_layer, boundary_bytes, ratio
+
+
+def ec2moe_fleet_stages(
+    cfg: ModelConfig, pc: PolicyConfig, device: int = 0,
+    n_decode_tokens: int = 32, _ctx=None,
+) -> List[Stage]:
+    """Token-level decode stages for ONE request served by fleet device
+    ``device`` (``serving.fleet.FleetServingEngine``'s model): the split
+    comes from the REAL fleet planner (``plan_fleet_splits`` — each device
+    plans against its ``n_cloud_gpus / n_end_devices`` share of the cloud),
+    so a weak device emits short end stages and long cloud stages while a
+    strong one keeps more blocks local.  Heterogeneity is carried in the
+    per-device service times; the simulator's multi-server ``end`` resource
+    then approximates per-device queues FCFS, exactly like the fleet
+    engine's shared ``StageTimeline``.  ``_ctx`` is a ``_fleet_context``
+    result, so batch callers plan the fleet once, not once per device.
+    """
+    profiles, end_caps, cloud_cap, plans, per_layer, boundary_bytes, ratio = (
+        _ctx if _ctx is not None else _fleet_context(cfg, pc)
+    )
+    d = device % len(profiles)
+    plan, end_cap = plans[d], end_caps[d]
+    split = plan.split_layer
+    end_t = per_layer * split / (end_cap.gflop_budget * 1e3)
+    cloud_t = per_layer * (cfg.num_layers - split) / (cloud_cap.gflop_budget * 1e3)
+    wire = boundary_bytes * (ratio if plan.compress_boundary else 1.0)
+    jitter = pc.jitter_sensitivity.get(
+        "ec2moe-fleet", pc.jitter_sensitivity.get("ec2moe", 0.3)
+    )
+    stages: List[Stage] = []
+    for _ in range(n_decode_tokens):
+        if split > 0:
+            stages.append(Stage("end", end_t))
+        stages.append(Stage("link", payload_bytes=wire))
+        stages.append(Stage("cloud", cloud_t, jitter=jitter))
+    return stages
+
+
 POLICIES: Dict[str, Callable[[ModelConfig, PolicyConfig], List[Stage]]] = {
     "ec2moe": ec2moe_stages,
     "ec2moe-stream": ec2moe_stream_stages,
+    "ec2moe-fleet": ec2moe_fleet_stages,
     "brownoutserve": brownout_stages,
     "edgemoe": edgemoe_stages,
 }
 
 
 def build_request_stages(
-    policy: str, cfg: ModelConfig, pc: PolicyConfig, offered_rps: float = 0.0
+    policy: str, cfg: ModelConfig, pc: PolicyConfig, offered_rps: float = 0.0,
+    device: int = 0,
 ) -> List[Stage]:
     if policy == "ec2moe":
         proto = ec2moe_stages(cfg, pc, offered_rps=offered_rps)
+    elif policy == "ec2moe-fleet":
+        proto = ec2moe_fleet_stages(cfg, pc, device=device)
     else:
         proto = POLICIES[policy](cfg, pc)
     return [Stage(s.resource, s.service_s, s.payload_bytes, s.jitter) for s in proto]
@@ -256,11 +327,21 @@ def make_requests(
     arrivals: np.ndarray,
     offered_rps: float = 0.0,
 ) -> List[SimRequest]:
-    proto = build_request_stages(policy, cfg, pc, offered_rps)
+    if policy == "ec2moe-fleet":
+        # round-robin placement across the heterogeneous fleet; the fleet
+        # is planned once and shared across every per-device proto
+        ctx = _fleet_context(cfg, pc)
+        protos = [
+            ec2moe_fleet_stages(cfg, pc, device=i, _ctx=ctx)
+            for i in range(max(len(ctx[0]), 1))
+        ]
+    else:
+        protos = [build_request_stages(policy, cfg, pc, offered_rps)]
     return [
         SimRequest(
             i, float(t),
-            [Stage(s.resource, s.service_s, s.payload_bytes, s.jitter) for s in proto],
+            [Stage(s.resource, s.service_s, s.payload_bytes, s.jitter)
+             for s in protos[i % len(protos)]],
         )
         for i, t in enumerate(arrivals)
     ]

@@ -158,6 +158,21 @@ def test_device_state_change_updates_end_mask():
     assert len(done) == 4 and all(len(r.generated) == 8 for r in done)
 
 
+def test_stream_rejects_overlong_request(tiny_model):
+    """Regression: the streaming engine validates prompt + max_new_tokens
+    against max_len at submit — beyond it the per-tier KV ring buffers
+    would wrap and corrupt attention mid-stream."""
+    model, params = tiny_model
+    eng = EndCloudServingEngine(
+        model, params,
+        end_profile=PROFILES["a100"], cloud_profile=PROFILES["a100"],
+        max_batch=2, max_len=64, force_split=2,
+    )
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, np.arange(60).astype(np.int32), max_new_tokens=8))
+    assert not eng.waiting
+
+
 def test_cache_split_merge_roundtrip(tiny_model):
     model, _ = tiny_model
     cfg = model.cfg

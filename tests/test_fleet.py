@@ -1,0 +1,228 @@
+"""Heterogeneous multi-end fleet serving (serving.fleet.FleetServingEngine)
+plus the fleet-level planning entry points (core.pipeline).
+
+Covers:
+  (a) single-device fleet is greedy-token-identical to the standalone
+      EndCloudServingEngine at the same plan;
+  (b) a heterogeneous fleet completes every request, places across all
+      devices, and models cloud contention on the shared timeline;
+  (c) per-device drift (bandwidth cut on one lane) replans ONLY that lane,
+      at its own drained safe point, without disturbing the others;
+  (d) plan_fleet_splits gives a weak device a more cloud-heavy split than a
+      strong one; place_fleet respects capacity and prefers good links.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core.hardware import PROFILES, Capability, DeviceProfile, DeviceState
+from repro.core.pipeline import (
+    SchedulerConfig,
+    Task,
+    fleet_cloud_share,
+    place_fleet,
+    plan_fleet_splits,
+)
+from repro.core.selection import fleet_device_mask, shard_masks_for_fleet
+from repro.models.model import build_model
+from repro.serving.common import Request
+from repro.serving.fleet import FleetServingEngine
+from repro.serving.stream import EndCloudServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = smoke_config(get_config("tinyllama-1.1b")).replace(num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, 500, size=int(rng.integers(4, 16))).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+WEAK = DeviceProfile("weak-end", peak_gflops=0.5, mem_gb=4.0,
+                     mem_bw_gbs=25.0, net_gbps=0.25)
+MID = DeviceProfile("mid-end", peak_gflops=2.0, mem_gb=8.0,
+                    mem_bw_gbs=50.0, net_gbps=1.0)
+STRONG = DeviceProfile("strong-end", peak_gflops=4.0, mem_gb=16.0,
+                       mem_bw_gbs=100.0, net_gbps=2.0)
+CLOUD = DeviceProfile("cloud-sim", peak_gflops=24.0, mem_gb=80.0,
+                      mem_bw_gbs=500.0, net_gbps=2.0)
+
+
+# ------------------------------------------------------------ fleet planning
+
+def test_plan_fleet_splits_weak_device_offloads_more():
+    """Each device plans against its share of the cloud; a weak end keeps
+    fewer blocks local than a strong one (eq. 9-11, fleet reading)."""
+    layer_gflops = [1.0] * 8
+    weak = Capability(gflop_budget=0.1, mem_budget_gb=4.0, net_gbps=1.0)
+    strong = Capability(gflop_budget=10.0, mem_budget_gb=16.0, net_gbps=1.0)
+    cloud = Capability(gflop_budget=50.0, mem_budget_gb=80.0, net_gbps=1.0)
+    plans = plan_fleet_splits(
+        layer_gflops, 1e4, [weak, strong], cloud, cloud_servers=2,
+        edge_boundary=True,
+    )
+    assert plans[0].split_layer <= plans[1].split_layer
+    # per-device cloud share halves the cloud rate seen by each device
+    share = fleet_cloud_share(cloud, 2, 2)
+    assert share.gflop_budget == pytest.approx(cloud.gflop_budget)
+    share = fleet_cloud_share(cloud, 1, 4)
+    assert share.gflop_budget == pytest.approx(cloud.gflop_budget / 4)
+
+
+def test_place_fleet_prefers_fast_links_and_respects_capacity():
+    cfg = SchedulerConfig(alpha=0.5, t_end=1e9)
+    caps = [
+        Capability(gflop_budget=1.0, mem_budget_gb=8.0, net_gbps=0.01),
+        Capability(gflop_budget=1.0, mem_budget_gb=8.0, net_gbps=1.0),
+    ]
+    tasks = [Task(i, gflops=1.0, comm_bytes=1e6) for i in range(3)]
+    # equal compute: everything should go to the fast link until its
+    # capacity runs out, then spill to the slow one
+    assignment, stats = place_fleet(tasks, caps, cfg, capacity=[2, 2])
+    assert sorted(assignment) == [0, 1, 1]
+    assert stats["n_unplaced"] == 0
+    # capacity exhausted -> unplaced (-1), not mis-placed
+    assignment, stats = place_fleet(tasks, caps, cfg, capacity=[0, 1])
+    assert sorted(assignment) == [-1, -1, 1]
+    assert stats["n_unplaced"] == 2
+
+
+def test_place_fleet_load_balances_equal_devices():
+    """With identical devices and links, accumulated load spreads tasks."""
+    cfg = SchedulerConfig(alpha=1.0, t_end=1e9)
+    caps = [Capability(1.0, 8.0, 1.0), Capability(1.0, 8.0, 1.0)]
+    tasks = [Task(i, gflops=5.0, comm_bytes=10.0) for i in range(4)]
+    assignment, _ = place_fleet(tasks, caps, cfg)
+    assert sorted(assignment) == [0, 0, 1, 1]
+
+
+def test_fleet_device_mask_never_empty():
+    """A device too weak for any expert still exposes its first one (the
+    shard_masks_for_fleet guarantee, single-device form)."""
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(num_layers=2)
+    moe = cfg.moe
+    dead = DeviceProfile("dead-end", peak_gflops=1e-6, mem_gb=1e-9,
+                         mem_bw_gbs=1.0, net_gbps=0.01)
+    m = fleet_device_mask(
+        dead, DeviceState(), cfg.d_model, moe.d_ff_expert,
+        moe.num_experts, moe.num_groups, gated=cfg.ffn_gated,
+    )
+    assert m.sum() == 1 and m[0]
+    stacked = shard_masks_for_fleet(
+        [dead, PROFILES["a100"]], [DeviceState(), DeviceState()],
+        cfg.d_model, moe.d_ff_expert, moe.num_experts, moe.num_groups,
+        gated=cfg.ffn_gated,
+    )
+    np.testing.assert_array_equal(stacked[0], m)
+    assert stacked.shape == (2, moe.num_experts)
+
+
+# ------------------------------------------------------------- fleet engine
+
+def test_single_device_fleet_token_parity(tiny_model):
+    """(a) N=1 fleet == standalone streaming engine, token for token."""
+    model, params = tiny_model
+    prompts = _prompts(6)
+
+    ref = EndCloudServingEngine(
+        model, params,
+        end_profile=PROFILES["a100"], cloud_profile=PROFILES["a100"],
+        max_batch=4, max_len=64, force_split=2,
+    )
+    for i, p in enumerate(prompts):
+        ref.submit(Request(i, p, max_new_tokens=8))
+    ref.run()
+    want = {r.request_id: r.generated for r in ref.finished}
+
+    fleet = FleetServingEngine(
+        model, params,
+        end_profiles=[PROFILES["a100"]], cloud_profile=PROFILES["a100"],
+        cloud_servers=1, max_batch=4, max_len=64, force_splits=[2],
+    )
+    for i, p in enumerate(prompts):
+        fleet.submit(Request(i, p, max_new_tokens=8))
+    done = fleet.run()
+    assert len(done) == 6
+    assert {r.request_id: r.generated for r in done} == want
+    assert fleet.lanes[0].split == 2
+
+
+def test_heterogeneous_fleet_completes_and_spreads(tiny_model):
+    """(b) three device classes, one shared cloud: every request finishes,
+    placement touches every device, and the shared cloud resource carries
+    all lanes' cloud seconds."""
+    model, params = tiny_model
+    fleet = FleetServingEngine(
+        model, params,
+        end_profiles=[STRONG, MID, WEAK], cloud_profile=CLOUD,
+        cloud_servers=2, max_batch=2, max_len=64,
+        # generous spill: this test wants placement to reach even the weak
+        # device (the default guard would rightly keep it mostly idle)
+        max_spill=10.0,
+    )
+    prompts = _prompts(9, seed=3)
+    for i, p in enumerate(prompts):
+        fleet.submit(Request(i, p, max_new_tokens=6))
+    done = fleet.run()
+    assert len(done) == 9
+    assert all(len(r.generated) == 6 for r in done)
+    m = fleet.metrics()
+    used = {ev["device"] for ev in fleet.placed}
+    assert used == {0, 1, 2}
+    assert m["n_placed"] == 9
+    # cloud busy time on the shared resource == sum of the lanes' own
+    # cloud stage seconds (everything drained through one resource)
+    lane_cloud = sum(l._stage_busy["cloud"] for l in fleet.lanes)
+    assert m["cloud_busy_s"] == pytest.approx(lane_cloud)
+    assert m["fleet_makespan_s"] > 0
+    assert m["aggregate_tokens_per_s"] > 0
+
+
+def test_fleet_bandwidth_cut_replans_only_that_device(tiny_model):
+    """(c) cutting one device's link replans that lane at its safe point;
+    other lanes keep their plans and all streams finish intact."""
+    model, params = tiny_model
+    # force an all-end split on every lane so the straggler's replan has an
+    # obviously better plan to move to
+    R = model.cfg.block_repeat
+    fleet = FleetServingEngine(
+        model, params,
+        end_profiles=[MID, WEAK], cloud_profile=CLOUD,
+        cloud_servers=1, max_batch=2, max_len=64,
+        force_splits=[R, R],
+    )
+    for i, p in enumerate(_prompts(6, seed=5)):
+        fleet.submit(Request(i, p, max_new_tokens=8))
+    for _ in range(3):
+        fleet.step()
+    fleet.observe_bandwidth(1, WEAK.net_gbps * 0.05)
+    done = fleet.run()
+    assert len(done) == 6 and all(len(r.generated) == 8 for r in done)
+    events = fleet.replan_events
+    assert events and all(ev["device"] == 1 for ev in events)
+    assert fleet.lanes[1].split != R  # straggler offloaded blocks
+    assert fleet.lanes[0].split == R  # untouched lane kept its plan
+    assert fleet.lanes[0].replan_events == []
+
+
+def test_fleet_rejects_overlong_request(tiny_model):
+    model, params = tiny_model
+    fleet = FleetServingEngine(
+        model, params,
+        end_profiles=[PROFILES["a100"]], cloud_profile=PROFILES["a100"],
+        max_batch=2, max_len=32,
+    )
+    bad = Request(0, np.arange(20).astype(np.int32), max_new_tokens=20)
+    with pytest.raises(ValueError, match="max_len"):
+        fleet.submit(bad)
+    assert fleet.waiting == []

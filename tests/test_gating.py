@@ -94,6 +94,41 @@ def test_group_topk_restriction():
     assert (groups[:, 0] == groups[:, 1]).all()
 
 
+def test_group_topk_exact_on_probability_ties():
+    """Regression: tied stage-1 probabilities (e.g. uniform logits) must
+    still keep exactly ``group_top_k`` groups — a threshold keep would pass
+    every tied group and break the a2a dispatch fan-out bound."""
+    import dataclasses
+
+    mcfg, params, x = _setup(16, 8, 4, T=8)
+    mcfg = dataclasses.replace(mcfg, group_top_k=2)
+    params = jax.tree.map(jnp.zeros_like, params)  # all-equal logits: 4-way tie
+    probs, p_group, _ = gating.group_gate_probs(params, x, mcfg)
+    pg = np.asarray(p_group)
+    assert ((pg > 0).sum(-1) == 2).all(), pg
+    np.testing.assert_allclose(pg.sum(-1), 1.0, rtol=1e-5)
+    # the fan-out bound holds through eq. 7: nonzero expert probability in
+    # exactly group_top_k groups per token
+    per_group = np.asarray(probs).reshape(-1, 4, 2).sum(-1)
+    assert ((per_group > 0).sum(-1) == 2).all()
+
+
+def test_router_z_finite_under_group_mask():
+    """Regression: a hardware mask (eq. 4) that disables a whole group must
+    not detonate the z-loss — z is computed on pre-mask logits, so
+    logsumexp(NEG_INF)^2 never reaches router_z / aux_loss."""
+    mcfg, params, x = _setup(16, 8, 4)
+    mask = np.ones(8, bool)
+    mask[0:2] = False  # group 0 (Mk = 2) fully masked
+    _, _, aux = gating.group_gate_probs(params, x, mcfg, jnp.asarray(mask))
+    z = float(aux["router_z"])
+    assert np.isfinite(z) and z < 1e6, z
+    out = gating.gate(params, x, mcfg, jnp.asarray(mask))
+    assert np.isfinite(float(out.aux["aux_loss"]))
+    # and the mask itself still works: group 0 gets zero probability
+    assert float(np.asarray(out.probs)[:, :2].max()) < 1e-12
+
+
 def test_load_balance_loss_at_uniform():
     """Perfectly uniform routing gives lb loss == 1 (per Switch)."""
     T, E, K = 128, 8, 4

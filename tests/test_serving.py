@@ -62,6 +62,43 @@ def test_engine_matches_sequential_decode(tiny_model):
     assert req.generated == want
 
 
+def test_prefill_finish_frees_slot_same_pass(tiny_model):
+    """Regression: a request finishing at its prefill token (here
+    max_new_tokens=1) leaves the slot free for the NEXT waiting request in
+    the same admission pass — skipping ahead idles the slot a full engine
+    tick per short request."""
+    model, params = tiny_model
+    eng = ServingEngine(model, params, max_batch=1, max_len=64)
+    short = Request(0, np.arange(5).astype(np.int32), max_new_tokens=1)
+    nxt = Request(1, np.arange(6, 14).astype(np.int32), max_new_tokens=4)
+    eng.submit(short)
+    eng.submit(nxt)
+    eng._admit()  # one admission pass over the single slot
+    assert short.done and short in eng.finished
+    assert eng.slots[0] is nxt, "freed slot must be offered to the next waiter"
+    assert not eng.waiting
+    eng.run()
+    assert len(nxt.generated) == 4
+
+
+def test_rejects_overlong_request(tiny_model):
+    """Regression: prompt + max_new_tokens beyond max_len used to wrap the
+    KV ring buffer silently; submit must fail loudly instead."""
+    model, params = tiny_model
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, np.arange(30).astype(np.int32), max_new_tokens=8))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(1, np.zeros(0, np.int32), max_new_tokens=8))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(3, np.arange(4).astype(np.int32), max_new_tokens=0))
+    assert not eng.waiting
+    # exactly at the bound is admissible
+    eng.submit(Request(2, np.arange(16).astype(np.int32), max_new_tokens=16))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].generated) == 16
+
+
 def test_eos_terminates(tiny_model):
     model, params = tiny_model
     eng = ServingEngine(model, params, max_batch=2, max_len=64)
