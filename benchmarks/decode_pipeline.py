@@ -17,10 +17,22 @@ check is the PO-ECC pipelining claim:
 
 A second phase degrades the end device's state mid-run to exercise dynamic
 replanning (paper fig. 7's changing-load scenario): the engine re-splits
-params and KV caches at a request-safe boundary and keeps decoding.  (A pure
-bandwidth change with the codec off does not move the split here: with the
-boundary shipped at every split, wire cost is split-independent, and the
-replan hysteresis correctly refuses a drain that buys nothing.)
+params and moves KV *pages* between the tier pools at a request-safe
+boundary and keeps decoding.  (A pure bandwidth change with the codec off
+does not move the split here: with the boundary shipped at every split,
+wire cost is split-independent, and the replan hysteresis correctly refuses
+a drain that buys nothing.)
+
+A third phase admits one long prompt into a busy engine and asserts the
+chunked-prefill claim: in-flight decode groups keep emitting tokens on
+every tick of the prompt's prefill (admission is a pipeline stage streaming
+through the same StageTimeline resources as decode, not a stop-the-world
+event), and the engine compiles one trace per chunk/group shape, never one
+per prompt length.
+
+Paged-KV memory accounting (``kv_pages_in_use`` / ``kv_bytes_peak`` /
+``kv_utilization``) is reported alongside the dense ``max_batch x max_len``
+equivalent.
 
     PYTHONPATH=src python -m benchmarks.decode_pipeline [--out bench_decode_pipeline.json]
 """
@@ -112,6 +124,54 @@ def run(
     eng.run()
     m2 = eng.metrics()
 
+    # -- chunked prefill: a long prompt admitted mid-stream must not stall
+    # -- the in-flight decode groups (no stop-the-world admission).  One
+    # -- slot is left free for the long prompt; every other slot decodes a
+    # -- long generation, and must keep emitting on every prefill tick. ----
+    rng = np.random.default_rng(seed + 2)
+    for r in _requests(eng.request_capacity - 1, 64, seed + 3):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    long_prompt = rng.integers(0, 500, size=96).astype(np.int32)
+    long_req = Request(10_000, long_prompt, max_new_tokens=4)
+    eng.submit(long_req)
+    chunks_before = eng.metrics()["prefill_chunks"]
+    stalled_ticks = prefill_ticks = 0
+    while any(j.req is long_req for j in eng._jobs.values()) or eng.waiting:
+        live = [r for r in eng.slots if r is not None]
+        before = sum(len(r.generated) for r in live) + sum(
+            len(r.generated) for r in eng.finished
+        )
+        eng.step()
+        live = [r for r in eng.slots if r is not None]
+        after = sum(len(r.generated) for r in live) + sum(
+            len(r.generated) for r in eng.finished
+        )
+        prefill_ticks += 1
+        if after == before:
+            stalled_ticks += 1
+    # sample KV occupancy while the batch is still live (after run() every
+    # page is freed, so in-use/utilization would always read zero)
+    kv_mid = eng.kv_metrics()
+    eng.run()
+    m3 = eng.metrics()
+    prefill_chunks = m3["prefill_chunks"] - chunks_before
+    assert stalled_ticks == 0, (
+        f"chunked prefill stalled decode for {stalled_ticks}/{prefill_ticks} "
+        "ticks — admission must be a pipeline stage, not a stop-the-world event"
+    )
+    assert prefill_chunks >= len(long_prompt) // eng.prefill_chunk, (
+        prefill_chunks, len(long_prompt), eng.prefill_chunk
+    )
+    # prefill chunks are StageTimeline occupancy on the same resources
+    assert eng._prefill_busy["end"] > 0 and eng._prefill_busy["cloud"] > 0
+    # compiled stage traces are bounded by chunk/group shapes (per stage-fn
+    # rebuild), never by the number of distinct prompt lengths served
+    traces = eng.stage_trace_counts()
+    n_builds = eng._build_gen
+    assert all(c <= n_builds for c in traces.values()), (traces, n_builds)
+
     row = {
         "arch": cfg.name,
         "block_repeat": cfg.block_repeat,
@@ -135,6 +195,18 @@ def run(
         "overlap_gain": round(m["serial_step_s"] / max(m["pipelined_step_s"], 1e-12), 3),
         "replan_events": m2["replan_events"],
         "split_after_load_spike": m2["split"],
+        # paged KV-memory accounting (vs the dense max_batch x max_len
+        # layout); in-use/utilization sampled mid-run with the batch live
+        "kv_pages_in_use": kv_mid["kv_pages_in_use"],
+        "kv_pages_capacity": kv_mid["kv_pages_capacity"],
+        "kv_utilization": round(kv_mid["kv_utilization"], 4),
+        "kv_bytes_peak": m3["kv_bytes_peak"],
+        "kv_bytes_dense_equiv": m3["kv_bytes_dense_equiv"],
+        # chunked-prefill pipeline accounting
+        "prefill_chunks": m3["prefill_chunks"],
+        "long_prompt_prefill_ticks": prefill_ticks,
+        "long_prompt_stalled_ticks": stalled_ticks,
+        "stage_trace_counts": traces,
     }
     print(
         f"[decode_pipeline] split={row['split']}/{cfg.block_repeat} "
@@ -142,6 +214,13 @@ def run(
         f"pipelined={row['pipelined_step_s']*1e3:.2f}ms "
         f"(max stage {row['max_stage_s']*1e3:.2f}ms, x{row['overlap_gain']} overlap) "
         f"replans={row['replan_events']} -> split {row['split_after_load_spike']}",
+        flush=True,
+    )
+    print(
+        f"[decode_pipeline] kv peak {row['kv_bytes_peak']/1024:.1f}KiB "
+        f"vs dense {row['kv_bytes_dense_equiv']/1024:.1f}KiB; "
+        f"long-prompt prefill: {prefill_ticks} ticks, {stalled_ticks} stalled, "
+        f"traces {traces}",
         flush=True,
     )
     assert row["pipelined_step_s"] < row["serial_step_s"], (
@@ -154,8 +233,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="bench_decode_pipeline.json")
     ap.add_argument("--rank", type=int, default=0)
+    # tiny-shape knobs so CI can smoke the overlap / no-stall assertions
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=8)
     args = ap.parse_args()
-    rows = [run(compression_rank=args.rank)]
+    rows = [run(
+        compression_rank=args.rank,
+        num_layers=args.layers,
+        n_requests=args.requests,
+        max_new_tokens=args.new_tokens,
+        max_batch=args.max_batch,
+    )]
     json.dump(rows, open(args.out, "w"), indent=1)
     return 0
 

@@ -364,6 +364,41 @@ def decode_attention(
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def chunk_attention(
+    q: jax.Array,  # [B, C, H, hd] one prefill chunk of queries
+    k_cache: jax.Array,  # [B, S, KV, hd] ring view (pages gathered)
+    v_cache: jax.Array,
+    q_positions: jax.Array,  # [B, C] int32 absolute position of each query
+    key_positions: jax.Array,  # [B, S] int32 position held by each cache slot
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Chunked-prefill attention: C queries against a (possibly
+    ring-buffered / paged) KV cache that already contains the chunk's own
+    k/v.  Per-query causal masking over absolute positions — the C=1 case
+    is exactly :func:`decode_attention`.  O(C·S) memory, no materialized
+    [S, S] score matrix, which is what lets admission stream a long prompt
+    through fixed-shape chunk traces."""
+    B, C, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(B, C, KV, G, hd)
+    s = jnp.einsum(
+        "bcgnd,bkgd->bcgnk", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale  # [B, C, KV, G, S]
+    valid = key_positions[:, None, :] <= q_positions[:, :, None]  # [B, C, S]
+    if window is not None:
+        valid &= key_positions[:, None, :] > (q_positions[:, :, None] - window)
+    valid &= key_positions[:, None, :] >= 0
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bcgnk,bkgd->bcgnd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, C, H, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Attention layer (projections + norm + rope + attention + output)
 # ---------------------------------------------------------------------------

@@ -1,11 +1,29 @@
-"""Decode caches.
+"""Decode caches: dense ring buffers and the paged KV subsystem.
 
-Per pattern-position caches are stacked along a leading ``block_repeat`` axis
-so the decode step can ``lax.scan`` over blocks.  Attention caches are ring
-buffers: slot ``p % W`` holds position ``p``, so a full-attention cache sized
-W behaves exactly like sliding-window attention with window W once it wraps
-(the serving engine sizes W = max_len + headroom; the decode dry-run cells
-size W = seq_len per the assignment).
+**Dense caches** (the original layout, still used by ``Model.prefill`` /
+``Model.decode_step`` and the dry-run input specs): per pattern-position
+caches are stacked along a leading ``block_repeat`` axis so the decode step
+can ``lax.scan`` over blocks.  Attention caches are ring buffers: slot
+``p % W`` holds position ``p``, so a full-attention cache sized W behaves
+exactly like sliding-window attention with window W once it wraps.
+
+**Paged caches** (what the serving engines allocate): instead of a dense
+``[R, B, W, KV, hd]`` ring per slot, a tier owns one shared :class:`PagePool`
+of ``num_pages`` fixed-size pages — leaves are ``[R, P+1, page_size, KV,
+hd]`` (the extra last row is the *garbage page* that absorbs writes routed
+away from unmapped or inactive slots) — plus a per-slot *page table*
+``[pages_per_slot]`` of physical page indices.  Ring semantics are
+preserved at page granularity: position ``p`` lives at table entry
+``(p // page_size) % pages_per_slot``, offset ``p % page_size``, so the
+gathered per-slot view is *exactly* the dense ring buffer of capacity
+``pages_per_slot * page_size`` and the existing ring position math
+(:func:`ring_key_positions`) applies unchanged.  A sliding window is just a
+bounded page list; ring wrap reuses the slot's own pages in place.
+
+The pool's allocator is host-side (NumPy bookkeeping between engine ticks);
+the jitted stage functions take the device page table as a runtime argument,
+so compiled traces depend only on chunk/group *shapes*, never on prompt
+lengths or allocation state.
 
 ``lengths`` is per-slot (continuous batching: every request in the batch has
 its own offset).
@@ -13,10 +31,11 @@ its own offset).
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.ssm import ssm_dims
 
@@ -149,3 +168,342 @@ def prefill_write(kcache: jax.Array, vcache: jax.Array, k, v):
             vcache, v.astype(vcache.dtype), 0, axis=1
         )
     return kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV subsystem
+# ---------------------------------------------------------------------------
+
+
+def pattern_is_pageable(cfg) -> bool:
+    """Paged caches cover self-attention KV only: every layer must be a
+    non-cross attention layer.  SSM states are O(1) per slot (nothing to
+    page) but chunked prefill cannot resume an SSM scan mid-sequence, so
+    hybrid patterns stay on the dense path."""
+    return all(
+        spec.kind == "attn" and not spec.cross_attn for spec in cfg.layer_pattern
+    )
+
+
+def page_geometry(cfg, max_len: int, page_size: int,
+                  chunk_headroom: int = 0) -> Tuple[int, int]:
+    """(pages_per_slot, ring_capacity_tokens) for a slot's bounded page
+    list.  The ring capacity is ``attn_cache_len`` rounded up to whole
+    pages, so the gathered per-slot view is a dense ring buffer of at least
+    the window the dense layout would have used.
+
+    ``chunk_headroom`` (the engine's prefill chunk size) matters only when
+    the ring can actually wrap — a sliding window smaller than ``max_len``:
+    chunked prefill writes a whole chunk before its queries attend, so
+    without ``ring >= window + chunk - 1`` a chunk's own writes could evict
+    keys still inside an early query's attention window.  The extra ring
+    tokens are harmless for decode (positions past the window stay
+    masked)."""
+    W = attn_cache_len(cfg, max_len)
+    if W < max_len and chunk_headroom > 1:
+        W += chunk_headroom - 1
+    pps = -(-W // page_size)  # ceil
+    return pps, pps * page_size
+
+
+def pages_needed(n_tokens: int, page_size: int, pages_per_slot: int) -> int:
+    """Distinct table entries positions ``[0, n_tokens)`` ever touch (entry
+    indices cycle mod ``pages_per_slot``, so a long request plateaus at the
+    ring bound — sliding windows reuse their own pages in place)."""
+    return min(pages_per_slot, -(-n_tokens // page_size))
+
+
+class PagePool:
+    """Host-side page allocator for one tier's shared KV page pool.
+
+    Physical pages ``0..num_pages-1`` index the second axis of the tier's
+    storage leaves (``[R, num_pages+1, page_size, KV, hd]``; row
+    ``num_pages`` is the garbage page and is never allocated).  Per-slot
+    page tables map ring entries to physical pages; ``-1`` = unmapped.
+
+    Admission *reserves* a slot's worst-case page count up front (so decode
+    can never run out of pages mid-stream — there is no preemption), then
+    maps pages lazily as prefill chunks / decode steps first touch each
+    ring entry.  ``free`` returns a finished slot's pages; ``defrag``
+    compacts mapped pages to the lowest physical indices and returns the
+    storage-row permutation to apply device-side.
+
+    In a fleet, one pool instance can be shared across lanes for the cloud
+    tier: each lane registers its slot block via :meth:`add_slots`, so page
+    accounting (and therefore admission) is fleet-wide.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, pages_per_slot: int,
+                 n_slots: int = 0):
+        if num_pages < 1:
+            raise ValueError(f"num_pages={num_pages}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.table = np.full((n_slots, pages_per_slot), -1, np.int32)
+        # LIFO free list, seeded so pops hand out low indices first
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._reserved = np.zeros((n_slots,), np.int64)
+        self._mapped = np.zeros((n_slots,), np.int64)
+        self.peak_in_use = 0
+
+    # -- capacity accounting --------------------------------------------------
+
+    @property
+    def garbage_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def pages_reserved(self) -> int:
+        """Pages promised to admitted slots but not yet mapped."""
+        return int(self._reserved.sum() - self._mapped.sum())
+
+    @property
+    def pages_available(self) -> int:
+        """Pages a new reservation may claim."""
+        return len(self._free) - self.pages_reserved
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / self.num_pages
+
+    def mapped_for(self, slots) -> int:
+        """Pages mapped by a slot subset (a lane's share of a shared pool)."""
+        return int(self._mapped[np.asarray(slots)].sum())
+
+    def add_slots(self, n: int) -> int:
+        """Register ``n`` more slots (fleet lanes sharing a cloud pool);
+        returns the base slot id of the new block."""
+        base = self.table.shape[0]
+        self.table = np.concatenate(
+            [self.table, np.full((n, self.pages_per_slot), -1, np.int32)]
+        )
+        self._reserved = np.concatenate([self._reserved, np.zeros(n, np.int64)])
+        self._mapped = np.concatenate([self._mapped, np.zeros(n, np.int64)])
+        return base
+
+    # -- slot lifecycle -------------------------------------------------------
+
+    def can_reserve(self, n_pages: int) -> bool:
+        return self.pages_available >= n_pages
+
+    def reserve(self, slot: int, n_pages: int):
+        if self._reserved[slot]:
+            raise ValueError(f"slot {slot} already holds a reservation")
+        if n_pages > self.pages_per_slot:
+            raise ValueError(
+                f"reservation {n_pages} exceeds pages_per_slot="
+                f"{self.pages_per_slot}"
+            )
+        if not self.can_reserve(n_pages):
+            raise ValueError(
+                f"pool exhausted: want {n_pages}, available {self.pages_available}"
+            )
+        self._reserved[slot] = n_pages
+
+    def _map_entry(self, slot: int, entry: int):
+        if self.table[slot, entry] >= 0:
+            return  # ring reuse: the entry keeps its page across wraps
+        if self._mapped[slot] >= self._reserved[slot]:
+            raise ValueError(
+                f"slot {slot}: mapping beyond its reservation "
+                f"({self._reserved[slot]} pages)"
+            )
+        self.table[slot, entry] = self._free.pop()
+        self._mapped[slot] += 1
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+
+    def map_range(self, slot: int, start_pos: int, end_pos: int):
+        """Map every ring entry positions ``[start_pos, end_pos)`` touch."""
+        if end_pos <= start_pos:
+            return
+        for pi in range(start_pos // self.page_size,
+                        (end_pos - 1) // self.page_size + 1):
+            self._map_entry(slot, pi % self.pages_per_slot)
+
+    def append(self, slot: int, pos: int):
+        """Ensure the entry for position ``pos`` is mapped (decode write)."""
+        self._map_entry(slot, (pos // self.page_size) % self.pages_per_slot)
+
+    def free(self, slot: int):
+        if not self._reserved[slot]:
+            raise ValueError(f"double free of slot {slot}")
+        for e in range(self.pages_per_slot):
+            if self.table[slot, e] >= 0:
+                self._free.append(int(self.table[slot, e]))
+                self.table[slot, e] = -1
+        self._reserved[slot] = 0
+        self._mapped[slot] = 0
+
+    # -- device views ---------------------------------------------------------
+
+    def device_rows(self, slots, active=None) -> jax.Array:
+        """Device page table for ``slots`` with unmapped entries — and,
+        when ``active`` is given, all entries of inactive slots — routed to
+        the garbage page, so jitted reads stay in-bounds and jitted writes
+        for slots the engine has not activated can never corrupt a live
+        page."""
+        rows = self.table[np.asarray(slots)]
+        rows = np.where(rows < 0, self.garbage_page, rows)
+        if active is not None:
+            rows = np.where(
+                np.asarray(active)[:, None], rows, self.garbage_page
+            )
+        return jnp.asarray(rows, jnp.int32)
+
+    # -- defrag ---------------------------------------------------------------
+
+    def defrag(self) -> np.ndarray:
+        """Compact mapped pages to the lowest physical indices.
+
+        Returns the storage-row permutation ``perm`` (length
+        ``num_pages + 1``, garbage row fixed) such that the device update is
+        ``new_leaf = leaf[:, perm]``; tables and the free list are updated
+        in place."""
+        perm = np.empty((self.num_pages + 1,), np.int64)
+        nxt = 0
+        for s in range(self.table.shape[0]):
+            for e in range(self.pages_per_slot):
+                old = self.table[s, e]
+                if old >= 0:
+                    perm[nxt] = old
+                    self.table[s, e] = nxt
+                    nxt += 1
+        leftovers = sorted(
+            set(range(self.num_pages)) - set(perm[:nxt].tolist())
+        )
+        perm[nxt : self.num_pages] = leftovers
+        perm[self.num_pages] = self.num_pages  # garbage stays put
+        self._free = list(range(self.num_pages - 1, nxt - 1, -1))
+        return perm
+
+
+def init_paged_blocks(cfg, n_blocks: int, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    """Paged KV storage for ``n_blocks`` stacked block repeats of an
+    attention-only pattern: per position, ``k``/``v`` leaves shaped
+    ``[n_blocks, num_pages + 1, page_size, KV, hd]`` (last row = garbage
+    page)."""
+    assert pattern_is_pageable(cfg), "paged storage needs an attn-only pattern"
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    blocks: Dict[str, Dict] = {}
+    for i, _spec in enumerate(cfg.layer_pattern):
+        blocks[f"pos{i}"] = {
+            "k": jnp.zeros((n_blocks, num_pages + 1, page_size, KV, hd), dtype),
+            "v": jnp.zeros((n_blocks, num_pages + 1, page_size, KV, hd), dtype),
+        }
+    return blocks
+
+
+def paged_block_bytes(blocks: Dict) -> int:
+    """Bytes one physical page occupies across all of a tier's block leaves
+    (the unit ``kv_bytes_*`` metrics are denominated in)."""
+    total = 0
+    for leaf in jax.tree.leaves(blocks):
+        if leaf.ndim >= 2 and leaf.shape[0] > 0:
+            total += leaf[:, 0].nbytes
+    return total
+
+
+# -- device-side paged reads/writes (pure; used inside jitted stage fns) -----
+
+
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """pool [P+1, ps, KV, hd], table [B, pps] -> dense ring view
+    [B, pps*ps, KV, hd].  Garbage-routed entries gather junk that the ring
+    position mask (``ring_key_positions`` validity) discards."""
+    B, pps = table.shape
+    buf = pool[table]  # [B, pps, ps, KV, hd]
+    return buf.reshape(B, pps * pool.shape[1], *pool.shape[2:])
+
+
+def paged_ring_write(pool_k: jax.Array, pool_v: jax.Array, k, v,
+                     table: jax.Array, lengths: jax.Array, page_size: int):
+    """Write one new token's k/v ([B, 1, KV, hd]) at ring position
+    ``lengths`` through the page table (paged analogue of
+    :func:`ring_write`)."""
+    pps = table.shape[1]
+    entry = jnp.mod(lengths // page_size, pps)
+    phys = jnp.take_along_axis(table, entry[:, None], axis=1)[:, 0]
+    off = jnp.mod(lengths, page_size)
+    pool_k = pool_k.at[phys, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(v[:, 0].astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def paged_write_tokens(pool_k: jax.Array, pool_v: jax.Array, k, v,
+                       table: jax.Array, positions: jax.Array,
+                       valid: jax.Array, page_size: int):
+    """Write a chunk of tokens ([B, C, KV, hd]) at ``positions`` [B, C]
+    through the page table; rows where ``valid`` [B, C] is False (prompt
+    padding) are routed to the garbage page."""
+    pps = table.shape[1]
+    garbage = pool_k.shape[0] - 1
+    entry = jnp.mod(positions // page_size, pps)
+    phys = jnp.take_along_axis(table, entry, axis=1)
+    phys = jnp.where(valid, phys, garbage)
+    off = jnp.mod(positions, page_size)
+    pool_k = pool_k.at[phys, off].set(k.astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(v.astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+# -- tier re-splits over pages ----------------------------------------------
+
+
+def page_perm(src_tables: np.ndarray, dst_tables: np.ndarray,
+              src_pages: int, dst_pages: int) -> np.ndarray:
+    """Physical-row permutation carrying one engine's pages from a source
+    pool's index space to a destination pool's (used when a replan moves
+    blocks between tiers: the two pools map the same (slot, entry) set —
+    allocation is lockstep — but may assign different physical indices;
+    with a fleet-shared cloud pool the slot rows are the lane's own block).
+
+    ``src_tables``/``dst_tables`` are aligned ``[n_slots, pps]`` table
+    slices.  Returns ``perm`` with ``len == dst_pages + 1`` such that
+    ``dst_leaf = src_leaf[:, perm]`` places every mapped page at its
+    destination row; unmapped destination rows read arbitrary (dead) data.
+    """
+    perm = np.zeros((dst_pages + 1,), np.int64)
+    perm[dst_pages] = src_pages  # garbage -> garbage
+    for src_row, dst_row in zip(np.asarray(src_tables), np.asarray(dst_tables)):
+        if not np.array_equal(src_row >= 0, dst_row >= 0):
+            raise ValueError(
+                f"tier pools out of lockstep "
+                f"({src_row.tolist()} vs {dst_row.tolist()})"
+            )
+        for e in range(len(src_row)):
+            if dst_row[e] >= 0:
+                perm[dst_row[e]] = src_row[e]
+    return perm
+
+
+def resplit_paged_blocks(end_blocks: Dict, cloud_blocks: Dict,
+                         old_split: int, new_split: int,
+                         end_to_cloud: np.ndarray,
+                         cloud_to_end: np.ndarray) -> Tuple[Dict, Dict]:
+    """Move block repeats between the tiers' paged storages at a replan
+    safe point (the paged analogue of ``merge_cache`` + ``split_cache``):
+    the moved leaves' page rows are permuted from the source pool's index
+    space into the destination pool's."""
+    if new_split == old_split:
+        return end_blocks, cloud_blocks
+
+    if new_split < old_split:  # end -> cloud
+        def move(e_leaf, c_leaf):
+            moved = e_leaf[new_split:][:, jnp.asarray(end_to_cloud)]
+            return e_leaf[:new_split], jnp.concatenate([moved, c_leaf], axis=0)
+    else:  # cloud -> end
+        def move(e_leaf, c_leaf):
+            n = new_split - old_split
+            moved = c_leaf[:n][:, jnp.asarray(cloud_to_end)]
+            return jnp.concatenate([e_leaf, moved], axis=0), c_leaf[n:]
+
+    pairs = jax.tree.map(move, end_blocks, cloud_blocks)
+    end_new = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    cloud_new = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return end_new, cloud_new

@@ -115,6 +115,56 @@ class Model:
         logits = transformer.lm_logits(params, cfg, x)[:, 0]
         return logits, {"blocks": new_blocks, "lengths": lengths + 1}
 
+    # -- paged serving (page-table-aware decode + chunked prefill) -----------
+
+    def decode_step_paged(
+        self, params, tokens: jax.Array, page_blocks: Dict,
+        page_table: jax.Array, lengths: jax.Array, *,
+        page_size: int, expert_mask=None,
+    ) -> Tuple[jax.Array, Dict]:
+        """tokens [B, 1] against a paged KV cache -> (logits [B, V],
+        new page blocks).  ``lengths`` advances host-side (the engine owns
+        slot offsets); the trace depends only on shapes, never on the page
+        table contents."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = lengths[:, None]
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, 1))
+        angles = self._angles(pos)
+        x = transformer.embed_inputs(params, cfg, tokens)
+        x, new_blocks, _ = transformer.apply_stack_decode(
+            params, x, cfg, self.topo, angles, page_blocks, lengths,
+            expert_mask=expert_mask, page_table=page_table, page_size=page_size,
+        )
+        logits = transformer.lm_logits(params, cfg, x)[:, 0]
+        return logits, new_blocks
+
+    def prefill_chunk_step(
+        self, params, tokens: jax.Array, page_blocks: Dict,
+        page_table: jax.Array, start: jax.Array, n_valid: jax.Array, *,
+        page_size: int, expert_mask=None,
+    ) -> Tuple[jax.Array, Dict]:
+        """One fixed-size prompt chunk (tokens [B, C], rows past ``n_valid``
+        are padding) written into the paged cache at positions
+        ``start + i`` -> (logits of the last valid row [B, V], new page
+        blocks)."""
+        cfg = self.cfg
+        B, C = tokens.shape
+        positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        pos = positions
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, C))
+        angles = self._angles(pos)
+        x = transformer.embed_inputs(params, cfg, tokens)
+        x, new_blocks = transformer.apply_stack_prefill_chunk(
+            params, x, cfg, self.topo, angles, page_blocks, page_table,
+            positions, n_valid, page_size, expert_mask=expert_mask,
+        )
+        x_last = x[jnp.arange(B), jnp.maximum(n_valid - 1, 0)][:, None]
+        logits = transformer.lm_logits(params, cfg, x_last)[:, 0]
+        return logits, new_blocks
+
 
 def build_model(cfg: ModelConfig, topo: Optional[Topology] = None) -> Model:
     return Model(cfg, topo or single_device_topology())

@@ -299,19 +299,39 @@ def apply_layer_decode(
     cache_entry: Dict,
     lengths: jax.Array,  # [B]
     expert_mask=None,
+    page_table: Optional[jax.Array] = None,  # [B, pps] -> paged KV layout
+    page_size: int = 0,
 ):
-    """Single-token decode layer.  Returns (x, new_cache_entry, aux)."""
+    """Single-token decode layer.  Returns (x, new_cache_entry, aux).
+
+    With ``page_table`` set, attention ``k``/``v`` leaves are page pools
+    ``[P+1, page_size, KV, hd]``: the write scatters through the table and
+    the read gathers the slot's bounded page list back into the exact dense
+    ring view, so the attention math (and therefore greedy decode) is
+    unchanged from the dense layout."""
     aux: Dict[str, jax.Array] = {}
     new_entry = dict(cache_entry)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == "attn":
         q, k, v = attn.project_qkv(p["attn"], h, cfg, angles)
-        kc, vc = kvcache.ring_write(cache_entry["k"], cache_entry["v"], k, v, lengths)
-        new_entry["k"], new_entry["v"] = kc, vc
-        W = kc.shape[1]
+        if page_table is not None:
+            kc, vc = kvcache.paged_ring_write(
+                cache_entry["k"], cache_entry["v"], k, v,
+                page_table, lengths, page_size,
+            )
+            new_entry["k"], new_entry["v"] = kc, vc
+            kbuf = kvcache.paged_gather(kc, page_table)
+            vbuf = kvcache.paged_gather(vc, page_table)
+        else:
+            kc, vc = kvcache.ring_write(
+                cache_entry["k"], cache_entry["v"], k, v, lengths
+            )
+            new_entry["k"], new_entry["v"] = kc, vc
+            kbuf, vbuf = kc, vc
+        W = kbuf.shape[1]
         key_pos = kvcache.ring_key_positions(lengths, W)
         o = attn.decode_attention(
-            q, kc, vc, lengths, key_pos, window=cfg.sliding_window
+            q, kbuf, vbuf, lengths, key_pos, window=cfg.sliding_window
         )
         x = x + attn.output_proj(p["attn"], o)
         if spec.cross_attn:
@@ -410,6 +430,9 @@ def apply_stack_decode(
     cache_blocks: Dict,
     lengths: jax.Array,
     expert_mask=None,
+    *,
+    page_table: Optional[jax.Array] = None,
+    page_size: int = 0,
 ):
     def block_fn(carry_x, xs):
         block_params, cache_entry = xs
@@ -420,6 +443,7 @@ def apply_stack_decode(
             bx, ne, aux = apply_layer_decode(
                 block_params[f"pos{i}"], bx, spec, cfg, topo, angles,
                 cache_entry[f"pos{i}"], lengths, expert_mask=expert_mask,
+                page_table=page_table, page_size=page_size,
             )
             new_entries[f"pos{i}"] = ne
             aux_acc = _merge_aux(aux_acc, aux)
@@ -430,6 +454,68 @@ def apply_stack_decode(
     )
     aux = {k: v.sum() for k, v in aux_stack.items()}
     return x, new_cache, aux
+
+
+def apply_stack_prefill_chunk(
+    params: Dict,
+    x: jax.Array,  # [B, C, d] one fixed-size prompt chunk
+    cfg,
+    topo,
+    angles,  # [B, C, hd/2]
+    page_blocks: Dict,  # paged KV storage (attn-only pattern)
+    page_table: jax.Array,  # [B, pps]
+    positions: jax.Array,  # [B, C] absolute position of every chunk row
+    n_valid: jax.Array,  # [B] rows < n_valid are real, the rest padding
+    page_size: int,
+    expert_mask=None,
+):
+    """Chunked prefill over the repeated block pattern (attention-only
+    patterns; the serving engines gate on ``kvcache.pattern_is_pageable``).
+
+    Each layer writes the chunk's k/v through the page table first (padding
+    rows routed to the garbage page), then attends the chunk's queries
+    against the slot's gathered ring view — so a prompt streams through one
+    compiled trace per *chunk shape*, never one per prompt length, and the
+    chunk leaves exactly the pages a whole-prompt prefill would have left.
+    Returns (x [B, C, d], new_page_blocks)."""
+    C = x.shape[1]
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]  # [B, C]
+    last_pos = positions[:, 0] + n_valid - 1  # [B] final real position
+
+    def block_fn(carry_x, xs):
+        block_params, cache_entry = xs
+        bx = carry_x
+        new_entries = {}
+        for i, spec in enumerate(cfg.layer_pattern):
+            p = block_params[f"pos{i}"]
+            ce = cache_entry[f"pos{i}"]
+            h = rms_norm(bx, p["norm1"], cfg.norm_eps)
+            q, k, v = attn.project_qkv(p["attn"], h, cfg, angles)
+            kc, vc = kvcache.paged_write_tokens(
+                ce["k"], ce["v"], k, v, page_table, positions, valid, page_size
+            )
+            kbuf = kvcache.paged_gather(kc, page_table)
+            vbuf = kvcache.paged_gather(vc, page_table)
+            key_pos = kvcache.ring_key_positions(last_pos, kbuf.shape[1])
+            o = attn.chunk_attention(
+                q, kbuf, vbuf, positions, key_pos, window=cfg.sliding_window
+            )
+            bx = bx + attn.output_proj(p["attn"], o)
+            if _has_ffn(spec, cfg):
+                h = rms_norm(bx, p["norm2"], cfg.norm_eps)
+                if spec.moe:
+                    y, _ = apply_moe(
+                        p["moe"], h, cfg, topo, expert_mask=expert_mask,
+                        train=False,
+                    )
+                else:
+                    y = apply_mlp(p["ffn"], h, cfg.act)
+                bx = bx + y
+            new_entries[f"pos{i}"] = {"k": kc, "v": vc}
+        return bx, new_entries
+
+    x, new_blocks = jax.lax.scan(block_fn, x, (params["blocks"], page_blocks))
+    return x, new_blocks
 
 
 def apply_encoder(params: Dict, frame_embeds: jax.Array, cfg, topo):

@@ -13,6 +13,7 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
 
@@ -172,6 +173,40 @@ class StageTimeline:
         }
 
 
+class TraceCounter:
+    """Counts distinct argument shape/dtype signatures seen by a jitted
+    callable — each distinct signature is one compiled trace, so engines can
+    assert their stage-trace count is bounded by chunk/group *shapes* rather
+    than by distinct prompt lengths.  ``log`` is a caller-owned set so the
+    count survives stage-function rebuilds (each rebuild passes a fresh
+    ``generation`` tag: a rebuilt jit re-traces even for seen shapes).
+
+    ``sig_from`` skips leading arguments whose shapes cannot change within
+    a build — the engines pass the (large) params pytree first, and any
+    params re-split comes with a rebuilt wrapper/new generation — keeping
+    the per-call bookkeeping on the decode hot path to a handful of leaves.
+    """
+
+    def __init__(self, fn: Callable, log: set, generation: int = 0,
+                 sig_from: int = 1):
+        self._fn = fn
+        self._log = log
+        self._gen = generation
+        self._sig_from = sig_from
+
+    @staticmethod
+    def _sig(tree) -> Tuple:
+        return tuple(
+            (tuple(leaf.shape), str(getattr(leaf, "dtype", type(leaf))))
+            if hasattr(leaf, "shape") else (type(leaf).__name__,)
+            for leaf in jax.tree.leaves(tree)
+        )
+
+    def __call__(self, *args):
+        self._log.add((self._gen, self._sig(args[self._sig_from :])))
+        return self._fn(*args)
+
+
 class SlotEngineBase:
     """Slot lifecycle shared by the serving engines.
 
@@ -181,7 +216,9 @@ class SlotEngineBase:
     into the batch cache — called only when the request actually continues
     past prefill, so requests that finish on their first token skip the
     copy) and drive decode via ``step``; the base provides admission, token
-    harvesting, and the run loop.
+    harvesting, and the run loop.  ``_release_slot`` is called whenever a
+    request leaves its slot (finish at prefill or at decode) so paged
+    engines can return the slot's KV pages to the pool.
     """
 
     def __init__(
@@ -222,15 +259,54 @@ class SlotEngineBase:
                     f"max_new_tokens ({req.max_new_tokens}) = {need} exceeds "
                     f"max_len={self.max_len}; the KV ring buffer would wrap"
                 )
+        cap = self._page_capacity()
+        if cap is not None:
+            pages = self._pages_for(req)
+            if pages > cap:
+                raise ValueError(
+                    f"request {req.request_id}: needs {pages} KV pages but "
+                    f"the smallest page pool holds only {cap} (kv_pages too "
+                    "small for prompt + max_new_tokens); it could never be "
+                    "admitted and would block the FIFO queue forever"
+                )
+
+    def _page_capacity(self) -> Optional[int]:
+        """Hook: total pages of the engine's most constrained pool, or None
+        for dense engines.  Paired with ``_pages_for``; the base validates
+        that a request's worst-case reservation can ever be satisfied."""
+        return None
+
+    def _pages_for(self, req: Request) -> int:
+        raise NotImplementedError
 
     def submit(self, req: Request):
         self.validate(req)
         req.submit_time = self.clock()
         self.waiting.append(req)
 
-    def _admittable(self, slot: int) -> bool:
-        """Hook: may a waiting request be admitted into this free slot now?"""
+    def _slot_usable(self, slot: int) -> bool:
+        """Hook: is this slot index eligible to hold requests at all?
+        (Engines that pad the batch for equal-sized micro-batch groups mark
+        padding slots unusable; slots mid-prefill are unusable too.)"""
         return True
+
+    def _admittable(self, slot: int, req: Request) -> bool:
+        """Hook: may ``req`` be admitted into this free slot right now?
+        Paged engines check KV page availability here — admission is gated
+        on pages, not just on a free slot."""
+        return True
+
+    def free_slots(self) -> int:
+        """Slots currently able to accept a request (excludes padding slots
+        and slots held by an in-flight chunked prefill)."""
+        return sum(
+            1 for i, s in enumerate(self.slots)
+            if s is None and self._slot_usable(i)
+        )
+
+    def busy(self) -> bool:
+        """Anything left to do?  (Queued, decoding, or mid-prefill.)"""
+        return bool(self.waiting) or bool(self._active.any())
 
     def _admit(self):
         """Prefill waiting requests into free slots.
@@ -243,8 +319,9 @@ class SlotEngineBase:
         for slot in range(self.max_batch):
             while (
                 self.slots[slot] is None
+                and self._slot_usable(slot)
                 and self.waiting
-                and self._admittable(slot)
+                and self._admittable(slot, self.waiting[0])
             ):
                 req = self.waiting.pop(0)
                 tok, payload = self._prefill_into_slot(slot, req)
@@ -254,6 +331,7 @@ class SlotEngineBase:
                 if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
                     req.finish_time = self.clock()
                     self.finished.append(req)
+                    self._release_slot(slot)
                     continue  # slot still free: offer it to the next waiter
                 self._install_slot(slot, payload)
                 self.slots[slot] = req
@@ -265,6 +343,9 @@ class SlotEngineBase:
 
     def _install_slot(self, slot: int, payload):
         raise NotImplementedError
+
+    def _release_slot(self, slot: int):
+        """Hook: a request left this slot (paged engines free its pages)."""
 
     def _harvest(self, next_ids: np.ndarray, slot_range=None) -> int:
         """Record one decoded token per active slot; retire finished slots.
@@ -283,6 +364,7 @@ class SlotEngineBase:
                 self.finished.append(req)
                 self.slots[slot] = None
                 self._active[slot] = False
+                self._release_slot(slot)
         return n_emitted
 
     # -- stepping ------------------------------------------------------------
@@ -293,7 +375,7 @@ class SlotEngineBase:
     def run(self, max_steps: int = 10_000):
         """Run until all submitted requests finish."""
         for _ in range(max_steps):
-            if not self.waiting and not self._active.any():
+            if not self.busy():
                 break
             self.step()
         return self.finished

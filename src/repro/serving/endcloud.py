@@ -46,6 +46,7 @@ __all__ = [
     "plan_tiers",
     "end_mask_from_state",
     "split_block_params",
+    "init_tier_pages",
     "EndCloudPipeline",
 ]
 
@@ -86,6 +87,23 @@ def split_block_params(params: Dict, split: int) -> Tuple[Dict, Dict]:
     end = {"embed": params["embed"], "blocks": end_blocks}
     cloud = {k: v for k, v in params.items() if k != "blocks"}
     cloud["blocks"] = cloud_blocks
+    return end, cloud
+
+
+def init_tier_pages(
+    cfg, split: int, end_pages: int, cloud_pages: int, page_size: int, dtype
+) -> Tuple[Dict, Dict]:
+    """Paged KV storage for the two tiers of a block split: the end pool
+    backs blocks ``[0, split)``, the cloud pool ``[split, R)``.  The pools
+    may have different capacities (a fleet-shared cloud pool is sized for
+    every lane's slots); a replan later moves block rows between the two
+    storages via ``kvcache.resplit_paged_blocks``."""
+    from repro.models import kvcache
+
+    end = kvcache.init_paged_blocks(cfg, split, end_pages, page_size, dtype)
+    cloud = kvcache.init_paged_blocks(
+        cfg, cfg.block_repeat - split, cloud_pages, page_size, dtype
+    )
     return end, cloud
 
 

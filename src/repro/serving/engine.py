@@ -1,21 +1,27 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving engine with continuous batching over a paged KV cache.
 
 Slot-based: a fixed decode batch of ``max_batch`` slots; finished requests
-free their slot and waiting requests are prefilled into it (their KV
-written into the slot's ring-buffer range).  Per-slot lengths come straight
-from the cache's ``lengths`` vector, so slots at different positions decode
-together — the standard continuous-batching pattern, expressed with one
-jitted decode step over the whole cache.
+free their slot and waiting requests are prefilled into it.  For
+attention-only layer patterns the engine is *paged*: all slots share one
+:class:`~repro.models.kvcache.PagePool` of fixed-size KV pages, each slot
+owns a bounded page list (ring semantics at page granularity), admission is
+gated on page availability (``pages_needed`` reserved up front, mapped
+lazily), and prompts are prefilled in fixed-size chunks — one compiled
+trace per chunk shape, never one per prompt length.  A skewed batch (one
+long prompt among short ones) therefore allocates only the pages it
+touches instead of ``max_batch × max_len`` dense rings.
 
-Single-slot prefill keeps the implementation simple (prefill batch = 1 via
-padding to the slot's prompt bucket).  Slot admission/harvesting lives in
-``serving.common.SlotEngineBase``, shared with the streaming end-cloud
-engine (``serving.stream``).
+Hybrid patterns (SSM, cross-attention) fall back to the original dense
+ring-buffer path — their recurrent prefill state cannot stream through
+fixed-shape chunks.
+
+Slot admission/harvesting lives in ``serving.common.SlotEngineBase``,
+shared with the streaming end-cloud engine (``serving.stream``).
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +29,7 @@ import numpy as np
 
 from repro.models import kvcache
 from repro.models.model import Model
-from repro.serving.common import Request, SlotEngineBase
+from repro.serving.common import Request, SlotEngineBase, TraceCounter
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -38,35 +44,120 @@ class ServingEngine(SlotEngineBase):
         max_len: int = 512,
         expert_mask=None,
         clock: Optional[Callable[[], float]] = None,
+        page_size: int = 16,
+        kv_pages: Optional[int] = None,
+        prefill_chunk: int = 32,
     ):
         super().__init__(max_batch, clock, max_len=max_len)
         self.model = model
         self.params = params
         self.expert_mask = expert_mask
+        self.paged = kvcache.pattern_is_pageable(model.cfg)
+        self._traces: Dict[str, set] = {}
 
-        self.cache = kvcache.init_cache(
-            model.cfg, max_batch, max_len, jnp.dtype(model.cfg.dtype)
-        )
-
-        self._decode = jax.jit(
-            lambda p, t, c: model.decode_step(p, t, c, expert_mask=expert_mask)
-        )
-        self._prefill_one = jax.jit(
-            lambda p, b: model.prefill(
-                p, b, max_len=max_len, expert_mask=expert_mask
-            ),
-        )
+        if self.paged:
+            cfg = model.cfg
+            self.page_size = page_size
+            self.pages_per_slot, ring = kvcache.page_geometry(
+                cfg, max_len, page_size, chunk_headroom=prefill_chunk
+            )
+            if prefill_chunk > ring:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} exceeds the ring "
+                    f"capacity {ring} (a chunk must fit the page list)"
+                )
+            self.prefill_chunk = prefill_chunk
+            self.pool = kvcache.PagePool(
+                kv_pages or max_batch * self.pages_per_slot,
+                page_size, self.pages_per_slot, n_slots=max_batch,
+            )
+            self.pages = kvcache.init_paged_blocks(
+                cfg, cfg.block_repeat, self.pool.num_pages, page_size,
+                jnp.dtype(cfg.dtype),
+            )
+            self._slot_len = np.zeros((max_batch,), np.int64)
+            self._decode = TraceCounter(
+                jax.jit(
+                    lambda p, t, pg, tab, ln: model.decode_step_paged(
+                        p, t, pg, tab, ln,
+                        page_size=page_size, expert_mask=expert_mask,
+                    )
+                ),
+                self._traces.setdefault("decode", set()),
+            )
+            self._prefill_chunk_fn = TraceCounter(
+                jax.jit(
+                    lambda p, t, pg, tab, s, v: model.prefill_chunk_step(
+                        p, t, pg, tab, s, v,
+                        page_size=page_size, expert_mask=expert_mask,
+                    )
+                ),
+                self._traces.setdefault("prefill_chunk", set()),
+            )
+        else:
+            self.cache = kvcache.init_cache(
+                model.cfg, max_batch, max_len, jnp.dtype(model.cfg.dtype)
+            )
+            self._decode = jax.jit(
+                lambda p, t, c: model.decode_step(p, t, c, expert_mask=expert_mask)
+            )
+            self._prefill_one = jax.jit(
+                lambda p, b: model.prefill(
+                    p, b, max_len=max_len, expert_mask=expert_mask
+                ),
+            )
 
     # -- request lifecycle ---------------------------------------------------
 
-    def _prefill_into_slot(self, slot: int, req: Request):
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, pcache = self._prefill_one(self.params, {"tokens": tokens})
-        return int(jnp.argmax(logits[0])), pcache
+    def _pages_for(self, req: Request) -> int:
+        return kvcache.pages_needed(
+            len(req.prompt) + req.max_new_tokens,
+            self.page_size, self.pages_per_slot,
+        )
 
-    def _install_slot(self, slot: int, pcache):
-        # copy the single-request cache into this slot of the batch cache
-        self.cache = kvcache.install_slot(self.cache, slot, pcache)
+    def _page_capacity(self):
+        return self.pool.num_pages if self.paged else None
+
+    def _admittable(self, slot: int, req: Request) -> bool:
+        # page-aware admission: a free slot alone is not enough — the
+        # request's worst-case page count must be reservable now, because
+        # there is no preemption once it starts decoding
+        if not self.paged:
+            return True
+        return self.pool.can_reserve(self._pages_for(req))
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        if not self.paged:
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, pcache = self._prefill_one(self.params, {"tokens": tokens})
+            return int(jnp.argmax(logits[0])), pcache
+        # chunked prefill straight into the slot's pages (no install copy)
+        S = len(req.prompt)
+        C = self.prefill_chunk
+        self.pool.reserve(slot, self._pages_for(req))
+        logits = None
+        for p0 in range(0, S, C):
+            v = min(C, S - p0)
+            self.pool.map_range(slot, p0, p0 + v)
+            chunk = np.zeros((C,), np.int32)
+            chunk[:v] = req.prompt[p0 : p0 + v]
+            logits, self.pages = self._prefill_chunk_fn(
+                self.params, jnp.asarray(chunk)[None],
+                self.pages, self.pool.device_rows([slot]),
+                jnp.asarray([p0], jnp.int32), jnp.asarray([v], jnp.int32),
+            )
+        return int(jnp.argmax(logits[0])), S
+
+    def _install_slot(self, slot: int, payload):
+        if not self.paged:
+            self.cache = kvcache.install_slot(self.cache, slot, payload)
+        else:
+            self._slot_len[slot] = payload  # pages already hold the prompt
+
+    def _release_slot(self, slot: int):
+        if self.paged:
+            self.pool.free(slot)
+            self._slot_len[slot] = 0
 
     # -- stepping -------------------------------------------------------------
 
@@ -77,6 +168,44 @@ class ServingEngine(SlotEngineBase):
         if not self._active.any():
             return 0
         tokens = jnp.asarray(self._next_token)
-        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        if not self.paged:
+            logits, self.cache = self._decode(self.params, tokens, self.cache)
+        else:
+            for slot in range(self.max_batch):
+                if self._active[slot]:
+                    self.pool.append(slot, int(self._slot_len[slot]))
+            table = self.pool.device_rows(
+                range(self.max_batch), active=self._active
+            )
+            lengths = jnp.asarray(self._slot_len, jnp.int32)
+            logits, self.pages = self._decode(
+                self.params, tokens, self.pages, table, lengths
+            )
+            self._slot_len[self._active] += 1
         next_ids = np.asarray(jnp.argmax(logits, -1))
         return self._harvest(next_ids)
+
+    # -- introspection --------------------------------------------------------
+
+    def stage_trace_counts(self) -> Dict[str, int]:
+        """Distinct compiled-trace signatures per stage function (bounded by
+        chunk/group shapes, not by distinct prompt lengths)."""
+        return {k: len(v) for k, v in self._traces.items()}
+
+    def metrics(self) -> Dict[str, float]:
+        m: Dict[str, float] = {
+            "requests_finished": len(self.finished),
+            "paged": self.paged,
+        }
+        if self.paged:
+            page_bytes = kvcache.paged_block_bytes(self.pages)
+            m.update(
+                kv_pages_in_use=self.pool.pages_in_use,
+                kv_pages_capacity=self.pool.num_pages,
+                kv_utilization=self.pool.utilization,
+                kv_bytes_peak=self.pool.peak_in_use * page_bytes,
+                kv_bytes_dense_equiv=(
+                    self.max_batch * self.pages_per_slot * page_bytes
+                ),
+            )
+        return m

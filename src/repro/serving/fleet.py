@@ -21,7 +21,11 @@ drain into the same multi-server ``"cloud"`` entry of one fleet-wide
 ``StageTimeline`` (capacity = ``cloud_servers``), so the modeled schedule
 charges cloud contention across devices exactly like ``sim.simulator``'s
 FCFS multi-server queue — the fleet's aggregate decode batch is whatever
-set of boundaries is in flight at a tick.
+set of boundaries is in flight at a tick.  Cloud KV *memory* is shared the
+same way: all lanes draw pages from one cloud-side
+:class:`~repro.models.kvcache.PagePool` (each lane registers its slot
+block), so admission anywhere in the fleet is gated on fleet-wide cloud
+page availability, while each lane keeps a private end-tier pool.
 
 **Request placement** is route-aware (eq. 10/11 via
 ``core.pipeline.place_fleet``): waiting requests are ranked by priority
@@ -40,9 +44,13 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 
+import jax
+
 from repro.core.hardware import DeviceProfile, DeviceState
 from repro.core.pipeline import SchedulerConfig, Task, place_fleet
 from repro.core.selection import fleet_device_mask
+from repro.models import kvcache
+from repro.models.kvcache import PagePool
 from repro.models.model import Model
 from repro.serving.common import Request, StageTimeline
 from repro.serving.stream import EndCloudServingEngine
@@ -99,6 +107,10 @@ class FleetServingEngine:
         max_spill: float = 1.5,
         clock: Optional[Callable[[], float]] = None,
         timing: str = "measured",
+        page_size: int = 16,
+        kv_pages: Optional[int] = None,  # per-lane end-pool capacity
+        cloud_kv_pages: Optional[int] = None,  # fleet-shared cloud capacity
+        prefill_chunk: int = 16,
     ):
         n = len(end_profiles)
         if n < 1:
@@ -122,6 +134,20 @@ class FleetServingEngine:
         # shared multi-server cloud resource every lane's boundaries drain to.
         self.timeline = StageTimeline(
             resources=["cloud"], capacity={"cloud": cloud_servers}
+        )
+        # One fleet-wide cloud page pool: lanes register their slot blocks
+        # via PagePool.add_slots, so cloud KV admission is fleet-global.
+        # NOTE an in-process artifact: each lane allocates cloud *storage*
+        # sized to this shared capacity (indices are fleet-global), so host
+        # memory duplicates what a real deployment's single cloud-side
+        # storage would hold once; the shared accounting — what admission
+        # gates on — is faithful.  Cap it with ``cloud_kv_pages``.
+        pps, _ring = kvcache.page_geometry(
+            model.cfg, max_len, page_size, chunk_headroom=prefill_chunk
+        )
+        padded = EndCloudServingEngine.padded_batch(max_batch, n_groups)
+        self.cloud_pool = PagePool(
+            cloud_kv_pages or n * padded * pps, page_size, pps, n_slots=0
         )
         self.lanes: List[FleetLane] = []
         for i in range(n):
@@ -148,6 +174,10 @@ class FleetServingEngine:
                     resources=(f"end{i}", f"link{i}", "cloud"),
                     cloud_share=cloud_servers / n,
                     timing=timing,
+                    page_size=page_size,
+                    kv_pages=kv_pages,
+                    prefill_chunk=prefill_chunk,
+                    cloud_pool=self.cloud_pool,
                 )
             )
 
@@ -178,7 +208,7 @@ class FleetServingEngine:
         if not self.waiting:
             return
         capacity = [
-            max(0, sum(1 for s in lane.slots if s is None) - len(lane.waiting))
+            max(0, lane.free_slots() - len(lane.waiting))
             for lane in self.lanes
         ]
         if not any(capacity):
@@ -232,7 +262,7 @@ class FleetServingEngine:
     def run(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
             if not self.waiting and not any(
-                lane.waiting or lane._active.any() for lane in self.lanes
+                lane.busy() for lane in self.lanes
             ):
                 break
             self.step()
@@ -268,10 +298,33 @@ class FleetServingEngine:
     def end_masks(self):
         return [lane.tiers.end_mask for lane in self.lanes]
 
+    def defrag_kv(self):
+        """Compact the fleet-shared cloud pool: one permutation, applied to
+        every lane's cloud-tier storage (lane-private end pools defrag at
+        each lane's own replan safe points)."""
+        perm = self.cloud_pool.defrag()
+        for lane in self.lanes:
+            lane._cloud_pages = jax.tree.map(
+                lambda leaf: leaf[:, perm], lane._cloud_pages
+            )
+
     def metrics(self) -> Dict:
         per_device = [lane.metrics() for lane in self.lanes]
         tokens = sum(len(r.generated) for r in self.finished)
         makespan = self.timeline.makespan_s
+        end_in_use = sum(lane.end_pool.pages_in_use for lane in self.lanes)
+        end_cap = sum(lane.end_pool.num_pages for lane in self.lanes)
+        end_peak_bytes = sum(
+            lane.end_pool.peak_in_use
+            * kvcache.paged_block_bytes(lane._end_pages)
+            for lane in self.lanes
+        )
+        cloud_page_bytes = max(
+            (kvcache.paged_block_bytes(lane._cloud_pages) for lane in self.lanes),
+            default=0,
+        )
+        kv_in_use = end_in_use + self.cloud_pool.pages_in_use
+        kv_cap = end_cap + self.cloud_pool.num_pages
         return {
             "n_devices": self.n_devices,
             "cloud_servers": self.cloud_servers,
@@ -284,5 +337,13 @@ class FleetServingEngine:
             "cloud_busy_s": self.timeline.busy_s.get("cloud", 0.0),
             "replan_events": len(self.replan_events),
             "n_placed": len(self.placed),
+            # fleet-wide paged-KV accounting: per-lane end pools plus the
+            # one shared cloud pool (admission anywhere gates on the latter)
+            "kv_pages_in_use": kv_in_use,
+            "kv_pages_capacity": kv_cap,
+            "kv_utilization": kv_in_use / max(kv_cap, 1),
+            "kv_bytes_peak": (
+                end_peak_bytes + self.cloud_pool.peak_in_use * cloud_page_bytes
+            ),
             "per_device": per_device,
         }

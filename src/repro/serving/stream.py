@@ -6,37 +6,56 @@ the route-aware plan's block boundary (eq. 9-11) — blocks ``[0, split)`` and
 the embedding run on the end tier (with the hardware-aware expert mask,
 eq. 2-4), the boundary activation is low-rank compressed (eq. 8) and metered
 through ``LinkStats``, and blocks ``[split, R)`` plus the LM head run on the
-cloud tier.  The per-slot KV cache is split the same way
-(``kvcache.split_cache``): the end tier holds the ring buffers of its
-blocks, the cloud holds the rest, and each advances its own ``lengths``.
+cloud tier.
+
+**Paged KV.**  Each tier owns a shared :class:`~repro.models.kvcache.PagePool`
+of fixed-size KV pages; every slot holds a bounded page table (ring
+semantics at page granularity), so memory scales with the tokens actually
+cached, not ``max_batch × max_len``.  The pools' host-side allocators run
+between ticks; the jitted stage functions take the device page table as a
+runtime argument, so there is exactly one compiled decode trace per group
+shape and one prefill trace per chunk shape — never one per prompt length.
+In a fleet, lanes keep private end pools while sharing one cloud pool
+(fleet-wide cloud-memory admission).
+
+**Chunked prefill.**  Admission is a pipeline stage, not a stop-the-world
+event: an admitted prompt is cut into fixed-size chunks that stream through
+the same end -> link -> cloud stage functions and ``StageTimeline``
+resources as decode, one chunk per engine tick, writing straight into the
+slot's pages (no install copy).  In-flight decode groups keep stepping
+while a long prompt prefills; the finished request activates its slot at
+the group's next drained tick.
 
 **Pipelining.**  The decode batch is partitioned into ``n_groups``
-interleaved micro-batch groups, each with its own boundary buffer (the
-double buffer).  A group alternates between two phases: its end-step writes
-the boundary buffer, and — one engine tick later — the cloud-step drains it
-and feeds the next token back.  While group A's boundary is in flight /
-being decoded on the cloud, group B occupies the end tier, so in steady
-state every stage is busy every tick and the per-step time approaches
-``max(t_end, t_comm, t_cloud)`` (``PipelinePlan.est_step_time_s``) instead
-of the serial sum.  Stage compute times are *measured* on this host, link
-times are modeled from the metered bytes and the (possibly drifting)
-bandwidth, and the overlap is accounted by ``StageTimeline`` — the same
-resource-occupancy model as ``sim.simulator``, so the schedule is exactly
-what a two-host deployment would realize with these stage times.
+equal-sized interleaved micro-batch groups (the batch is padded up to a
+multiple of the group size so one trace serves every group), each with its
+own boundary buffer (the double buffer).  A group alternates between two
+phases: its end-step writes the boundary buffer, and — one engine tick
+later — the cloud-step drains it and feeds the next token back.  While
+group A's boundary is in flight / being decoded on the cloud, group B
+occupies the end tier, so in steady state every stage is busy every tick
+and the per-step time approaches ``max(t_end, t_comm, t_cloud)``
+(``PipelinePlan.est_step_time_s``) instead of the serial sum.  Stage
+compute times are *measured* on this host, link times are modeled from the
+metered bytes and the (possibly drifting) bandwidth, and the overlap is
+accounted by ``StageTimeline`` — the same resource-occupancy model as
+``sim.simulator``, so the schedule is exactly what a two-host deployment
+would realize with these stage times.
 
 **Replanning.**  Link measurements arrive through ``observe_bandwidth``
-(an external probe, or — in a real two-host deployment — per-transfer
-(bytes, seconds) samples fed to ``BandwidthEstimator.observe``; in-process
-the wire is modeled, so there is nothing to self-measure) and device drift
-through ``update_device_state``, which also re-derives the end tier's
-expert mask from the new state vector (eq. 2-4).  Either trigger re-runs
-the split search against measured conditions
+and device drift through ``update_device_state``, which also re-derives the
+end tier's expert mask from the new state vector (eq. 2-4).  Either trigger
+re-runs the split search against measured conditions
 (``core.pipeline.replan_pipeline``).  A changed plan or mask is applied at
 the next safe point — all boundary buffers drained, both tiers at equal
-``lengths`` — by merging the per-tier caches, re-splitting params and
-caches at the new block boundary, and rebuilding the stage functions.
-In-flight generations continue bit-exactly across a pure re-split (the
-merge/re-split is a relayout; a mask change intentionally alters routing).
+``lengths`` — by re-splitting params at the new block boundary and moving
+the affected blocks' *pages* between the tier pools
+(``kvcache.resplit_paged_blocks``: a table-aware row permutation, since the
+two pools may map the same (slot, entry) set at different physical rows),
+then rebuilding the stage functions.  In-flight generations continue
+bit-exactly across a pure re-split (the page move is a relayout; a mask
+change intentionally alters routing).  The engine defragments its private
+pools at the same safe point.
 """
 
 from __future__ import annotations
@@ -54,11 +73,19 @@ from repro.core.hardware import DeviceProfile, DeviceState, capability
 from repro.core.pipeline import BandwidthEstimator, PipelinePlan, replan_pipeline
 from repro.models import attention as attn_mod
 from repro.models import kvcache, transformer
+from repro.models.kvcache import PagePool
 from repro.models.model import Model
-from repro.serving.common import LinkStats, Request, SlotEngineBase, StageTimeline
+from repro.serving.common import (
+    LinkStats,
+    Request,
+    SlotEngineBase,
+    StageTimeline,
+    TraceCounter,
+)
 from repro.serving.endcloud import (
     TierPlan,
     end_mask_from_state,
+    init_tier_pages,
     plan_tiers,
     split_block_params,
 )
@@ -72,6 +99,22 @@ def _masks_equal(a, b) -> bool:
     if a is None or b is None:
         return a is b
     return bool(jnp.array_equal(a, b))
+
+
+class _PrefillJob:
+    """An admitted request streaming its prompt through the pipeline in
+    chunks.  The slot is reserved (pages and all) but not active until the
+    final chunk lands and the group reaches a drained tick."""
+
+    __slots__ = ("req", "slot", "group", "pos", "first_tok", "ready_s")
+
+    def __init__(self, req: Request, slot: int, group: int):
+        self.req = req
+        self.slot = slot
+        self.group = group
+        self.pos = 0  # prompt tokens prefilled so far
+        self.first_tok: Optional[int] = None  # set by the final chunk
+        self.ready_s = 0.0  # modeled completion time of the last chunk
 
 
 class EndCloudServingEngine(SlotEngineBase):
@@ -97,8 +140,26 @@ class EndCloudServingEngine(SlotEngineBase):
         resources: Tuple[str, str, str] = ("end", "link", "cloud"),
         cloud_share: float = 1.0,
         timing: str = "measured",
+        page_size: int = 16,
+        kv_pages: Optional[int] = None,
+        prefill_chunk: int = 16,
+        cloud_pool: Optional[PagePool] = None,  # fleet-shared cloud pages
     ):
-        super().__init__(max_batch, clock, max_len=max_len)
+        if not kvcache.pattern_is_pageable(model.cfg):
+            raise NotImplementedError(
+                "the streaming end-cloud engine serves attention-only layer "
+                "patterns (paged KV + chunked prefill); SSM / cross-attention "
+                "patterns are served by the dense single-tier ServingEngine"
+            )
+        # Equal-sized micro-batch groups: pad the slot count up to a
+        # multiple of the group size so one decode trace serves every group
+        # (np.linspace remainders used to compile one trace per distinct
+        # group size).  Padding slots are never admitted.
+        self.n_groups = max(1, min(n_groups, max_batch))
+        self._group_size = -(-max_batch // self.n_groups)  # ceil
+        padded_batch = self.padded_batch(max_batch, n_groups)
+        super().__init__(padded_batch, clock, max_len=max_len)
+        self.request_capacity = max_batch  # user-visible slot capacity
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -149,32 +210,82 @@ class EndCloudServingEngine(SlotEngineBase):
         self._pending_plan: Optional[PipelinePlan] = None
         self._pending_mask = _KEEP
 
+        # -- paged KV: one pool per tier, storage split by block range ------
+        self.page_size = page_size
+        self.pages_per_slot, ring = kvcache.page_geometry(
+            self.cfg, max_len, page_size, chunk_headroom=prefill_chunk
+        )
+        if prefill_chunk > ring:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} exceeds the ring capacity "
+                f"{ring} (a chunk must fit the slot's page list)"
+            )
+        self.prefill_chunk = prefill_chunk
+        dense_pages = padded_batch * self.pages_per_slot
+        self.end_pool = PagePool(
+            kv_pages or dense_pages, page_size, self.pages_per_slot,
+            n_slots=padded_batch,
+        )
+        if cloud_pool is None:
+            self.cloud_pool = PagePool(
+                kv_pages or dense_pages, page_size, self.pages_per_slot,
+                n_slots=padded_batch,
+            )
+            self._cloud_base = 0
+            self._cloud_shared = False
+        else:
+            if cloud_pool.page_size != page_size or (
+                cloud_pool.pages_per_slot != self.pages_per_slot
+            ):
+                raise ValueError("shared cloud pool geometry mismatch")
+            self.cloud_pool = cloud_pool
+            self._cloud_base = cloud_pool.add_slots(padded_batch)
+            self._cloud_shared = True
+        dtype = jnp.dtype(self.cfg.dtype)
+        self._end_pages, self._cloud_pages = init_tier_pages(
+            self.cfg, self.split,
+            self.end_pool.num_pages, self.cloud_pool.num_pages,
+            page_size, dtype,
+        )
+        self._slot_len = np.zeros((padded_batch,), np.int64)
+        self._jobs: Dict[int, _PrefillJob] = {}  # slot -> in-flight prefill
+
         # Micro-batch groups: interleaved slot ranges, one boundary buffer
         # (the double buffer) per group.
-        self.n_groups = max(1, min(n_groups, max_batch))
-        bounds = np.linspace(0, max_batch, self.n_groups + 1).astype(int)
+        gsz = self._group_size
         self._group_slices = [
-            (int(bounds[g]), int(bounds[g + 1])) for g in range(self.n_groups)
+            (g * gsz, (g + 1) * gsz) for g in range(self.n_groups)
         ]
-        dtype = jnp.dtype(self.cfg.dtype)
-        self._end_cache: List[Dict] = []
-        self._cloud_cache: List[Dict] = []
-        for gs, ge in self._group_slices:
-            full = kvcache.init_cache(self.cfg, ge - gs, max_len, dtype)
-            ec, cc = kvcache.split_cache(full, self.split)
-            self._end_cache.append(ec)
-            self._cloud_cache.append(cc)
         self._phase = ["ready"] * self.n_groups  # "ready" | "boundary"
         self._boundary: List[Optional[jax.Array]] = [None] * self.n_groups
         self._boundary_ready_s = [0.0] * self.n_groups  # modeled arrival time
         self._group_ready_s = [0.0] * self.n_groups  # modeled token-ready time
+        # Decode-only mirror of the occupancy clock: the shared timeline
+        # carries decode AND prefill chunks (the honest schedule, what fleet
+        # contention and makespan see), while the pipelined-vs-serial decode
+        # metric compares steady-state decode against its own serial sum —
+        # interleaved prefill occupancy must not pollute that ratio.
+        self._metric_clock = StageTimeline(("end", "link", "cloud"))
+        self._m_boundary_ready = [0.0] * self.n_groups
+        self._m_group_ready = [0.0] * self.n_groups
 
         self.n_stage_steps = 0  # decode end-steps (== drained cloud-steps)
+        self.n_prefill_chunks = 0
         # This engine's own stage seconds (the timeline's busy_s would mix in
         # other lanes' cloud time when the cloud resource is fleet-shared).
         self._stage_busy = {"end": 0.0, "link": 0.0, "cloud": 0.0}
         self._prefill_busy = {"end": 0.0, "link": 0.0, "cloud": 0.0}
+        self._traces: Dict[str, set] = {}
+        self._build_gen = 0
         self._build_stage_fns()
+
+    @staticmethod
+    def padded_batch(max_batch: int, n_groups: int) -> int:
+        """Slot count after rounding up to equal-sized micro-batch groups
+        (the authoritative grouping rule; the fleet sizes its shared cloud
+        pool with it)."""
+        g = max(1, min(n_groups, max_batch))
+        return -(-max_batch // g) * g
 
     # -- the active plan lives on self.tiers; everything else delegates ------
 
@@ -195,6 +306,10 @@ class EndCloudServingEngine(SlotEngineBase):
     def split(self) -> int:
         return self.tiers.plan.split_layer
 
+    def _cslot(self, slot: int) -> int:
+        """A slot's row in the (possibly fleet-shared) cloud pool."""
+        return self._cloud_base + slot
+
     # -- stage functions (rebuilt on every replan so the captured split /
     # -- codec flags can never go stale in a cached trace) --------------------
 
@@ -204,6 +319,7 @@ class EndCloudServingEngine(SlotEngineBase):
         tiers = self.tiers
         codec, compress, end_mask = tiers.codec, tiers.compress, tiers.end_mask
         act = jnp.dtype(cfg.dtype)
+        ps = self.page_size
 
         def decode_angles(lengths, B):
             pos = lengths[:, None]
@@ -213,135 +329,240 @@ class EndCloudServingEngine(SlotEngineBase):
                 pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
             )
 
-        def prefill_angles(B, S):
-            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        def chunk_angles(positions):
+            pos = positions
             if cfg.mrope_sections is not None:
-                pos = jnp.broadcast_to(pos[:, None], (B, 3, S))
+                B, C = positions.shape
+                pos = jnp.broadcast_to(pos[:, None], (B, 3, C))
             return attn_mod.rope_angles(
                 pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
             )
 
-        def end_step(end_params, tokens, cache):
-            lengths = cache["lengths"]
+        def end_step(end_params, tokens, pages, table, lengths):
             angles = decode_angles(lengths, tokens.shape[0])
             x = transformer.embed_inputs(end_params, cfg, tokens)
-            x, new_blocks, _ = transformer.apply_stack_decode(
-                end_params, x, cfg, topo, angles, cache["blocks"], lengths,
-                expert_mask=end_mask,
+            x, new_pages, _ = transformer.apply_stack_decode(
+                end_params, x, cfg, topo, angles, pages, lengths,
+                expert_mask=end_mask, page_table=table, page_size=ps,
             )
             z = comp.encode_1d(codec, x) if compress else x
-            return z, {"blocks": new_blocks, "lengths": lengths + 1}
+            return z, new_pages
 
-        def cloud_step(cloud_params, z, cache):
-            lengths = cache["lengths"]
+        def cloud_step(cloud_params, z, pages, table, lengths):
             angles = decode_angles(lengths, z.shape[0])
             x = comp.decode_1d(codec, z) if compress else z
             x = x.astype(act)
-            x, new_blocks, _ = transformer.apply_stack_decode(
-                cloud_params, x, cfg, topo, angles, cache["blocks"], lengths,
-                expert_mask=None,
+            x, new_pages, _ = transformer.apply_stack_decode(
+                cloud_params, x, cfg, topo, angles, pages, lengths,
+                expert_mask=None, page_table=table, page_size=ps,
             )
             logits = transformer.lm_logits(cloud_params, cfg, x)[:, 0]
-            return logits, {"blocks": new_blocks, "lengths": lengths + 1}
+            return logits, new_pages
 
-        def end_prefill(end_params, tokens):
-            B, S = tokens.shape
-            angles = prefill_angles(B, S)
+        def end_prefill_chunk(end_params, tokens, pages, table, start, n_valid):
+            B, C = tokens.shape
+            positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+            angles = chunk_angles(positions)
             x = transformer.embed_inputs(end_params, cfg, tokens)
-            x, _, cache_blocks = transformer.apply_stack_full(
-                x=x, params=end_params, cfg=cfg, topo=topo, angles=angles,
-                causal=True, expert_mask=end_mask, train=False,
-                collect_cache=True, max_len=self.max_len,
+            x, new_pages = transformer.apply_stack_prefill_chunk(
+                end_params, x, cfg, topo, angles, pages, table,
+                positions, n_valid, ps, expert_mask=end_mask,
             )
             z = comp.encode_1d(codec, x) if compress else x
-            cache = {
-                "blocks": cache_blocks,
-                "lengths": jnp.full((B,), S, jnp.int32),
-            }
-            return z, cache
+            return z, new_pages
 
-        def cloud_prefill(cloud_params, z):
-            B, S = z.shape[:2]
-            angles = prefill_angles(B, S)
+        def cloud_prefill_chunk(cloud_params, z, pages, table, start, n_valid):
+            B, C = z.shape[:2]
+            positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+            angles = chunk_angles(positions)
             x = comp.decode_1d(codec, z) if compress else z
             x = x.astype(act)
-            x, _, cache_blocks = transformer.apply_stack_full(
-                x=x, params=cloud_params, cfg=cfg, topo=topo, angles=angles,
-                causal=True, expert_mask=None, train=False,
-                collect_cache=True, max_len=self.max_len,
+            x, new_pages = transformer.apply_stack_prefill_chunk(
+                cloud_params, x, cfg, topo, angles, pages, table,
+                positions, n_valid, ps, expert_mask=None,
             )
-            logits = transformer.lm_logits(cloud_params, cfg, x[:, -1:])[:, 0]
-            cache = {
-                "blocks": cache_blocks,
-                "lengths": jnp.full((B,), S, jnp.int32),
-            }
-            return logits, cache
+            x_last = x[jnp.arange(B), jnp.maximum(n_valid - 1, 0)][:, None]
+            logits = transformer.lm_logits(cloud_params, cfg, x_last)[:, 0]
+            return logits, new_pages
 
-        self._end_step = jax.jit(end_step)
-        self._cloud_step = jax.jit(cloud_step)
-        self._end_prefill = jax.jit(end_prefill)
-        self._cloud_prefill = jax.jit(cloud_prefill)
+        self._build_gen += 1
+        gen = self._build_gen
+
+        def counted(name, fn):
+            return TraceCounter(
+                jax.jit(fn), self._traces.setdefault(name, set()), gen
+            )
+
+        self._end_step = counted("end_step", end_step)
+        self._cloud_step = counted("cloud_step", cloud_step)
+        self._end_prefill_chunk = counted("end_prefill_chunk", end_prefill_chunk)
+        self._cloud_prefill_chunk = counted(
+            "cloud_prefill_chunk", cloud_prefill_chunk
+        )
         self._warmup_stage_fns()
 
     def _warmup_stage_fns(self):
-        """Compile the decode stage functions for every group shape so
-        measured stage times reflect steady-state compute, not tracing."""
-        seen = set()
-        for g, (gs, ge) in enumerate(self._group_slices):
-            if ge - gs in seen:
-                continue
-            seen.add(ge - gs)
-            tokens = jnp.zeros((ge - gs, 1), jnp.int32)
-            z, _ = self._end_step(self.end_params, tokens, self._end_cache[g])
-            logits, _ = self._cloud_step(self.cloud_params, z, self._cloud_cache[g])
-            logits.block_until_ready()
+        """Compile the stage functions for the (single) group shape and the
+        (single) chunk shape so measured stage times reflect steady-state
+        compute, not tracing.  Warmup writes are routed to the garbage page
+        (all-garbage table) and the returned storage is discarded."""
+        gsz = self._group_size
+        inactive = np.zeros((gsz,), bool)
+        tokens = jnp.zeros((gsz, 1), jnp.int32)
+        lengths = jnp.zeros((gsz,), jnp.int32)
+        te = self.end_pool.device_rows(range(gsz), active=inactive)
+        tc = self.cloud_pool.device_rows(
+            [self._cslot(s) for s in range(gsz)], active=inactive
+        )
+        z, _ = self._end_step(self.end_params, tokens, self._end_pages, te, lengths)
+        logits, _ = self._cloud_step(
+            self.cloud_params, z, self._cloud_pages, tc, lengths
+        )
+        logits.block_until_ready()
 
-    # -- admission (both tiers prefilled; boundary metered) -------------------
+        C = self.prefill_chunk
+        ctok = jnp.zeros((1, C), jnp.int32)
+        start = jnp.zeros((1,), jnp.int32)
+        valid = jnp.ones((1,), jnp.int32)
+        te1 = self.end_pool.device_rows([0], active=np.zeros((1,), bool))
+        tc1 = self.cloud_pool.device_rows(
+            [self._cslot(0)], active=np.zeros((1,), bool)
+        )
+        z, _ = self._end_prefill_chunk(
+            self.end_params, ctok, self._end_pages, te1, start, valid
+        )
+        logits, _ = self._cloud_prefill_chunk(
+            self.cloud_params, z, self._cloud_pages, tc1, start, valid
+        )
+        logits.block_until_ready()
+
+    # -- admission: chunked prefill as a pipeline stage -----------------------
 
     def _group_of(self, slot: int) -> int:
-        for g, (gs, ge) in enumerate(self._group_slices):
-            if gs <= slot < ge:
-                return g
-        raise ValueError(slot)
+        return slot // self._group_size
 
-    def _admittable(self, slot: int) -> bool:
-        # Never admit into a group whose boundary is in flight: the pending
-        # cloud-step was traced against the pre-admission batch state.
-        return self._phase[self._group_of(slot)] == "ready"
+    def _slot_usable(self, slot: int) -> bool:
+        # padding slots (batch rounded up to equal groups) never admit;
+        # slots mid-prefill are spoken for
+        return slot < self.request_capacity and slot not in self._jobs
 
-    def _prefill_into_slot(self, slot: int, req: Request):
-        g = self._group_of(slot)
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+    def _pages_for(self, req: Request) -> int:
+        return kvcache.pages_needed(
+            len(req.prompt) + req.max_new_tokens,
+            self.page_size, self.pages_per_slot,
+        )
+
+    def _page_capacity(self):
+        return min(self.end_pool.num_pages, self.cloud_pool.num_pages)
+
+    def _admit(self):
+        """Start a chunked-prefill job per free slot: reserve the request's
+        worst-case page count in BOTH tier pools (admission is page-aware —
+        a free slot without pages stays idle), then let ``step`` stream the
+        prompt through the stage functions one chunk per tick.  FIFO: a
+        head-of-queue request that cannot reserve pages blocks the queue."""
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self._slot_usable(slot):
+                continue
+            if not self.waiting:
+                break
+            req = self.waiting[0]
+            need = self._pages_for(req)
+            if not (
+                self.end_pool.can_reserve(need)
+                and self.cloud_pool.can_reserve(need)
+            ):
+                break
+            self.waiting.pop(0)
+            self.end_pool.reserve(slot, need)
+            self.cloud_pool.reserve(self._cslot(slot), need)
+            self._jobs[slot] = _PrefillJob(req, slot, self._group_of(slot))
+
+    def _advance_prefill(self, job: _PrefillJob):
+        """Stream one prompt chunk through end -> link -> cloud, booking the
+        same ``StageTimeline`` resources as decode (prefill is pipeline
+        occupancy, not a stall)."""
+        req, slot = job.req, job.slot
+        S = len(req.prompt)
+        C = self.prefill_chunk
+        p0 = job.pos
+        v = min(C, S - p0)
+        self.end_pool.map_range(slot, p0, p0 + v)
+        self.cloud_pool.map_range(self._cslot(slot), p0, p0 + v)
+        chunk = np.zeros((C,), np.int32)
+        chunk[:v] = req.prompt[p0 : p0 + v]
+        tokens = jnp.asarray(chunk)[None]
+        start = jnp.asarray([p0], jnp.int32)
+        valid = jnp.asarray([v], jnp.int32)
 
         t0 = time.perf_counter()
-        z, end_one = self._end_prefill(self.end_params, tokens)
+        z, self._end_pages = self._end_prefill_chunk(
+            self.end_params, tokens, self._end_pages,
+            self.end_pool.device_rows([slot]), start, valid,
+        )
         z.block_until_ready()
-        te = time.perf_counter() - t0
+        te = self._stage_seconds("end", v)
+        if te is None:
+            te = time.perf_counter() - t0
 
-        nbytes = int(z.size * z.dtype.itemsize)
+        # meter only the valid rows: padding never crosses the wire
+        nbytes = int(z.dtype.itemsize * int(np.prod(z.shape[2:]))) * v
         t_comm = self.link.record_up(nbytes, self.bw.gbps)
 
         t1 = time.perf_counter()
-        logits, cloud_one = self._cloud_prefill(self.cloud_params, z)
+        logits, self._cloud_pages = self._cloud_prefill_chunk(
+            self.cloud_params, z, self._cloud_pages,
+            self.cloud_pool.device_rows([self._cslot(slot)]), start, valid,
+        )
         logits.block_until_ready()
-        tc = time.perf_counter() - t1
+        tc = self._stage_seconds("cloud", v)
+        if tc is None:
+            tc = time.perf_counter() - t1
 
-        # Prefill is accounted separately: the StageTimeline tracks only the
-        # steady-state decode schedule (prefill wall time includes per-shape
-        # tracing, which would drown the overlap signal).
+        done_e = self.timeline.occupy(self._res_end, job.ready_s, te)
+        done_l = self.timeline.occupy(self._res_link, done_e, t_comm)
+        done_c = self.timeline.occupy(self._res_cloud, done_l, tc)
+        job.ready_s = done_c
         self._prefill_busy["end"] += te
         self._prefill_busy["link"] += t_comm
         self._prefill_busy["cloud"] += tc
-        self.link.record_down(4)  # first token back to the end tier
-        return int(jnp.argmax(logits[0])), (g, end_one, cloud_one)
+        self.n_prefill_chunks += 1
 
-    def _install_slot(self, slot: int, payload):
-        g, end_one, cloud_one = payload
-        gs, _ = self._group_slices[g]
-        self._end_cache[g] = kvcache.install_slot(self._end_cache[g], slot - gs, end_one)
-        self._cloud_cache[g] = kvcache.install_slot(
-            self._cloud_cache[g], slot - gs, cloud_one
-        )
+        job.pos += v
+        if job.pos >= S:
+            job.first_tok = int(jnp.argmax(logits[0]))
+            self.link.record_down(4)  # first token back to the end tier
+
+    def _activate_ready_jobs(self):
+        """Finished prefill jobs claim their slot at the group's next
+        drained tick (never while the group's boundary is in flight: the
+        pending cloud-step must see the pre-activation batch state)."""
+        for slot in sorted(self._jobs):
+            job = self._jobs[slot]
+            if job.first_tok is None or self._phase[job.group] != "ready":
+                continue
+            req, tok = job.req, job.first_tok
+            req.generated.append(tok)
+            if req.first_token_time is None:
+                req.first_token_time = self.clock()
+            del self._jobs[slot]
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.finish_time = self.clock()
+                self.finished.append(req)
+                self._release_slot(slot)
+                continue
+            self._slot_len[slot] = len(req.prompt)
+            self.slots[slot] = req
+            self._next_token[slot, 0] = tok
+            self._active[slot] = True
+
+    def _release_slot(self, slot: int):
+        self.end_pool.free(slot)
+        self.cloud_pool.free(self._cslot(slot))
+        self._slot_len[slot] = 0
+
+    def busy(self) -> bool:
+        return super().busy() or bool(self._jobs)
 
     # -- pipelined stepping ---------------------------------------------------
 
@@ -373,21 +594,35 @@ class EndCloudServingEngine(SlotEngineBase):
 
     def _run_end_stage(self, g: int):
         gs, ge = self._group_slices[g]
+        for slot in range(gs, ge):
+            if self._active[slot]:
+                self.end_pool.append(slot, int(self._slot_len[slot]))
+                self.cloud_pool.append(self._cslot(slot), int(self._slot_len[slot]))
         tokens = jnp.asarray(self._next_token[gs:ge])
+        table = self.end_pool.device_rows(
+            range(gs, ge), active=self._active[gs:ge]
+        )
+        lengths = jnp.asarray(self._slot_len[gs:ge], jnp.int32)
         t0 = time.perf_counter()
-        z, self._end_cache[g] = self._end_step(
-            self.end_params, tokens, self._end_cache[g]
+        z, self._end_pages = self._end_step(
+            self.end_params, tokens, self._end_pages, table, lengths
         )
         z.block_until_ready()
         te = self._stage_seconds("end", ge - gs)
         if te is None:
             te = time.perf_counter() - t0
 
-        nbytes = int(z.size * z.dtype.itemsize)
+        # meter only active slots' boundary rows: inactive and padding
+        # slots' activations never cross the wire (matches the prefill
+        # valid-rows metering and the active-only token downlink)
+        per_row = int(z.size // z.shape[0] * z.dtype.itemsize)
+        nbytes = per_row * int(self._active[gs:ge].sum())
         t_comm = self.link.record_up(nbytes, self.bw.gbps)
 
         done_e = self.timeline.occupy(self._res_end, self._group_ready_s[g], te)
         done_l = self.timeline.occupy(self._res_link, done_e, t_comm)
+        m_e = self._metric_clock.occupy("end", self._m_group_ready[g], te)
+        self._m_boundary_ready[g] = self._metric_clock.occupy("link", m_e, t_comm)
         self._stage_busy["end"] += te
         self._stage_busy["link"] += t_comm
         self.n_stage_steps += 1
@@ -399,9 +634,14 @@ class EndCloudServingEngine(SlotEngineBase):
     def _run_cloud_stage(self, g: int) -> int:
         gs, ge = self._group_slices[g]
         z = self._boundary[g]
+        table = self.cloud_pool.device_rows(
+            [self._cslot(s) for s in range(gs, ge)],
+            active=self._active[gs:ge],
+        )
+        lengths = jnp.asarray(self._slot_len[gs:ge], jnp.int32)
         t0 = time.perf_counter()
-        logits, self._cloud_cache[g] = self._cloud_step(
-            self.cloud_params, z, self._cloud_cache[g]
+        logits, self._cloud_pages = self._cloud_step(
+            self.cloud_params, z, self._cloud_pages, table, lengths
         )
         logits.block_until_ready()
         tc = self._stage_seconds("cloud", ge - gs)
@@ -409,27 +649,43 @@ class EndCloudServingEngine(SlotEngineBase):
             tc = time.perf_counter() - t0
 
         done_c = self.timeline.occupy(self._res_cloud, self._boundary_ready_s[g], tc)
+        self._m_group_ready[g] = self._metric_clock.occupy(
+            "cloud", self._m_boundary_ready[g], tc
+        )
         self._stage_busy["cloud"] += tc
         self._group_ready_s[g] = done_c
-        self.link.record_down((ge - gs) * 4)  # token ids back to the end tier
+        n_active = int(self._active[gs:ge].sum())
+        # token ids back to the end tier — only slots that actually decoded
+        # (inactive slots send nothing; metering them overcharged the link)
+        self.link.record_down(n_active * 4)
 
         self._boundary[g] = None
         self._phase[g] = "ready"
 
+        active_idx = np.nonzero(self._active[gs:ge])[0] + gs
+        self._slot_len[active_idx] += 1
         ids = np.zeros((self.max_batch,), np.int64)
         ids[gs:ge] = np.asarray(jnp.argmax(logits, -1))
         return self._harvest(ids, slot_range=range(gs, ge))
 
     def step(self) -> int:
         """One engine tick: drain in-flight boundaries on the cloud tier,
-        apply a pending replan at the safe point, admit, then refill the end
-        tier — so group A's cloud-step overlaps group B's end-step."""
+        apply a pending replan at the safe point, admit (page-aware), stream
+        one prefill chunk per in-flight job, activate finished jobs, then
+        refill the end tier — so group A's cloud-step overlaps group B's
+        end-step and a long prompt's prefill never stalls other groups'
+        decode."""
         emitted = 0
         for g in range(self.n_groups):
             if self._phase[g] == "boundary":
                 emitted += self._run_cloud_stage(g)
         self._apply_pending_replan()
         self._admit()
+        for slot in sorted(self._jobs):
+            job = self._jobs[slot]
+            if job.first_tok is None:
+                self._advance_prefill(job)
+        self._activate_ready_jobs()
         for g in range(self.n_groups):
             if self._phase[g] == "ready" and self._group_active(g):
                 self._run_end_stage(g)
@@ -497,12 +753,28 @@ class EndCloudServingEngine(SlotEngineBase):
             self._pending_plan = None
             self.tiers = dataclasses.replace(self.tiers, plan=plan)
 
+    def _defrag_private_pools(self):
+        """Compact the engine-private pools and permute their storage rows
+        to match.  A fleet-shared cloud pool is never defragged here — its
+        permutation would have to be applied to every lane's storage (see
+        ``FleetServingEngine.defrag_kv``)."""
+        perm = self.end_pool.defrag()
+        self._end_pages = jax.tree.map(
+            lambda l: l[:, jnp.asarray(perm)], self._end_pages
+        )
+        if not self._cloud_shared:
+            perm = self.cloud_pool.defrag()
+            self._cloud_pages = jax.tree.map(
+                lambda l: l[:, jnp.asarray(perm)], self._cloud_pages
+            )
+
     def _apply_pending_replan(self):
         """Adopt a pending plan/mask once no boundary is in flight (both
-        tiers at equal ``lengths``): merge the per-tier caches, re-split
-        params and caches at the new block boundary, and rebuild the stage
-        functions — but only when something a trace captures (split, codec
-        flag, expert mask) actually changed."""
+        tiers at equal ``lengths``): re-split params at the new block
+        boundary, move the affected blocks' pages between the tier pools
+        (table-aware row permutation), defrag the private pools, and rebuild
+        the stage functions — but only when something a trace captures
+        (split, codec flag, expert mask) actually changed."""
         if self._pending_plan is None and self._pending_mask is _KEEP:
             return
         if any(p == "boundary" for p in self._phase):
@@ -521,11 +793,22 @@ class EndCloudServingEngine(SlotEngineBase):
             self.end_params, self.cloud_params = split_block_params(
                 self.params, self.split
             )
-            for g in range(self.n_groups):
-                merged = kvcache.merge_cache(self._end_cache[g], self._cloud_cache[g])
-                self._end_cache[g], self._cloud_cache[g] = kvcache.split_cache(
-                    merged, self.split
-                )
+            cloud_rows = self.cloud_pool.table[
+                self._cloud_base : self._cloud_base + self.max_batch
+            ]
+            e2c = kvcache.page_perm(
+                self.end_pool.table, cloud_rows,
+                self.end_pool.num_pages, self.cloud_pool.num_pages,
+            )
+            c2e = kvcache.page_perm(
+                cloud_rows, self.end_pool.table,
+                self.cloud_pool.num_pages, self.end_pool.num_pages,
+            )
+            self._end_pages, self._cloud_pages = kvcache.resplit_paged_blocks(
+                self._end_pages, self._cloud_pages, old_split, self.split,
+                e2c, c2e,
+            )
+            self._defrag_private_pools()
         if (
             self.split != old_split
             or self.tiers.compress != old_compress
@@ -544,14 +827,45 @@ class EndCloudServingEngine(SlotEngineBase):
 
     # -- metrics --------------------------------------------------------------
 
+    def stage_trace_counts(self) -> Dict[str, int]:
+        """Distinct compiled-trace signatures per stage function, summed
+        across stage-function rebuilds.  Bounded by chunk/group shapes —
+        independent of how many distinct prompt lengths were served."""
+        return {k: len(v) for k, v in self._traces.items()}
+
+    def kv_metrics(self) -> Dict[str, float]:
+        """Paged-KV memory accounting.  With a fleet-shared cloud pool the
+        in-use/capacity figures for the cloud tier count only this lane's
+        rows; ``kv_bytes_peak`` uses the pools' global peaks (the shared
+        pool peaks fleet-wide — that is the number admission gates on)."""
+        own_cloud = range(self._cloud_base, self._cloud_base + self.max_batch)
+        end_pb = kvcache.paged_block_bytes(self._end_pages)
+        cloud_pb = kvcache.paged_block_bytes(self._cloud_pages)
+        in_use = self.end_pool.pages_in_use + self.cloud_pool.mapped_for(own_cloud)
+        cap = self.end_pool.num_pages + self.cloud_pool.num_pages
+        return {
+            "kv_pages_in_use": in_use,
+            "kv_pages_capacity": cap,
+            "kv_utilization": in_use / cap,
+            "kv_bytes_peak": (
+                self.end_pool.peak_in_use * end_pb
+                + self.cloud_pool.peak_in_use * cloud_pb
+            ),
+            # the honest pre-refactor baseline: dense rings for the
+            # user-visible slot count (padding slots are this PR's artifact)
+            "kv_bytes_dense_equiv": (
+                self.request_capacity * self.pages_per_slot * (end_pb + cloud_pb)
+            ),
+        }
+
     def metrics(self) -> Dict[str, float]:
         n = max(self.n_stage_steps, 1)
         mean = {r: t / n for r, t in self._stage_busy.items()}
-        # This engine's own pipelined span: when the last cloud drain of
-        # every group has landed (== the timeline makespan for a private
-        # timeline, but free of other lanes' time when the timeline is
-        # fleet-shared).  serial likewise sums only this engine's stages.
-        pipelined_total = max(self._group_ready_s)
+        # This engine's own pipelined DECODE span, from the decode-only
+        # metric clock: free of other lanes' time when the timeline is
+        # fleet-shared, and free of interleaved prefill-chunk occupancy.
+        # serial likewise sums only this engine's decode stages.
+        pipelined_total = max(self._m_group_ready)
         serial_total = sum(self._stage_busy.values())
         return {
             "split": self.split,
@@ -570,6 +884,8 @@ class EndCloudServingEngine(SlotEngineBase):
             "pipelined_total_s": pipelined_total,
             "serial_total_s": serial_total,
             "prefill_s": sum(self._prefill_busy.values()),
+            "prefill_chunks": self.n_prefill_chunks,
             "replan_events": len(self.replan_events),
             "measured_gbps": self.bw.gbps,
+            **self.kv_metrics(),
         }

@@ -181,8 +181,11 @@ def test_heterogeneous_fleet_completes_and_spreads(tiny_model):
     assert used == {0, 1, 2}
     assert m["n_placed"] == 9
     # cloud busy time on the shared resource == sum of the lanes' own
-    # cloud stage seconds (everything drained through one resource)
-    lane_cloud = sum(l._stage_busy["cloud"] for l in fleet.lanes)
+    # cloud seconds, decode stages AND prefill chunks (chunked prefill
+    # streams through the same shared cloud resource as decode)
+    lane_cloud = sum(
+        l._stage_busy["cloud"] + l._prefill_busy["cloud"] for l in fleet.lanes
+    )
     assert m["cloud_busy_s"] == pytest.approx(lane_cloud)
     assert m["fleet_makespan_s"] > 0
     assert m["aggregate_tokens_per_s"] > 0
