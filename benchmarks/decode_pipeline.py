@@ -32,7 +32,10 @@ per prompt length.
 
 Paged-KV memory accounting (``kv_pages_in_use`` / ``kv_bytes_peak`` /
 ``kv_utilization``) is reported alongside the dense ``max_batch x max_len``
-equivalent.
+equivalent, and the same live sample point checks the fused paged-attention
+claim: per-decode-step attention KV bytes scale with *mapped pages*
+(``attn_bytes_paged_step``), not slots x ring — the skewed batch must move
+< 1/2 of the dense-gather bytes (``attn_bytes_dense_step``), asserted.
 
     PYTHONPATH=src python -m benchmarks.decode_pipeline [--out bench_decode_pipeline.json]
 """
@@ -154,6 +157,17 @@ def run(
     # sample KV occupancy while the batch is still live (after run() every
     # page is freed, so in-use/utilization would always read zero)
     kv_mid = eng.kv_metrics()
+    # attention-bytes check, sampled at the same live point: the batch is
+    # skewed (one 96-token prompt among short decodes), so the fused paged
+    # sweep — which reads only *mapped* pages — must move well under half
+    # of what the dense gather swept (slots x full ring, every step)
+    assert 0 < kv_mid["attn_bytes_paged_step"] < kv_mid["attn_bytes_dense_step"], (
+        kv_mid
+    )
+    assert kv_mid["attn_bytes_paged_step"] <= kv_mid["attn_bytes_dense_step"] / 2, (
+        "paged attention must move < 1/2 the dense-gather KV bytes on a "
+        f"skewed-length batch: {kv_mid}"
+    )
     eng.run()
     m3 = eng.metrics()
     prefill_chunks = m3["prefill_chunks"] - chunks_before
@@ -202,6 +216,15 @@ def run(
         "kv_utilization": round(kv_mid["kv_utilization"], 4),
         "kv_bytes_peak": m3["kv_bytes_peak"],
         "kv_bytes_dense_equiv": m3["kv_bytes_dense_equiv"],
+        # per-decode-step attention KV traffic at the skewed-batch sample
+        # point: the fused paged kernel reads mapped pages only, the dense
+        # gather it replaced swept slots x ring every step
+        "attn_bytes_paged_step": kv_mid["attn_bytes_paged_step"],
+        "attn_bytes_dense_step": kv_mid["attn_bytes_dense_step"],
+        "attn_bytes_ratio": round(
+            kv_mid["attn_bytes_paged_step"]
+            / max(kv_mid["attn_bytes_dense_step"], 1), 4
+        ),
         # chunked-prefill pipeline accounting
         "prefill_chunks": m3["prefill_chunks"],
         "long_prompt_prefill_ticks": prefill_ticks,
@@ -221,6 +244,13 @@ def run(
         f"vs dense {row['kv_bytes_dense_equiv']/1024:.1f}KiB; "
         f"long-prompt prefill: {prefill_ticks} ticks, {stalled_ticks} stalled, "
         f"traces {traces}",
+        flush=True,
+    )
+    print(
+        f"[decode_pipeline] attention sweep "
+        f"{row['attn_bytes_paged_step']/1024:.1f}KiB/step (mapped pages) "
+        f"vs {row['attn_bytes_dense_step']/1024:.1f}KiB/step dense gather "
+        f"(x{row['attn_bytes_ratio']} of dense on the skewed batch)",
         flush=True,
     )
     assert row["pipelined_step_s"] < row["serial_step_s"], (

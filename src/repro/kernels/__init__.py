@@ -2,7 +2,9 @@
 
 Each kernel package ships three files:
   kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
-  ops.py    — jit'd public wrapper (interpret=True on CPU for validation)
+  ops.py    — jit'd public wrapper; ``interpret=None`` autodetects the
+              backend (compiled on TPU, interpreted elsewhere for CPU
+              validation), so no kernel is ever silently interpreted on TPU
   ref.py    — pure-jnp oracle the tests assert against
 
 Kernels:
@@ -14,4 +16,21 @@ Kernels:
                     compute): grid (expert, token-block, ff-tile) with fp32
                     VMEM accumulation.
   flash_attention — causal GQA flash attention forward for prefill.
+  paged_attention — fused paged decode/chunk attention (the decode hot
+                    path): scalar-prefetched page tables drive the K/V
+                    index maps, so attention reads mapped KV pages straight
+                    from the pool — page lookup, ring-position masking, and
+                    online softmax in one pass, no dense ring gather.
 """
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """The one place backend autodetection lives: ``None`` resolves to
+    compiled on TPU, interpreted elsewhere (CPU validation); an explicit
+    bool passes through.  Every kernel ops wrapper routes its ``interpret``
+    argument here."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret

@@ -1,4 +1,9 @@
-"""Public wrapper for the batched expert FFN kernel."""
+"""Public wrapper for the batched expert FFN kernel.
+
+``interpret=None`` (the default) resolves per backend: compiled on TPU,
+interpreted elsewhere (CPU validation) — an explicit bool forces it, so
+the kernel is never silently interpreted on TPU.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.expert_mlp.kernel import expert_mlp_pallas
 
 
@@ -36,8 +42,9 @@ def expert_mlp(
     wo: jax.Array,  # [E, f, d]
     *,
     act: str = "silu",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     E, C, d = x.shape
     f = wi.shape[2]
     bc, bf = _pick_tiles(C, d, f)

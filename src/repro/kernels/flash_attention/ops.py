@@ -4,6 +4,10 @@ Layout contract: models use [B, S, H, hd]; the kernel wants [B, H, S, hd]
 (head-major so each (b, h) streams contiguous sequence blocks).  The
 wrapper transposes at the boundary — XLA fuses these with the surrounding
 projections on TPU.
+
+``interpret=None`` (the default) resolves per backend: compiled on TPU,
+interpreted elsewhere (CPU validation) — an explicit bool forces it, so
+the kernel is never silently interpreted on TPU.
 """
 
 from __future__ import annotations
@@ -14,6 +18,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
 
@@ -29,8 +34,9 @@ def flash_attention_fwd(
     window: Optional[int] = None,
     block_q: int = 512,
     block_kv: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     qt = jnp.transpose(q, (0, 2, 1, 3))
     kt = jnp.transpose(k, (0, 2, 1, 3))
     vt = jnp.transpose(v, (0, 2, 1, 3))

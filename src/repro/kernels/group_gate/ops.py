@@ -16,6 +16,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.group_gate.kernel import group_gate_pallas
 
 NEG_INF = -1e30
@@ -45,8 +46,7 @@ def group_gate_probs(
 
     ``interpret=None`` (the default) resolves per backend: compiled on TPU,
     interpreted elsewhere (CPU validation) — an explicit bool forces it."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     wl = params["w_local"]  # [K, d, Mk]
     K, d, Mk = wl.shape
     E = K * Mk

@@ -1,25 +1,32 @@
-"""Public wrappers for the low-rank codec kernels."""
+"""Public wrappers for the low-rank codec kernels.
+
+``interpret=None`` (the default) resolves per backend: compiled on TPU,
+interpreted elsewhere (CPU validation) — an explicit bool forces it, so
+the kernels are never silently interpreted on TPU.
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels import resolve_interpret
 from repro.kernels.lowrank import kernel as K
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def lowrank_encode(x, enc, *, interpret: bool = True):
-    return K.encode_pallas(x, enc, interpret=interpret)
+def lowrank_encode(x, enc, *, interpret: Optional[bool] = None):
+    return K.encode_pallas(x, enc, interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def lowrank_decode(z, dec, *, interpret: bool = True):
-    return K.decode_pallas(z, dec, interpret=interpret)
+def lowrank_decode(z, dec, *, interpret: Optional[bool] = None):
+    return K.decode_pallas(z, dec, interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def lowrank_roundtrip(x, enc, dec, *, interpret: bool = True):
+def lowrank_roundtrip(x, enc, dec, *, interpret: Optional[bool] = None):
     """Fused eq. 8 path: returns (x_hat, sum-squared reconstruction error)."""
-    return K.roundtrip_pallas(x, enc, dec, interpret=interpret)
+    return K.roundtrip_pallas(x, enc, dec, interpret=resolve_interpret(interpret))

@@ -1,0 +1,2 @@
+"""Fused paged decode/chunk attention: page-table lookup + ring-position
+masking + online-softmax attention in one pass over the KV page pool."""

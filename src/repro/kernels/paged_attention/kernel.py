@@ -1,0 +1,161 @@
+"""Fused paged decode/chunk-attention Pallas kernel (decode hot path).
+
+Grid: (batch, kv-head, page-entry) with the page sweep minor-most.  The
+per-slot page table is a *scalar-prefetch* operand, so the K/V BlockSpec
+index maps resolve ``table[b, j]`` before each grid step and DMA exactly
+one physical page of the pool — ``[page_size, hd]`` for head ``h`` — from
+HBM to VMEM.  No dense ``[B, pps*ps, KV, hd]`` ring view is ever
+materialized: HBM traffic per (batch, head) is the slot's mapped pages,
+not ``max_len``.
+
+The online-softmax state (m, l) and the output accumulator live in VMEM
+scratch and persist across the page sweep for a fixed (b, h), exactly like
+the flash kernel; the output block is written once when the sweep flushes.
+
+Page-skip rule: a page is *dead* when its table entry is garbage-routed
+(unmapped entry or inactive slot — the engines map those to the pool's
+last row) or when every (query, ring-position) pair it holds is masked
+(positions not yet written on this lap, or wholly outside the sliding
+window).  Dead pages are skipped with ``pl.when``: no MXU flops, no
+softmax update.  All garbage entries map to the *same* physical row, so
+Pallas's block-index pipelining elides their repeated fetches; a mapped
+but window-dead page still costs its (single) fetch but no compute.
+
+GQA is handled in the index maps (kv blocks are fetched once per KV head)
+and in the row layout: the wrapper flattens (C queries x G query heads
+per KV head) into ``rows = C*G`` q rows per grid cell, ``row = c*G + g``.
+
+Masking matches ``kvcache.ring_key_positions`` + ``chunk_attention``: ring
+slot ``s = j*ps + i`` holds position ``kp = ln - ((ln - s) mod W)`` where
+``ln`` is the slot's last written position and ``W = pps*ps``; a key is
+visible iff ``0 <= kp <= qpos`` (and ``kp > qpos - window``).  Per-slot
+``ln`` and per-query ``qpos`` arrive as one int32 operand
+``posinfo[B, 1+C, 1]`` (column 0 = ln, rest = qpos) so the trace depends
+only on shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(
+    table_ref,  # [B, pps] int32 (scalar prefetch, SMEM)
+    q_ref,  # [1, 1, rows, hd]
+    k_ref,  # [1, ps, 1, hd] one physical page, one kv head
+    v_ref,  # [1, ps, 1, hd]
+    pos_ref,  # [1, 1+C, 1] int32 (ln, then C query positions)
+    o_ref,  # [1, 1, rows, hd]
+    m_scr,  # [rows, 1] fp32
+    l_scr,  # [rows, 1] fp32
+    acc_scr,  # [rows, hd] fp32
+    *,
+    scale: float,
+    ps: int,
+    pps: int,
+    C: int,
+    G: int,
+    window,
+    garbage: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    phys = table_ref[b, j]
+    ln = pos_ref[0, 0, 0]
+    qpos = pos_ref[0, 1:, :]  # [C, 1]
+    W = pps * ps
+    slot = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    kp = ln - jnp.mod(ln - slot, W)  # [1, ps] ring position per key row
+    valid = kp <= qpos  # [C, ps]
+    if window is not None:
+        valid = jnp.logical_and(valid, kp > qpos - window)
+    valid = jnp.logical_and(valid, kp >= 0)
+    live = jnp.logical_and(phys != garbage, jnp.any(valid))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]  # [rows, hd]
+        k = k_ref[0, :, 0, :]  # [ps, hd]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [rows, ps]
+        mask = jnp.broadcast_to(valid[:, None, :], (C, G, ps)).reshape(C * G, ps)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # [rows, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _flush():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q_r,  # [B, KV, rows, hd] with rows = C*G, row = c*G + g
+    pool_k,  # [P+1, ps, KV, hd] (row P = garbage page)
+    pool_v,
+    table,  # [B, pps] int32
+    posinfo,  # [B, 1+C, 1] int32
+    *,
+    window=None,
+    interpret=False,
+):
+    B, KV, rows, hd = q_r.shape
+    ps = pool_k.shape[1]
+    pps = table.shape[1]
+    C = posinfo.shape[1] - 1
+    G = rows // C
+    garbage = pool_k.shape[0] - 1
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _pa_kernel, scale=scale, ps=ps, pps=pps, C=C, G=G,
+        window=window, garbage=garbage,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, hd), lambda b, h, j, tab: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+            pl.BlockSpec((1, C + 1, 1), lambda b, h, j, tab: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, hd), lambda b, h, j, tab: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, rows, hd), q_r.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q_r, pool_k, pool_v, posinfo)

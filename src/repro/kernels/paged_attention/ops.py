@@ -1,0 +1,60 @@
+"""Public wrapper for the fused paged-attention kernel.
+
+Layout contract: the models keep ``[B, C, H, hd]`` queries and
+``[P+1, page_size, KV, hd]`` page pools; the kernel wants GQA-grouped
+query rows ``[B, KV, C*G, hd]`` (all of a KV head's queries stream against
+each fetched page) and the (lengths, q_positions) ints packed into one
+``[B, 1+C, 1]`` operand.  The wrapper reshapes at the boundary — XLA fuses
+the transposes with the surrounding projections on TPU.
+
+``interpret=None`` (the default) resolves per backend: compiled on TPU,
+interpreted elsewhere (CPU validation) — an explicit bool forces it, so
+the fused path is never silently interpreted on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import resolve_interpret
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(
+    q: jax.Array,  # [B, C, H, hd] (C=1 for decode)
+    pool_k: jax.Array,  # [P+1, ps, KV, hd] (row P = garbage page)
+    pool_v: jax.Array,
+    table: jax.Array,  # [B, pps] int32
+    q_positions: jax.Array,  # [B, C] int32
+    lengths: jax.Array,  # [B] int32 ring anchor (last written position)
+    *,
+    window: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    B, C, H, hd = q.shape
+    KV = pool_k.shape[2]
+    G = H // KV
+    q_r = (
+        q.reshape(B, C, KV, G, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B, KV, C * G, hd)
+    )
+    posinfo = jnp.concatenate(
+        [lengths[:, None].astype(jnp.int32), q_positions.astype(jnp.int32)],
+        axis=1,
+    )[..., None]
+    o = paged_attention_pallas(
+        q_r, pool_k, pool_v, table, posinfo,
+        window=window, interpret=interpret,
+    )
+    return (
+        o.reshape(B, KV, C, G, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B, C, H, hd)
+    )

@@ -400,6 +400,75 @@ def chunk_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (gather-free decode/chunk attention over a KV page pool)
+# ---------------------------------------------------------------------------
+
+_PAGED_ATTN_IMPL: Optional[str] = None  # None = auto: kernel on TPU, ref off
+
+
+def set_paged_attention_impl(impl: Optional[str]):
+    """Force the paged-attention implementation: ``"kernel"`` (the fused
+    Pallas kernel — interpret-mode off TPU), ``"ref"`` (the pure-JAX
+    gather-free oracle), or ``None`` to autodetect (kernel on TPU, ref
+    elsewhere).  Read at *trace* time: engines built before a change keep
+    their already-compiled stage traces."""
+    global _PAGED_ATTN_IMPL
+    if impl not in (None, "kernel", "ref"):
+        raise ValueError(f"impl={impl!r} (want 'kernel', 'ref', or None)")
+    _PAGED_ATTN_IMPL = impl
+
+
+def paged_chunk_attention(
+    q: jax.Array,  # [B, C, H, hd] C queries (decode is the C=1 case)
+    pool_k: jax.Array,  # [P+1, ps, KV, hd] page pool (row P = garbage)
+    pool_v: jax.Array,
+    table: jax.Array,  # [B, pps] int32 physical page per ring entry
+    q_positions: jax.Array,  # [B, C] int32 absolute position of each query
+    lengths: jax.Array,  # [B] int32 ring anchor (last written position)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Attention straight off the page pool: page-table lookup, ring-position
+    masking (``kvcache.ring_key_positions`` semantics), and online-softmax
+    attention fused into one sweep over the slot's *mapped* pages — no dense
+    ``paged_gather`` ring view is ever materialized.  Numerically the masked
+    softmax of :func:`chunk_attention` over the gathered ring (exact in the
+    score set; online-softmax reassociation only), which survives as the
+    test oracle."""
+    impl = _PAGED_ATTN_IMPL or (
+        "kernel" if jax.default_backend() == "tpu" else "ref"
+    )
+    if impl == "kernel":
+        from repro.kernels.paged_attention.ops import paged_attention
+
+        return paged_attention(
+            q, pool_k, pool_v, table, q_positions, lengths, window=window
+        )
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    return paged_attention_ref(
+        q, pool_k, pool_v, table, q_positions, lengths, window=window
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,  # [B, 1, H, hd]
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    table: jax.Array,
+    lengths: jax.Array,  # [B] int32 position of the current (just-written) token
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token decode against the page pool: the C=1 special case of
+    :func:`paged_chunk_attention` (the query sits at ``lengths``, which is
+    also the ring anchor)."""
+    return paged_chunk_attention(
+        q, pool_k, pool_v, table, lengths[:, None], lengths, window=window
+    )
+
+
+# ---------------------------------------------------------------------------
 # Attention layer (projections + norm + rope + attention + output)
 # ---------------------------------------------------------------------------
 

@@ -415,7 +415,13 @@ def paged_block_bytes(blocks: Dict) -> int:
 def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
     """pool [P+1, ps, KV, hd], table [B, pps] -> dense ring view
     [B, pps*ps, KV, hd].  Garbage-routed entries gather junk that the ring
-    position mask (``ring_key_positions`` validity) discards."""
+    position mask (``ring_key_positions`` validity) discards.
+
+    Test oracle only: the serving hot paths attend straight off the pool
+    through the table (``attention.paged_decode_attention`` /
+    ``paged_chunk_attention`` — O(mapped pages) HBM traffic); this
+    materialized O(B x max_len) copy exists so parity tests can rebuild the
+    exact dense ring the fused path must reproduce."""
     B, pps = table.shape
     buf = pool[table]  # [B, pps, ps, KV, hd]
     return buf.reshape(B, pps * pool.shape[1], *pool.shape[2:])

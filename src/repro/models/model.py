@@ -123,9 +123,11 @@ class Model:
         page_size: int, expert_mask=None,
     ) -> Tuple[jax.Array, Dict]:
         """tokens [B, 1] against a paged KV cache -> (logits [B, V],
-        new page blocks).  ``lengths`` advances host-side (the engine owns
-        slot offsets); the trace depends only on shapes, never on the page
-        table contents."""
+        new page blocks).  Per-slot ``lengths`` advances host-side (the
+        engine owns slot offsets) and threads down to the fused paged
+        attention, which masks each slot's ring positions against it and
+        reads only the mapped pages — no dense ring view is gathered; the
+        trace depends only on shapes, never on the page table contents."""
         cfg = self.cfg
         B = tokens.shape[0]
         pos = lengths[:, None]
@@ -148,7 +150,9 @@ class Model:
         """One fixed-size prompt chunk (tokens [B, C], rows past ``n_valid``
         are padding) written into the paged cache at positions
         ``start + i`` -> (logits of the last valid row [B, V], new page
-        blocks)."""
+        blocks).  Per-slot ring anchors (``start + n_valid - 1``) thread
+        down to the fused paged chunk attention, which sweeps mapped pages
+        directly instead of gathering the ring."""
         cfg = self.cfg
         B, C = tokens.shape
         positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]

@@ -306,9 +306,11 @@ def apply_layer_decode(
 
     With ``page_table`` set, attention ``k``/``v`` leaves are page pools
     ``[P+1, page_size, KV, hd]``: the write scatters through the table and
-    the read gathers the slot's bounded page list back into the exact dense
-    ring view, so the attention math (and therefore greedy decode) is
-    unchanged from the dense layout."""
+    attention reads the slot's mapped pages *directly from the pool*
+    (``attn.paged_decode_attention`` — page lookup, ring masking, and
+    online softmax fused; no dense ring view is materialized), so HBM
+    traffic scales with mapped pages while greedy decode stays
+    token-identical to the dense layout."""
     aux: Dict[str, jax.Array] = {}
     new_entry = dict(cache_entry)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
@@ -320,19 +322,18 @@ def apply_layer_decode(
                 page_table, lengths, page_size,
             )
             new_entry["k"], new_entry["v"] = kc, vc
-            kbuf = kvcache.paged_gather(kc, page_table)
-            vbuf = kvcache.paged_gather(vc, page_table)
+            o = attn.paged_decode_attention(
+                q, kc, vc, page_table, lengths, window=cfg.sliding_window
+            )
         else:
             kc, vc = kvcache.ring_write(
                 cache_entry["k"], cache_entry["v"], k, v, lengths
             )
             new_entry["k"], new_entry["v"] = kc, vc
-            kbuf, vbuf = kc, vc
-        W = kbuf.shape[1]
-        key_pos = kvcache.ring_key_positions(lengths, W)
-        o = attn.decode_attention(
-            q, kbuf, vbuf, lengths, key_pos, window=cfg.sliding_window
-        )
+            key_pos = kvcache.ring_key_positions(lengths, kc.shape[1])
+            o = attn.decode_attention(
+                q, kc, vc, lengths, key_pos, window=cfg.sliding_window
+            )
         x = x + attn.output_proj(p["attn"], o)
         if spec.cross_attn:
             hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
@@ -474,9 +475,10 @@ def apply_stack_prefill_chunk(
 
     Each layer writes the chunk's k/v through the page table first (padding
     rows routed to the garbage page), then attends the chunk's queries
-    against the slot's gathered ring view — so a prompt streams through one
-    compiled trace per *chunk shape*, never one per prompt length, and the
-    chunk leaves exactly the pages a whole-prompt prefill would have left.
+    against the slot's mapped pages directly (``attn.paged_chunk_attention``
+    — no gathered ring view) — so a prompt streams through one compiled
+    trace per *chunk shape*, never one per prompt length, and the chunk
+    leaves exactly the pages a whole-prompt prefill would have left.
     Returns (x [B, C, d], new_page_blocks)."""
     C = x.shape[1]
     valid = jnp.arange(C)[None, :] < n_valid[:, None]  # [B, C]
@@ -494,11 +496,9 @@ def apply_stack_prefill_chunk(
             kc, vc = kvcache.paged_write_tokens(
                 ce["k"], ce["v"], k, v, page_table, positions, valid, page_size
             )
-            kbuf = kvcache.paged_gather(kc, page_table)
-            vbuf = kvcache.paged_gather(vc, page_table)
-            key_pos = kvcache.ring_key_positions(last_pos, kbuf.shape[1])
-            o = attn.chunk_attention(
-                q, kbuf, vbuf, positions, key_pos, window=cfg.sliding_window
+            o = attn.paged_chunk_attention(
+                q, kc, vc, page_table, positions, last_pos,
+                window=cfg.sliding_window,
             )
             bx = bx + attn.output_proj(p["attn"], o)
             if _has_ffn(spec, cfg):

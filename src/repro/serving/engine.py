@@ -192,6 +192,25 @@ class ServingEngine(SlotEngineBase):
         chunk/group shapes, not by distinct prompt lengths)."""
         return {k: len(v) for k, v in self._traces.items()}
 
+    def attn_bytes_step(self) -> Dict[str, int]:
+        """KV bytes the attention sweep moves from HBM per decode step,
+        across all layers, at the current occupancy.  The fused paged path
+        reads only the *mapped* pages; the dense-gather path it replaced
+        materialized and swept the full ``max_batch x ring`` view every
+        step (counted here as one sweep read — the gather's extra HBM
+        write of the same bytes is not charged, so the comparison is
+        conservative).  Dense (SSM / cross-attn) engines have no paged
+        sweep: both figures read zero."""
+        if not self.paged:
+            return {"attn_bytes_paged_step": 0, "attn_bytes_dense_step": 0}
+        page_bytes = kvcache.paged_block_bytes(self.pages)
+        return {
+            "attn_bytes_paged_step": self.pool.pages_in_use * page_bytes,
+            "attn_bytes_dense_step": (
+                self.max_batch * self.pages_per_slot * page_bytes
+            ),
+        }
+
     def metrics(self) -> Dict[str, float]:
         m: Dict[str, float] = {
             "requests_finished": len(self.finished),
@@ -207,5 +226,6 @@ class ServingEngine(SlotEngineBase):
                 kv_bytes_dense_equiv=(
                     self.max_batch * self.pages_per_slot * page_bytes
                 ),
+                **self.attn_bytes_step(),
             )
         return m

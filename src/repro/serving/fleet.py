@@ -345,5 +345,14 @@ class FleetServingEngine:
             "kv_bytes_peak": (
                 end_peak_bytes + self.cloud_pool.peak_in_use * cloud_page_bytes
             ),
+            # fused paged attention vs the dense-gather sweep it replaced:
+            # per-step KV bytes, summed over lanes (each lane counts its
+            # own end pool plus its rows of the shared cloud pool)
+            "attn_bytes_paged_step": sum(
+                m["attn_bytes_paged_step"] for m in per_device
+            ),
+            "attn_bytes_dense_step": sum(
+                m["attn_bytes_dense_step"] for m in per_device
+            ),
             "per_device": per_device,
         }

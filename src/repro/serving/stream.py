@@ -833,6 +833,28 @@ class EndCloudServingEngine(SlotEngineBase):
         independent of how many distinct prompt lengths were served."""
         return {k: len(v) for k, v in self._traces.items()}
 
+    def attn_bytes_step(self) -> Dict[str, int]:
+        """KV bytes the attention sweep moves from HBM per decode step
+        (both tiers, all layers) at the current occupancy.  The fused paged
+        path reads only this engine's *mapped* pages; the dense-gather path
+        it replaced materialized and swept the full ``slots x ring`` view
+        every step (counted as one sweep read — the gather's extra HBM
+        write of the same bytes is not charged, so the comparison is
+        conservative; the dense baseline uses the user-visible slot count,
+        matching ``kv_bytes_dense_equiv``)."""
+        own_cloud = range(self._cloud_base, self._cloud_base + self.max_batch)
+        end_pb = kvcache.paged_block_bytes(self._end_pages)
+        cloud_pb = kvcache.paged_block_bytes(self._cloud_pages)
+        return {
+            "attn_bytes_paged_step": (
+                self.end_pool.pages_in_use * end_pb
+                + self.cloud_pool.mapped_for(own_cloud) * cloud_pb
+            ),
+            "attn_bytes_dense_step": (
+                self.request_capacity * self.pages_per_slot * (end_pb + cloud_pb)
+            ),
+        }
+
     def kv_metrics(self) -> Dict[str, float]:
         """Paged-KV memory accounting.  With a fleet-shared cloud pool the
         in-use/capacity figures for the cloud tier count only this lane's
@@ -844,6 +866,7 @@ class EndCloudServingEngine(SlotEngineBase):
         in_use = self.end_pool.pages_in_use + self.cloud_pool.mapped_for(own_cloud)
         cap = self.end_pool.num_pages + self.cloud_pool.num_pages
         return {
+            **self.attn_bytes_step(),
             "kv_pages_in_use": in_use,
             "kv_pages_capacity": cap,
             "kv_utilization": in_use / cap,
