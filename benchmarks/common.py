@@ -93,7 +93,13 @@ def train_tiny(
             )
         else:
             params, opt_state, last = step_fn(params, opt_state, bj)
-    return model, {"params": params, "metrics": jax.tree.map(float, last)}
+    # scalar metrics to floats; vector gate statistics (expert_frac /
+    # group_frac, [E]/[K]) to lists
+    host = jax.tree.map(
+        lambda v: float(v) if np.ndim(v) == 0 else np.asarray(v).tolist(),
+        last,
+    )
+    return model, {"params": params, "metrics": host}
 
 
 _MASKED_CACHE = {}

@@ -18,6 +18,13 @@ one device's bandwidth mid-run — only that device replans (at its own
 drained safe point, recorded in ``replan_events``, landing on a
 compressed interior split) and every request still completes (no stall).
 
+Phase 3 exercises the paged expert-weight pool at fleet scale on an MoE
+model: one lane's memory budget halves mid-run — its slab capacity
+follows, its resident expert set shrinks via EVICTIONS at that lane's own
+safe point (every end layer keeps at least one resident), and the fleet
+keeps serving: every request completes, no other lane evicts or replans,
+aggregate tok/s stays positive.
+
 Tokens are computed for real; stage times use ``timing="modeled"`` (the
 planner's capability cost model) because one host cannot exhibit four
 declared device speeds — which also makes the run deterministic.
@@ -178,12 +185,25 @@ def run(
         "cut lane should land on a compressed interior split"
     )
 
+    # -- phase 3: paged expert weights under a per-lane memory cut (MoE
+    # -- model) — one lane's slab budget halves, its resident set shrinks
+    # -- via evictions, nothing else stalls ----------------------------------
+    expert_row = _run_expert_memory_cut(
+        n_requests=max(n_requests // 2, 8),
+        max_new_tokens=max_new_tokens,
+        max_batch=max_batch,
+        cloud_servers=cloud_servers,
+        max_spill=max_spill,
+        seed=seed,
+    )
+
     row = {
         "arch": cfg.name,
         "block_repeat": cfg.block_repeat,
         "cloud_servers": cloud_servers,
         "compression_rank": rank,
         "scaling": scaling,
+        "expert_memory_cut": expert_row,
         "bandwidth_cut": {
             "device": cut_dev,
             "gbps_cut": gbps_cut,
@@ -200,6 +220,99 @@ def run(
         f"{len(events)} replan(s), split {old_split}->{eng.lanes[cut_dev].split}, "
         f"splits {m2['splits']}, agg={m2['aggregate_tokens_per_s']:.1f} tok/s "
         f"(all requests done)",
+        flush=True,
+    )
+    return row
+
+
+def _run_expert_memory_cut(
+    *,
+    n_requests: int,
+    max_new_tokens: int,
+    max_batch: int,
+    cloud_servers: int,
+    max_spill: float,
+    seed: int,
+) -> Dict:
+    from repro.core.expertpool import expert_slab_bytes
+    from repro.core.hardware import DeviceState
+
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    slab = expert_slab_bytes(cfg)
+    cap_n = max(1, int(cfg.moe.local_selection_cap * cfg.moe.num_experts))
+    n_pos = sum(1 for s in cfg.layer_pattern if s.moe)
+
+    def build(mems, force_splits=None):
+        profiles = [
+            DeviceProfile(f"end-moe{i}", peak_gflops=p.peak_gflops,
+                          mem_gb=mems[i], mem_bw_gbs=p.mem_bw_gbs,
+                          net_gbps=p.net_gbps)
+            for i, p in enumerate(FLEET_PROFILES[:2])
+        ]
+        return FleetServingEngine(
+            model, params,
+            end_profiles=profiles, cloud_profile=CLOUD,
+            cloud_servers=cloud_servers,
+            max_batch=max_batch, max_len=128,
+            timing="modeled", max_spill=max_spill,
+            force_splits=force_splits,
+        )
+
+    # probe pass: memory never enters the split search, so the planner's
+    # splits with generous memory ARE the optima — pin them in the real
+    # pass so mid-run mask rechecks cannot move a tier boundary and the
+    # memory cut exercises only the expert pool
+    splits = [lane.split for lane in build([1.0, 1.0]).lanes]
+    # lane memory sized so the full-state slab budget exactly covers each
+    # lane's target expert set, and a mem_free=0.5 state halves it
+    mems = [2 * max(s, 1) * n_pos * cap_n * slab / 1e9 for s in splits]
+    eng = build(mems, force_splits=splits)
+
+    for r in _requests(n_requests, max_new_tokens, seed + 2):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    cut = 1
+    lane = eng.lanes[cut]
+    slabs_before = lane.expert_pool.slabs_in_use
+    eng.update_device_state(cut, DeviceState(mem_free=0.5))
+    done = eng.run()
+    m = eng.metrics()
+
+    assert len(done) == n_requests, "memory cut stalled the fleet"
+    assert lane.n_expert_evictions > 0, "halved budget must evict slabs"
+    assert lane.expert_pool.capacity < slabs_before
+    assert lane.expert_pool.peak_in_use == slabs_before
+    for lid in lane._active_lids():
+        assert lane.expert_pool.resident_count(lid) >= 1
+    other = eng.lanes[1 - cut]
+    assert other.n_expert_evictions == 0, "only the cut lane may evict"
+    assert not any(
+        ev["mask_changed"] for ev in other.replan_events
+    ), "only the cut lane's expert set may change"
+    assert [lane.split for lane in eng.lanes] == splits, (
+        "the memory cut must not move a tier boundary"
+    )
+    assert m["aggregate_tokens_per_s"] > 0
+
+    row = {
+        "splits": splits,
+        "cut_device": cut,
+        "slabs_before": slabs_before,
+        "slabs_after": lane.expert_pool.slabs_in_use,
+        "capacity_after": lane.expert_pool.capacity,
+        "evictions": lane.n_expert_evictions,
+        "fleet_hit_rate": round(m["expert_hit_rate"], 4),
+        "aggregate_tokens_per_s": round(m["aggregate_tokens_per_s"], 2),
+    }
+    print(
+        f"[fleet_throughput] dev{cut} mem halved -> slabs "
+        f"{slabs_before}->{row['slabs_after']} "
+        f"(capacity {row['capacity_after']}, {row['evictions']} evictions), "
+        f"splits {splits} unchanged, "
+        f"agg={row['aggregate_tokens_per_s']:.1f} tok/s (all requests done)",
         flush=True,
     )
     return row

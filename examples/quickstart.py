@@ -25,7 +25,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     batch = make_dummy_batch(cfg, jax.random.PRNGKey(1), batch=2, seq=64)
     logits, aux = model.train_logits(params, batch)
-    print(f"logits {logits.shape}  aux={ {k: float(v) for k, v in aux.items()} }")
+    # scalar losses only — aux also carries the measured per-expert/group
+    # routing fractions ([E]/[K]) that feed the serving engines' priorities
+    scalars = {k: float(v) for k, v in aux.items() if np.ndim(v) == 0}
+    print(f"logits {logits.shape}  aux={scalars}")
 
     # Peek at the two-stage gate on the embedding of the first tokens.
     x = params["embed"][jnp.asarray(batch["tokens"])].reshape(-1, cfg.d_model)

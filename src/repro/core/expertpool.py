@@ -1,0 +1,348 @@
+"""Paged expert-weight pool for the end tier (the expert analogue of
+``models.kvcache.PagePool``).
+
+The hardware-aware mask (eq. 2-4) decides which experts the end tier *may*
+route to — but in the dense layout every tier still holds the full
+``[E, d_model, d_ff]`` expert tensors, so a device-state change moves zero
+bytes of expert weight and a shrinking memory budget cannot actually shed
+experts.  This module makes expert *placement* first-class:
+
+  * End-tier expert weights live in a fixed-capacity pool of expert-weight
+    **slabs** — one slab is one expert's ``wi``/``wg``/``wo`` rows for one
+    layer.  Device storage is ``[num_slabs + 1, ...]`` per weight matrix;
+    the extra last row is the **garbage slab** (all zeros, never
+    allocated): tokens whose expert is not resident dispatch to it and
+    contribute exactly zero, mirroring the KV pool's garbage page.
+  * :class:`ExpertSlabPool` is the host-side allocator: a per-layer
+    resident table ``[n_layers, E] -> physical slab | -1`` plus a free
+    list, with the eq. 4 mask as the *target set* and an LRU /
+    route-frequency policy (:meth:`plan`) deciding which experts to
+    prefetch and which residents to evict when the slab budget shrinks.
+  * The serving engine gathers only resident slab rows at execute time
+    (``core.moe.moe_resident``), so end-tier expert compute and HBM
+    traffic scale with residents, not ``E``; non-resident experts are
+    routed away exactly as eq. 4-masked experts are today (the effective
+    routing mask is ``target AND resident``, computed in-trace from the
+    resident tables).
+
+The allocator is pure NumPy bookkeeping between engine ticks; the jitted
+stage functions take the device-side resident tables (built by
+:func:`device_resident_tables`) as runtime arguments, so compiled traces
+depend only on the static resident-slot count, never on which experts are
+resident.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def expert_slab_bytes(cfg) -> int:
+    """Bytes one expert's ``wi``/``wg``/``wo`` rows occupy for one layer
+    (the unit expert-pool budgets and ``expert_bytes_*`` metrics are
+    denominated in)."""
+    mats = 3 if cfg.ffn_gated else 2
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    return mats * cfg.d_model * cfg.moe.d_ff_expert * itemsize
+
+
+def init_slab_store(cfg, num_slabs: int, dtype=None) -> Dict[str, jax.Array]:
+    """Device-side slab storage: per weight matrix ``[num_slabs + 1, ...]``
+    with the last row the all-zeros garbage slab."""
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.moe.d_ff_expert
+    store = {
+        "wi": jnp.zeros((num_slabs + 1, d, f), dtype),
+        "wo": jnp.zeros((num_slabs + 1, f, d), dtype),
+    }
+    if cfg.ffn_gated:
+        store["wg"] = jnp.zeros((num_slabs + 1, d, f), dtype)
+    return store
+
+
+def write_slabs(
+    store: Dict[str, jax.Array],
+    full_moe_params: Dict[str, jax.Array],  # {"wi": [R, E, d, f], ...}
+    assignments: Sequence[Tuple[int, int, int]],  # (slab, block, expert)
+) -> Dict[str, jax.Array]:
+    """Copy expert weights ``(block, expert)`` from the full stacked params
+    into physical slab rows (one batched scatter per weight matrix)."""
+    if not assignments:
+        return store
+    slabs = jnp.asarray([a[0] for a in assignments])
+    bs = jnp.asarray([a[1] for a in assignments])
+    es = jnp.asarray([a[2] for a in assignments])
+    out = dict(store)
+    for k in store:
+        src = full_moe_params[k][bs, es].astype(store[k].dtype)
+        out[k] = store[k].at[slabs].set(src)
+    return out
+
+
+class ExpertSlabPool:
+    """Host-side slab allocator for one end tier's expert-weight pool.
+
+    Physical slabs ``0..num_slabs-1`` index the first axis of the device
+    slab store; row ``num_slabs`` is the garbage slab and is never
+    allocated.  ``table[layer, e]`` maps each (layer, expert) to its slab
+    (``-1`` = non-resident).  ``capacity`` is a *soft* limit (it may be
+    lowered below ``num_slabs`` when the device's memory budget shrinks —
+    the replan path evicts down to it at the next safe point); the
+    physical store never reallocates.  At most ``max_per_layer`` experts
+    may be resident per layer — the static resident-slot count the jitted
+    dispatch is traced for.
+    """
+
+    def __init__(self, num_slabs: int, n_layers: int, num_experts: int,
+                 max_per_layer: int):
+        if num_slabs < 1:
+            raise ValueError(f"num_slabs={num_slabs}")
+        if max_per_layer < 1:
+            raise ValueError(f"max_per_layer={max_per_layer}")
+        self.num_slabs = num_slabs
+        self.n_layers = n_layers
+        self.num_experts = num_experts
+        self.max_per_layer = min(max_per_layer, num_experts)
+        self.capacity = num_slabs
+        self.table = np.full((n_layers, num_experts), -1, np.int64)
+        # LIFO free list seeded so pops hand out low indices first
+        self._free: List[int] = list(range(num_slabs - 1, -1, -1))
+        self.last_used = np.zeros((n_layers, num_experts), np.int64)
+        self._tick = 0
+        self.peak_in_use = 0
+
+    # -- accounting -----------------------------------------------------------
+
+    @property
+    def garbage_slab(self) -> int:
+        return self.num_slabs
+
+    @property
+    def slabs_in_use(self) -> int:
+        return self.num_slabs - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.slabs_in_use / max(self.capacity, 1)
+
+    def resident_mask(self, layer: int) -> np.ndarray:
+        return self.table[layer] >= 0
+
+    def resident_count(self, layer: int) -> int:
+        return int((self.table[layer] >= 0).sum())
+
+    def set_capacity(self, capacity: int):
+        """Lower/raise the soft slab budget (never above the physical
+        store).  The caller evicts down to it via :meth:`plan` at the next
+        safe point."""
+        self.capacity = max(1, min(capacity, self.num_slabs))
+
+    # -- slab lifecycle -------------------------------------------------------
+
+    def can_alloc(self) -> bool:
+        return bool(self._free) and self.slabs_in_use < self.capacity
+
+    def alloc(self, layer: int, expert: int) -> int:
+        if self.table[layer, expert] >= 0:
+            raise ValueError(f"({layer}, {expert}) already resident")
+        if self.resident_count(layer) >= self.max_per_layer:
+            raise ValueError(
+                f"layer {layer} already holds max_per_layer="
+                f"{self.max_per_layer} residents"
+            )
+        if not self.can_alloc():
+            raise ValueError(
+                f"pool exhausted: in_use={self.slabs_in_use} "
+                f"capacity={self.capacity}"
+            )
+        slab = self._free.pop()
+        self.table[layer, expert] = slab
+        self.last_used[layer, expert] = self._tick
+        self.peak_in_use = max(self.peak_in_use, self.slabs_in_use)
+        return slab
+
+    def evict(self, layer: int, expert: int) -> int:
+        slab = int(self.table[layer, expert])
+        if slab < 0:
+            raise ValueError(f"({layer}, {expert}) not resident")
+        self.table[layer, expert] = -1
+        self._free.append(slab)
+        return slab
+
+    def free_layer(self, layer: int) -> List[int]:
+        """Release every slab a layer holds (the layer left the end tier
+        at a split replan).  Returns the freed physical slabs."""
+        freed = []
+        for e in np.nonzero(self.table[layer] >= 0)[0]:
+            freed.append(self.evict(layer, int(e)))
+        return freed
+
+    def touch(self, layers: Sequence[int], target: np.ndarray):
+        """LRU stamp: residents inside the applied routing set count as
+        used this tick (non-target residents age out)."""
+        self._tick += 1
+        for layer in layers:
+            used = (self.table[layer] >= 0) & target
+            self.last_used[layer, used] = self._tick
+
+    # -- residency policy -----------------------------------------------------
+
+    def plan(
+        self,
+        active_layers: Sequence[int],
+        target: np.ndarray,  # bool [E]: the eq. 4 mask (shared across layers)
+        freq: Optional[np.ndarray] = None,  # [E] measured routing frequency
+    ) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int]]]:
+        """Decide residency updates toward ``target`` on ``active_layers``.
+
+        Returns ``(wanted, evictions)`` as (layer, expert) lists:
+
+          * ``evictions`` — residents of inactive layers, then residents
+            the budget can no longer carry, least-valuable first
+            (non-target before target, then lowest route frequency, then
+            least-recently-used); a layer's last target resident is only
+            taken when the overflow leaves no other choice.
+          * ``wanted`` — target experts not yet resident, ordered so every
+            active layer gets its most-routed expert before any layer gets
+            its second (no layer is starved to zero residents), then by
+            measured route frequency, highest first.
+
+        Non-target residents are kept as a warm cache while the budget has
+        room — they are only evicted to make space or to fit a shrunk
+        capacity.
+        """
+        E = self.num_experts
+        freq = np.zeros((E,)) if freq is None else np.asarray(freq, np.float64)
+        active = set(int(x) for x in active_layers)
+
+        evictions: List[Tuple[int, int]] = []
+        for layer in range(self.n_layers):
+            if layer not in active:
+                for e in np.nonzero(self.table[layer] >= 0)[0]:
+                    evictions.append((layer, int(e)))
+
+        # wanted: round-robin by per-layer rank so each active layer gets
+        # its top expert first, frequency-desc within a rank
+        per_layer: List[List[Tuple[int, int]]] = []
+        for layer in sorted(active):
+            missing = [
+                int(e) for e in np.argsort(-freq, kind="stable")
+                if target[e] and self.table[layer, e] < 0
+            ]
+            # per-layer slot room counts target residents only: non-target
+            # residents are evictable to make space for target experts
+            n_target_res = int((self.table[layer][target] >= 0).sum())
+            room = self.max_per_layer - n_target_res
+            per_layer.append([(layer, e) for e in missing[:max(room, 0)]])
+        wanted: List[Tuple[int, int]] = []
+        rank = 0
+        while any(rank < len(lst) for lst in per_layer):
+            for lst in per_layer:
+                if rank < len(lst):
+                    wanted.append(lst[rank])
+            rank += 1
+
+        # per-layer slot pressure: a layer whose resident slots are full of
+        # stale non-target experts must shed them so its wanted target
+        # experts have somewhere to land (lowest-frequency, LRU first)
+        wanted_per_layer: Dict[int, int] = {}
+        for layer, e in wanted:
+            wanted_per_layer[layer] = wanted_per_layer.get(layer, 0) + 1
+        for layer in sorted(active):
+            over = (self.resident_count(layer)
+                    + wanted_per_layer.get(layer, 0) - self.max_per_layer)
+            if over <= 0:
+                continue
+            stale = sorted(
+                (int(e) for e in np.nonzero(self.table[layer] >= 0)[0]
+                 if not target[e]),
+                key=lambda e: (freq[e], self.last_used[layer, e], e),
+            )
+            evictions.extend((layer, e) for e in stale[:over])
+
+        # evictions beyond that: fit global capacity + make room
+        in_use_after = self.slabs_in_use - len(evictions)
+        overflow = max(0, in_use_after - self.capacity)
+        room = max(0, self.capacity - in_use_after)
+        need = overflow + max(0, len(wanted) - room)
+        if need > 0:
+            already = set(evictions)
+            n_target_res = {
+                layer: int((self.table[layer][target] >= 0).sum())
+                for layer in sorted(active)
+            }
+            cands: List[Tuple[Tuple, Tuple[int, int]]] = []
+            for layer in sorted(active):
+                for e in np.nonzero(self.table[layer] >= 0)[0]:
+                    e = int(e)
+                    if (layer, e) in already:
+                        continue
+                    cands.append((
+                        (1 if target[e] else 0, freq[e],
+                         self.last_used[layer, e], e),
+                        (layer, e),
+                    ))
+            cands.sort(key=lambda c: c[0])
+            taken = set()
+            # pass 1: non-target residents serve any need; target residents
+            # are evicted ONLY under capacity overflow (never to make room
+            # for another layer's wanted expert — that would thrash: evict
+            # here, prefetch there, forever), and never a layer's last one
+            for key, (layer, e) in cands:
+                if need <= 0:
+                    break
+                if key[0] == 1:
+                    if overflow <= 0 or n_target_res[layer] <= 1:
+                        continue
+                    n_target_res[layer] -= 1
+                evictions.append((layer, e))
+                taken.add((layer, e))
+                need -= 1
+                overflow = max(0, overflow - 1)
+            # pass 2: a capacity overflow that cannot be satisfied otherwise
+            # may zero layers (shrinking budgets beat starving the pool) —
+            # but growth never does
+            if need > 0 and overflow > 0:
+                for key, (layer, e) in cands:
+                    if need <= 0 or overflow <= 0:
+                        break
+                    if (layer, e) in taken:
+                        continue
+                    evictions.append((layer, e))
+                    need -= 1
+                    overflow -= 1
+        return wanted, evictions
+
+
+def device_resident_tables(
+    pool: ExpertSlabPool,
+    layer_ids: Sequence[int],  # pool layer id per end-tier block, in order
+    s_cap: int,
+) -> Dict[str, jax.Array]:
+    """Device view of the resident tables for one MoE pattern position:
+
+      * ``ids [n_blocks, s_cap + 1]`` — physical slab row of each resident
+        slot (ascending expert id; unused slots and the sentinel last slot
+        map to the garbage slab), the gather index ``moe_resident`` reads
+        weights through;
+      * ``slot [n_blocks, E]`` — expert id -> resident slot, with
+        non-resident experts mapped to the garbage slot ``s_cap`` (which
+        is how the in-trace effective routing mask ``slot < s_cap`` and
+        the zero-contribution dispatch fall out).
+    """
+    n = len(layer_ids)
+    ids = np.full((n, s_cap + 1), pool.garbage_slab, np.int64)
+    slot = np.full((n, pool.num_experts), s_cap, np.int64)
+    for b, lid in enumerate(layer_ids):
+        res = np.nonzero(pool.table[lid] >= 0)[0]
+        for s_i, e in enumerate(res[:s_cap]):
+            ids[b, s_i] = pool.table[lid, e]
+            slot[b, e] = s_i
+    return {
+        "ids": jnp.asarray(ids, jnp.int32),
+        "slot": jnp.asarray(slot, jnp.int32),
+    }

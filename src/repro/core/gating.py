@@ -166,6 +166,11 @@ def gate(
     lb = load_balance_loss(probs, topk_idx, moe_cfg.num_experts, moe_cfg.num_groups)
     aux = dict(aux)
     aux.update({k: v for k, v in lb.items() if k.startswith("lb_")})
+    # measured routing statistics (assignment fractions per expert/group):
+    # the serving engines EMA these to order the eq. 4 greedy admit and to
+    # drive the expert pool's prefetch/evict policy
+    aux["expert_frac"] = lb["expert_frac"]
+    aux["group_frac"] = lb["group_frac"]
     aux["aux_loss"] = (
         moe_cfg.router_aux_weight * (lb["lb_expert"] + lb["lb_group"])
         + moe_cfg.router_z_weight * aux["router_z"]

@@ -177,6 +177,66 @@ def moe_sorted(params: Dict, x: jax.Array, cfg, expert_mask=None):
     return y.astype(x.dtype), aux
 
 
+def moe_resident(params: Dict, x: jax.Array, cfg, expert_mask=None):
+    """Pooled end-tier path: sorted dispatch over the *resident* sub-table.
+
+    ``params["resident"]`` carries the expert pool's device view
+    (``core.expertpool``): ``store`` — slab storage ``[N + 1, ...]`` per
+    weight matrix (last row = zero garbage slab), ``ids [S + 1]`` — the
+    layer's resident slot -> physical slab gather index, ``slot [E]`` —
+    expert id -> resident slot with non-residents mapped to the garbage
+    slot ``S``.  The effective routing mask is computed in-trace as
+    ``expert_mask AND (slot < S)``, so non-resident experts are routed
+    away exactly as eq. 4-masked experts are on the dense path, and the
+    weight gather reads only resident slab rows: compute and HBM traffic
+    scale with residents, not ``E``.  For any resident superset of the
+    routed experts this is bit-identical to ``moe_sorted`` under the same
+    mask (greedy-parity-tested through the serving engines)."""
+    m = cfg.moe
+    T, d = x.shape
+    k = m.top_k
+    res = params["resident"]
+    ids, slot_of = res["ids"], res["slot"]
+    S = ids.shape[0] - 1
+    resident_ok = slot_of < S  # [E] in-trace residency mask
+    if expert_mask is not None:
+        eff_mask = jnp.logical_and(jnp.asarray(expert_mask, bool), resident_ok)
+    else:
+        eff_mask = resident_ok
+    out = gating.gate(params["gate"], x, m, eff_mask)
+    flat_e = out.topk_idx.reshape(-1)  # [T*k]
+    slots = slot_of[flat_e]  # [T*k] -> garbage slot S for non-residents
+    tok = jnp.arange(T * k) // k
+    rows = x[tok]
+    aux = dict(out.aux)
+    codec = params.get("codec")
+    if codec is not None:
+        sent = comp.roundtrip_1d(codec, rows).astype(x.dtype)
+        aux["recon_loss"] = comp.recon_loss(rows, sent)
+        rows = sent
+    # gather ONLY the resident slabs (plus the shared zero garbage row)
+    store = res["store"]
+    wi = store["wi"][ids]  # [S+1, d, f]
+    wg = store["wg"][ids] if "wg" in store else None
+    wo = store["wo"][ids]  # [S+1, f, d]
+    order = jnp.argsort(slots)
+    gs = jnp.bincount(slots, length=S + 1).astype(jnp.int32)
+    y_sorted = _grouped_mlp(rows[order], gs, wi, wg, wo, cfg.act)
+    y_rows = jnp.zeros_like(y_sorted).at[order].set(y_sorted)
+    if codec is not None:
+        back = comp.roundtrip_1d(codec, y_rows).astype(y_rows.dtype)
+        aux["recon_loss"] = aux["recon_loss"] + comp.recon_loss(y_rows, back)
+        y_rows = back
+        c = cfg.compression
+        aux["aux_loss"] = aux["aux_loss"] + c.recon_weight * aux["recon_loss"]
+    w = out.topk_weight.reshape(-1, 1).astype(y_rows.dtype)
+    # non-resident dispatches hit the zero garbage slab; zero their combine
+    # weight too so renormalized ties can never leak garbage-slab output
+    w = jnp.where((slots < S)[:, None], w, 0.0)
+    y = jax.ops.segment_sum(y_rows * w, tok, num_segments=T)
+    return y.astype(x.dtype), aux
+
+
 # ---------------------------------------------------------------------------
 # Expert-parallel paths (inside shard_map)
 # ---------------------------------------------------------------------------
@@ -356,6 +416,16 @@ def apply_moe(
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     T = x2.shape[0]
+
+    if "resident" in params:
+        # pooled end tier (paged expert weights): single-shard dispatch over
+        # the resident slab sub-table, non-residents masked in-trace
+        y, aux = moe_resident(params, x2, cfg, expert_mask)
+        if m.shared_experts and "shared" in params:
+            from repro.models.layers import apply_mlp
+
+            y = y + apply_mlp(params["shared"], x2, cfg.act)
+        return y.reshape(shape), aux
 
     if impl in ("a2a", "tp") and topo is not None and topo.use_shard_map_moe:
         # Decode-shape degeneracies: tiny token counts can't be de-replicated

@@ -89,6 +89,33 @@ def end_mask_for(
     )
 
 
+def group_priority_from_freq(
+    group_freq: Optional[np.ndarray], num_groups: int
+) -> Sequence[int]:
+    """Group order for the eq. 4 greedy admit from *measured* stage-1
+    routing frequencies (the gate's ``group_frac`` statistic, EMA'd by the
+    serving engines): most-routed group first, stable natural order on
+    ties — and exactly natural order when nothing has been measured yet,
+    so cold engines behave as before."""
+    if group_freq is None:
+        return list(range(num_groups))
+    f = np.asarray(group_freq, np.float64)
+    if f.shape != (num_groups,) or not np.isfinite(f).all():
+        return list(range(num_groups))
+    return [int(g) for g in np.argsort(-f, kind="stable")]
+
+
+def residency_target(
+    mask: np.ndarray,
+    resident: np.ndarray,
+) -> np.ndarray:
+    """Effective routing mask of a pooled end tier: the eq. 4 mask is the
+    *target set*; only its resident subset may actually be routed to (the
+    jitted path computes the same thing in-trace from the resident slot
+    tables — this host-side form exists for planning and tests)."""
+    return np.asarray(mask, bool) & np.asarray(resident, bool)
+
+
 def fleet_device_mask(
     profile: DeviceProfile,
     state: DeviceState,

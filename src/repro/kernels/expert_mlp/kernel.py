@@ -12,6 +12,16 @@ the XLA fallback writes h to HBM (C x f x 2B per expert) and reads it back,
 which at qwen3-moe scale (C=4k, f=1.5k) is ~25 MB of HBM traffic per expert
 per layer that the kernel never spends.
 
+**Resident variant** (``expert_mlp_resident_pallas``): the paged
+expert-weight pool's execution shape.  ``x`` holds one capacity buffer per
+*resident slot* (S of them, S = the end tier's resident-slot count), the
+weights are the slab store ``[num_slabs + 1, ...]``, and a per-slot
+``resident_ids [S]`` operand — a *scalar-prefetch* operand, exactly like
+the paged-attention page table — drives the weight BlockSpec index maps,
+so each grid step DMAs tiles of exactly one resident slab.  The grid is
+``(S, token-blocks, ff-tiles)``: compute AND weight HBM traffic scale with
+residents, not the full expert count E.
+
 VMEM per step (d=4096, f-tile=512, C-block=256, bf16 weights):
   x 256x4096x2 = 2 MiB, wi/wg tiles 2x4096x512x2 = 8 MiB,
   wo tile 512x4096x2 = 4 MiB (streamed), h 256x512x4 = 0.5 MiB,
@@ -25,6 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 
@@ -93,3 +104,65 @@ def expert_mlp_pallas(
 
 def _kernel_nogate(x_ref, wi_ref, wo_ref, o_ref, *, act: str):
     _kernel(x_ref, wi_ref, None, wo_ref, o_ref, act=act)
+
+
+def _kernel_resident(ids_ref, x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act):
+    # the resident indirection lives entirely in the BlockSpec index maps
+    # (ids_ref is the scalar-prefetch operand); the compute body is shared
+    _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, act=act)
+
+
+def _kernel_resident_nogate(ids_ref, x_ref, wi_ref, wo_ref, o_ref, *, act):
+    _kernel(x_ref, wi_ref, None, wo_ref, o_ref, act=act)
+
+
+def expert_mlp_resident_pallas(
+    x,  # [S, C, d] one capacity buffer per resident slot
+    wi,  # [N, d, f] slab store (N = num_slabs, possibly + garbage row)
+    wg,  # [N, d, f] | None
+    wo,  # [N, f, d]
+    resident_ids,  # [S] int32: resident slot -> physical slab row
+    *,
+    act="silu",
+    block_c=256,
+    block_f=512,
+    interpret=False,
+):
+    """Resident-sub-table expert FFN: grid (resident-slot, token-block,
+    ff-tile) with ``resident_ids`` scalar-prefetched so the weight
+    BlockSpecs DMA tiles of exactly the slot's slab — HBM weight traffic
+    is S slabs, never the whole store."""
+    S, C, d = x.shape
+    f = wi.shape[2]
+    bc = min(block_c, C)
+    bf = min(block_f, f)
+    assert C % bc == 0 and f % bf == 0, (C, bc, f, bf)
+    grid = (S, C // bc, f // bf)
+
+    in_specs = [
+        pl.BlockSpec((1, bc, d), lambda s, c, j, ids: (s, c, 0)),
+        pl.BlockSpec((1, d, bf), lambda s, c, j, ids: (ids[s], 0, j)),
+    ]
+    args = [x, wi]
+    if wg is not None:
+        in_specs.append(pl.BlockSpec((1, d, bf), lambda s, c, j, ids: (ids[s], 0, j)))
+        args.append(wg)
+    in_specs.append(pl.BlockSpec((1, bf, d), lambda s, c, j, ids: (ids[s], j, 0)))
+    args.append(wo)
+
+    kernel = functools.partial(
+        _kernel_resident if wg is not None else _kernel_resident_nogate,
+        act=act,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, d), lambda s, c, j, ids: (s, c, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, C, d), jnp.float32),
+        interpret=interpret,
+    )(resident_ids.astype(jnp.int32), *args)

@@ -14,7 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import resolve_interpret
-from repro.kernels.expert_mlp.kernel import expert_mlp_pallas
+from repro.kernels.expert_mlp.kernel import (
+    expert_mlp_pallas,
+    expert_mlp_resident_pallas,
+)
 
 
 def _pick_tiles(C: int, d: int, f: int):
@@ -36,19 +39,31 @@ def _pick_tiles(C: int, d: int, f: int):
 
 @functools.partial(jax.jit, static_argnames=("act", "interpret"))
 def expert_mlp(
-    x: jax.Array,  # [E, C, d]
-    wi: jax.Array,  # [E, d, f]
-    wg: Optional[jax.Array],  # [E, d, f] | None
-    wo: jax.Array,  # [E, f, d]
+    x: jax.Array,  # [E, C, d] — or [S, C, d] with resident_ids
+    wi: jax.Array,  # [E, d, f] — or the slab store [N, d, f]
+    wg: Optional[jax.Array],  # same layout as wi | None
+    wo: jax.Array,  # [E, f, d] — or [N, f, d]
     *,
+    resident_ids: Optional[jax.Array] = None,  # [S] slot -> slab row
     act: str = "silu",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
+    """Batched expert FFN.  With ``resident_ids`` (the paged expert-weight
+    pool's execution shape) the leading axis of ``x`` is the *resident
+    slot*, the weights are the slab store, and the scalar-prefetched ids
+    drive the weight DMA — compute and weight HBM traffic scale with the
+    resident count, not the expert count."""
     interpret = resolve_interpret(interpret)
     E, C, d = x.shape
     f = wi.shape[2]
     bc, bf = _pick_tiles(C, d, f)
-    y = expert_mlp_pallas(
-        x, wi, wg, wo, act=act, block_c=bc, block_f=bf, interpret=interpret
-    )
+    if resident_ids is not None:
+        y = expert_mlp_resident_pallas(
+            x, wi, wg, wo, resident_ids,
+            act=act, block_c=bc, block_f=bf, interpret=interpret,
+        )
+    else:
+        y = expert_mlp_pallas(
+            x, wi, wg, wo, act=act, block_c=bc, block_f=bf, interpret=interpret
+        )
     return y.astype(x.dtype)

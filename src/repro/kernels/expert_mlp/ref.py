@@ -29,3 +29,22 @@ def expert_mlp_ref(
         h = a(h)
     y = jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32))
     return y.astype(x.dtype)
+
+
+def expert_mlp_resident_ref(
+    x: jax.Array,  # [S, C, d] per-resident-slot capacity buffers
+    wi: jax.Array,  # [N, d, f] slab store
+    wg,  # [N, d, f] or None
+    wo: jax.Array,  # [N, f, d]
+    resident_ids: jax.Array,  # [S] slot -> physical slab row
+    act: str = "silu",
+) -> jax.Array:
+    """Oracle for the resident variant: gather the S resident slabs, then
+    the dense batched FFN over them."""
+    return expert_mlp_ref(
+        x,
+        wi[resident_ids],
+        None if wg is None else wg[resident_ids],
+        wo[resident_ids],
+        act,
+    )

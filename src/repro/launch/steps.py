@@ -114,7 +114,9 @@ def make_train_step(
             (grads, loss), metrics_stack = jax.lax.scan(
                 mb_step, (zero, jnp.zeros((), jnp.float32)), micro
             )
-            metrics = jax.tree.map(lambda m: m.mean(), metrics_stack)
+            # mean over the microbatch axis ONLY: vector gate statistics
+            # (expert_frac [E] / group_frac [K]) must keep their shape
+            metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics_stack)
         else:
             (loss, metrics), grads = grads_of(params, batch)
 

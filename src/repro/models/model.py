@@ -120,7 +120,7 @@ class Model:
     def decode_step_paged(
         self, params, tokens: jax.Array, page_blocks: Dict,
         page_table: jax.Array, lengths: jax.Array, *,
-        page_size: int, expert_mask=None,
+        page_size: int, expert_mask=None, expert_resident=None,
     ) -> Tuple[jax.Array, Dict]:
         """tokens [B, 1] against a paged KV cache -> (logits [B, V],
         new page blocks).  Per-slot ``lengths`` advances host-side (the
@@ -138,6 +138,7 @@ class Model:
         x, new_blocks, _ = transformer.apply_stack_decode(
             params, x, cfg, self.topo, angles, page_blocks, lengths,
             expert_mask=expert_mask, page_table=page_table, page_size=page_size,
+            expert_resident=expert_resident,
         )
         logits = transformer.lm_logits(params, cfg, x)[:, 0]
         return logits, new_blocks
@@ -145,7 +146,7 @@ class Model:
     def prefill_chunk_step(
         self, params, tokens: jax.Array, page_blocks: Dict,
         page_table: jax.Array, start: jax.Array, n_valid: jax.Array, *,
-        page_size: int, expert_mask=None,
+        page_size: int, expert_mask=None, expert_resident=None,
     ) -> Tuple[jax.Array, Dict]:
         """One fixed-size prompt chunk (tokens [B, C], rows past ``n_valid``
         are padding) written into the paged cache at positions
@@ -164,6 +165,7 @@ class Model:
         x, new_blocks = transformer.apply_stack_prefill_chunk(
             params, x, cfg, self.topo, angles, page_blocks, page_table,
             positions, n_valid, page_size, expert_mask=expert_mask,
+            expert_resident=expert_resident,
         )
         x_last = x[jnp.arange(B), jnp.maximum(n_valid - 1, 0)][:, None]
         logits = transformer.lm_logits(params, cfg, x_last)[:, 0]

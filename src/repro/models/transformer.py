@@ -301,6 +301,7 @@ def apply_layer_decode(
     expert_mask=None,
     page_table: Optional[jax.Array] = None,  # [B, pps] -> paged KV layout
     page_size: int = 0,
+    expert_resident: Optional[Dict] = None,  # this layer's resident tables
 ):
     """Single-token decode layer.  Returns (x, new_cache_entry, aux).
 
@@ -360,8 +361,13 @@ def apply_layer_decode(
     if _has_ffn(spec, cfg):
         h = rms_norm(x, p["norm2"], cfg.norm_eps)
         if spec.moe:
+            mp = p["moe"]
+            if expert_resident is not None:
+                # pooled end tier: the stripped moe params get this layer's
+                # resident tables + the shared slab store (core.expertpool)
+                mp = {**mp, "resident": expert_resident}
             y, aux = apply_moe(
-                p["moe"], h, cfg, topo, expert_mask=expert_mask, train=False
+                mp, h, cfg, topo, expert_mask=expert_mask, train=False
             )
         else:
             y = apply_mlp(p["ffn"], h, cfg.act)
@@ -418,7 +424,9 @@ def apply_stack_full(
 
     fn = jax.checkpoint(block_fn) if (remat and train) else block_fn
     x, (aux_stack, cache_stack) = jax.lax.scan(fn, x, params["blocks"])
-    aux = {k: v.sum() for k, v in aux_stack.items()}
+    # reduce over the block axis only: scalar aux stays scalar, measured
+    # routing statistics (expert_frac [E] / group_frac [K]) keep their shape
+    aux = {k: v.sum(axis=0) for k, v in aux_stack.items()}
     return x, aux, (cache_stack if collect_cache else None)
 
 
@@ -434,26 +442,45 @@ def apply_stack_decode(
     *,
     page_table: Optional[jax.Array] = None,
     page_size: int = 0,
+    expert_resident: Optional[Dict] = None,
 ):
-    def block_fn(carry_x, xs):
-        block_params, cache_entry = xs
+    """``expert_resident`` (pooled end tier) is
+    ``{"store": {...}, "tables": {"pos{i}": {"ids": [R, S+1], "slot":
+    [R, E]}}}`` from ``core.expertpool``: per-block resident tables ride
+    the scan as xs while the slab store is a loop constant, so MoE layers
+    gather only resident slab rows (``core.moe.moe_resident``)."""
+    tables = expert_resident["tables"] if expert_resident is not None else None
+    store = expert_resident["store"] if expert_resident is not None else None
+    xs = (params["blocks"], cache_blocks)
+    if tables is not None:
+        xs = xs + (tables,)
+
+    def block_fn(carry_x, xs_):
+        if tables is not None:
+            block_params, cache_entry, tab = xs_
+        else:
+            (block_params, cache_entry), tab = xs_, None
         bx = carry_x
         new_entries = {}
         aux_acc: Dict[str, jax.Array] = {}
         for i, spec in enumerate(cfg.layer_pattern):
+            res = None
+            if tab is not None and spec.moe:
+                res = {**tab[f"pos{i}"], "store": store}
             bx, ne, aux = apply_layer_decode(
                 block_params[f"pos{i}"], bx, spec, cfg, topo, angles,
                 cache_entry[f"pos{i}"], lengths, expert_mask=expert_mask,
                 page_table=page_table, page_size=page_size,
+                expert_resident=res,
             )
             new_entries[f"pos{i}"] = ne
             aux_acc = _merge_aux(aux_acc, aux)
         return bx, (new_entries, aux_acc)
 
-    x, (new_cache, aux_stack) = jax.lax.scan(
-        block_fn, x, (params["blocks"], cache_blocks)
-    )
-    aux = {k: v.sum() for k, v in aux_stack.items()}
+    x, (new_cache, aux_stack) = jax.lax.scan(block_fn, x, xs)
+    # reduce over the block axis only: scalar aux stays scalar, measured
+    # routing statistics (expert_frac [E] / group_frac [K]) keep their shape
+    aux = {k: v.sum(axis=0) for k, v in aux_stack.items()}
     return x, new_cache, aux
 
 
@@ -469,6 +496,7 @@ def apply_stack_prefill_chunk(
     n_valid: jax.Array,  # [B] rows < n_valid are real, the rest padding
     page_size: int,
     expert_mask=None,
+    expert_resident: Optional[Dict] = None,
 ):
     """Chunked prefill over the repeated block pattern (attention-only
     patterns; the serving engines gate on ``kvcache.pattern_is_pageable``).
@@ -483,9 +511,17 @@ def apply_stack_prefill_chunk(
     C = x.shape[1]
     valid = jnp.arange(C)[None, :] < n_valid[:, None]  # [B, C]
     last_pos = positions[:, 0] + n_valid - 1  # [B] final real position
+    tables = expert_resident["tables"] if expert_resident is not None else None
+    store = expert_resident["store"] if expert_resident is not None else None
+    xs = (params["blocks"], page_blocks)
+    if tables is not None:
+        xs = xs + (tables,)
 
-    def block_fn(carry_x, xs):
-        block_params, cache_entry = xs
+    def block_fn(carry_x, xs_):
+        if tables is not None:
+            block_params, cache_entry, tab = xs_
+        else:
+            (block_params, cache_entry), tab = xs_, None
         bx = carry_x
         new_entries = {}
         for i, spec in enumerate(cfg.layer_pattern):
@@ -504,8 +540,11 @@ def apply_stack_prefill_chunk(
             if _has_ffn(spec, cfg):
                 h = rms_norm(bx, p["norm2"], cfg.norm_eps)
                 if spec.moe:
+                    mp = p["moe"]
+                    if tab is not None:
+                        mp = {**mp, "resident": {**tab[f"pos{i}"], "store": store}}
                     y, _ = apply_moe(
-                        p["moe"], h, cfg, topo, expert_mask=expert_mask,
+                        mp, h, cfg, topo, expert_mask=expert_mask,
                         train=False,
                     )
                 else:
@@ -514,7 +553,7 @@ def apply_stack_prefill_chunk(
             new_entries[f"pos{i}"] = {"k": kc, "v": vc}
         return bx, new_entries
 
-    x, new_blocks = jax.lax.scan(block_fn, x, (params["blocks"], page_blocks))
+    x, new_blocks = jax.lax.scan(block_fn, x, xs)
     return x, new_blocks
 
 

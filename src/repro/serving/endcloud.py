@@ -46,6 +46,7 @@ __all__ = [
     "plan_tiers",
     "end_mask_from_state",
     "split_block_params",
+    "strip_expert_weights",
     "init_tier_pages",
     "EndCloudPipeline",
 ]
@@ -57,10 +58,14 @@ def end_mask_from_state(
     end_state: DeviceState,
     *,
     selection_eps: float = 1.0,
+    group_priority=None,
 ) -> Optional[jax.Array]:
     """Hardware-aware local expert mask (eq. 2-4) for the end tier; None for
     dense models.  Single derivation shared by the initial tier planning and
-    replan-time ``DeviceState`` updates."""
+    replan-time ``DeviceState`` updates.  ``group_priority`` orders the
+    greedy group admit (the engines pass measured stage-1 routing
+    frequencies via ``selection.group_priority_from_freq``; default natural
+    order)."""
     if cfg.moe is None:
         return None
     mask_np = end_mask_for(
@@ -73,6 +78,7 @@ def end_mask_from_state(
         gated=cfg.ffn_gated,
         eps=selection_eps,
         selection_cap=cfg.moe.local_selection_cap,
+        group_priority=group_priority,
     )
     return jnp.asarray(mask_np)
 
@@ -88,6 +94,29 @@ def split_block_params(params: Dict, split: int) -> Tuple[Dict, Dict]:
     cloud = {k: v for k, v in params.items() if k != "blocks"}
     cloud["blocks"] = cloud_blocks
     return end, cloud
+
+
+def strip_expert_weights(tier_params: Dict, cfg) -> Dict:
+    """Pooled end tier: drop the dense per-expert weight stacks
+    (``wi``/``wg``/``wo``, ``[n_blocks, E, ...]``) from a tier's block
+    params — resident experts live in the slab store
+    (``core.expertpool``) instead, which is the memory the paged
+    expert-weight pool actually saves.  Gate, shared-expert, and codec
+    params stay (they are always-on and tiny next to the expert stacks)."""
+    blocks = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        key = f"pos{i}"
+        layer = tier_params["blocks"][key]
+        if spec.moe and "moe" in layer:
+            layer = {
+                **layer,
+                "moe": {
+                    k: v for k, v in layer["moe"].items()
+                    if k not in ("wi", "wg", "wo")
+                },
+            }
+        blocks[key] = layer
+    return {**tier_params, "blocks": blocks}
 
 
 def init_tier_pages(

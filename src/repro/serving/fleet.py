@@ -78,6 +78,7 @@ class FleetLane(EndCloudServingEngine):
             gated=cfg.ffn_gated,
             eps=self.selection_eps,
             selection_cap=cfg.moe.local_selection_cap,
+            group_priority=self._group_priority(),
         )
         return jnp.asarray(mask)
 
@@ -111,6 +112,11 @@ class FleetServingEngine:
         kv_pages: Optional[int] = None,  # per-lane end-pool capacity
         cloud_kv_pages: Optional[int] = None,  # fleet-shared cloud capacity
         prefill_chunk: int = 16,
+        expert_pool: Optional[bool] = None,  # per-lane paged expert weights
+        expert_slabs: Optional[int] = None,
+        expert_resident_slots: Optional[int] = None,
+        expert_mem_frac: float = 0.5,
+        expert_prefetch_per_tick: int = 2,
     ):
         n = len(end_profiles)
         if n < 1:
@@ -178,6 +184,11 @@ class FleetServingEngine:
                     kv_pages=kv_pages,
                     prefill_chunk=prefill_chunk,
                     cloud_pool=self.cloud_pool,
+                    expert_pool=expert_pool,
+                    expert_slabs=expert_slabs,
+                    expert_resident_slots=expert_resident_slots,
+                    expert_mem_frac=expert_mem_frac,
+                    expert_prefetch_per_tick=expert_prefetch_per_tick,
                 )
             )
 
@@ -354,5 +365,28 @@ class FleetServingEngine:
             "attn_bytes_dense_step": sum(
                 m["attn_bytes_dense_step"] for m in per_device
             ),
+            # paged expert weights, summed over pooled lanes (hit rate is
+            # the mean — each lane's resident set covers its own mask)
+            **self._expert_fleet_metrics(per_device),
             "per_device": per_device,
+        }
+
+    def _expert_fleet_metrics(self, per_device: List[Dict]) -> Dict:
+        pooled = [m for m in per_device if "expert_resident_slabs" in m]
+        if not pooled:
+            return {}
+        return {
+            "expert_resident_slabs": sum(
+                m["expert_resident_slabs"] for m in pooled
+            ),
+            "expert_slab_capacity": sum(
+                m["expert_slab_capacity"] for m in pooled
+            ),
+            "expert_hit_rate": (
+                sum(m["expert_hit_rate"] for m in pooled) / len(pooled)
+            ),
+            "expert_bytes_down": sum(m["expert_bytes_down"] for m in pooled),
+            "expert_bytes_up": sum(m["expert_bytes_up"] for m in pooled),
+            "expert_prefetches": sum(m["expert_prefetches"] for m in pooled),
+            "expert_evictions": sum(m["expert_evictions"] for m in pooled),
         }

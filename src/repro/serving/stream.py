@@ -42,6 +42,25 @@ accounted by ``StageTimeline`` — the same resource-occupancy model as
 ``sim.simulator``, so the schedule is exactly what a two-host deployment
 would realize with these stage times.
 
+**Paged expert weights.**  For MoE models the end tier no longer holds the
+full ``[E, d, f]`` expert stacks: expert weights live in a fixed-capacity
+pool of per-layer slabs (:class:`~repro.core.expertpool.ExpertSlabPool`,
+the expert analogue of the KV ``PagePool``), the eq. 2-4 mask is the
+*target set*, and a route-frequency/LRU policy decides which experts are
+resident.  The jitted end stages take the target mask and the per-layer
+resident tables as *runtime* arguments and route through
+``core.moe.moe_resident`` (effective mask = ``target AND resident``,
+computed in-trace), so residency changes never retrace; expert compute
+and HBM traffic scale with residents, not ``E``.  Slab prefetches are
+booked on the same ``StageTimeline`` link resource as boundary traffic —
+overlapped with decode ticks — and the swapped-in tables/mask apply only
+at replan safe points, so greedy tokens stay bit-identical across the
+transfer window; evictions (budget shrinks, mask changes) free slabs that
+no applied table references.  Group priority for the eq. 4 greedy admit
+comes from *measured* stage-1 gate statistics
+(``selection.group_priority_from_freq`` over an EMA of ``group_frac``),
+not natural order.
+
 **Replanning.**  Link measurements arrive through ``observe_bandwidth``
 and device drift through ``update_device_state``, which also re-derives the
 end tier's expert mask from the new state vector (eq. 2-4).  Either trigger
@@ -69,8 +88,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as comp
+from repro.core import expertpool
 from repro.core.hardware import DeviceProfile, DeviceState, capability
 from repro.core.pipeline import BandwidthEstimator, PipelinePlan, replan_pipeline
+from repro.core.selection import group_priority_from_freq
 from repro.models import attention as attn_mod
 from repro.models import kvcache, transformer
 from repro.models.kvcache import PagePool
@@ -88,6 +109,7 @@ from repro.serving.endcloud import (
     init_tier_pages,
     plan_tiers,
     split_block_params,
+    strip_expert_weights,
 )
 
 __all__ = ["EndCloudServingEngine"]
@@ -144,6 +166,11 @@ class EndCloudServingEngine(SlotEngineBase):
         kv_pages: Optional[int] = None,
         prefill_chunk: int = 16,
         cloud_pool: Optional[PagePool] = None,  # fleet-shared cloud pages
+        expert_pool: Optional[bool] = None,  # None = auto (on for MoE models)
+        expert_slabs: Optional[int] = None,  # physical slab-pool size
+        expert_resident_slots: Optional[int] = None,  # per-layer slot count
+        expert_mem_frac: float = 0.5,  # end mem budget share for slabs
+        expert_prefetch_per_tick: int = 2,
     ):
         if not kvcache.pattern_is_pageable(model.cfg):
             raise NotImplementedError(
@@ -169,6 +196,25 @@ class EndCloudServingEngine(SlotEngineBase):
         self.selection_eps = selection_eps
         self.replan_threshold = replan_threshold
 
+        # paged expert weights: pooled by default for MoE models — the mask
+        # derivation below already reads the measured-frequency group
+        # priority, so these attrs must exist before plan_tiers
+        self._moe_pos = [
+            i for i, spec in enumerate(model.cfg.layer_pattern) if spec.moe
+        ]
+        self._expert_pooled = bool(
+            (expert_pool if expert_pool is not None else True)
+            and model.cfg.moe is not None
+            and self._moe_pos
+        )
+        self._route_freq: Optional[np.ndarray] = None  # [E] EMA expert_frac
+        self._group_freq: Optional[np.ndarray] = None  # [K] EMA group_frac
+        self._freq_decay = 0.9
+        # any MoE end tier (pooled or dense-mask) measures routing stats
+        self._route_stats_enabled = model.cfg.moe is not None and bool(
+            self._moe_pos
+        )
+
         self.tiers: TierPlan = plan_tiers(
             model,
             end_profile=end_profile,
@@ -183,6 +229,8 @@ class EndCloudServingEngine(SlotEngineBase):
             cloud_share=cloud_share,
         )
         self.end_params, self.cloud_params = split_block_params(params, self.split)
+        if self._expert_pooled:
+            self.end_params = strip_expert_weights(self.end_params, self.cfg)
 
         self.link = LinkStats()
         self.bw = BandwidthEstimator(self.tiers.end_cap.net_gbps)
@@ -269,6 +317,36 @@ class EndCloudServingEngine(SlotEngineBase):
         self._m_boundary_ready = [0.0] * self.n_groups
         self._m_group_ready = [0.0] * self.n_groups
 
+        # -- paged expert weights: slab pool + device store/tables ----------
+        self.expert_pool: Optional[expertpool.ExpertSlabPool] = None
+        if self._expert_pooled:
+            m = self.cfg.moe
+            E = m.num_experts
+            s_cap = expert_resident_slots or max(
+                1, int(np.floor(m.local_selection_cap * E))
+            )
+            self._s_cap = min(s_cap, E)
+            n_layers = len(self._moe_pos) * self.cfg.block_repeat
+            self._slab_bytes = expertpool.expert_slab_bytes(self.cfg)
+            self._expert_mem_frac = expert_mem_frac
+            n_slabs = expert_slabs or n_layers * self._s_cap
+            self.expert_pool = expertpool.ExpertSlabPool(
+                n_slabs, n_layers, E, self._s_cap
+            )
+            self._slab_store = expertpool.init_slab_store(self.cfg, n_slabs)
+            self._expert_prefetch_per_tick = max(1, expert_prefetch_per_tick)
+            self._prefetch_queue: List[Tuple[int, int]] = []
+            self._expert_ready_s = 0.0  # link-resource cursor for transfers
+            self.expert_bytes_down = 0  # runtime slab prefetch traffic
+            self.expert_bytes_up = 0  # (evictions are drops; cloud keeps all)
+            self.n_expert_prefetches = 0
+            self.n_expert_evictions = 0
+            self._expert_dirty = False
+            self._applied_target = np.asarray(self.tiers.end_mask, bool)
+            # initial residency ships with the deployment: filled instantly,
+            # not metered — only *runtime* residency changes ride the link
+            self._expert_sync(instant_lids=set(self._active_lids()))
+
         self.n_stage_steps = 0  # decode end-steps (== drained cloud-steps)
         self.n_prefill_chunks = 0
         # This engine's own stage seconds (the timeline's busy_s would mix in
@@ -293,10 +371,169 @@ class EndCloudServingEngine(SlotEngineBase):
         """Hardware-aware expert mask for this end device (eq. 2-4).  One
         derivation shared by initial tier planning and replan-time state
         updates; the fleet lane overrides it with the fleet-mask semantics
-        (``selection.shard_masks_for_fleet``'s never-empty guarantee)."""
+        (``selection.shard_masks_for_fleet``'s never-empty guarantee).
+        The greedy group admit is ordered by *measured* stage-1 routing
+        frequency (EMA of the gate's ``group_frac``), not natural order."""
         return end_mask_from_state(
-            self.cfg, self.end_profile, end_state, selection_eps=self.selection_eps
+            self.cfg, self.end_profile, end_state,
+            selection_eps=self.selection_eps,
+            group_priority=self._group_priority(),
         )
+
+    def _group_priority(self):
+        if self.cfg.moe is None:
+            return None
+        return group_priority_from_freq(
+            self._group_freq, self.cfg.moe.num_groups
+        )
+
+    # -- paged expert weights (slab pool; see core.expertpool) ----------------
+
+    def _active_lids(self) -> List[int]:
+        """Pool layer ids of the end tier's MoE layers at the current
+        split: block ``b`` of pattern position ``self._moe_pos[pi]`` is
+        layer ``pi * block_repeat + b``."""
+        R = self.cfg.block_repeat
+        return [
+            pi * R + b
+            for pi in range(len(self._moe_pos))
+            for b in range(self.split)
+        ]
+
+    def _expert_capacity(self) -> int:
+        """Slab budget from the end capability's memory term (eq. 3):
+        ``expert_mem_frac`` of the budget buys slabs — a shrinking memory
+        budget now actually sheds experts (evictions at the next safe
+        point) instead of only suppressing routing.  Floor: every active
+        end layer keeps at least one resident."""
+        budget = self.tiers.end_cap.mem_budget_gb * 1e9 * self._expert_mem_frac
+        n = int(budget // self._slab_bytes)
+        floor_n = max(1, len(self._active_lids()))
+        return max(floor_n, min(n, self.expert_pool.num_slabs))
+
+    def _target_mask_np(self) -> np.ndarray:
+        return np.asarray(self.tiers.end_mask, bool)
+
+    def _write_slabs(self, assignments: List[Tuple[int, int, int, int]]):
+        """(slab, pos_index, block, expert) -> copy weights into the store
+        (one batched scatter per MoE pattern position)."""
+        by_pos: Dict[int, List[Tuple[int, int, int]]] = {}
+        for slab, pi, b, e in assignments:
+            by_pos.setdefault(pi, []).append((slab, b, e))
+        for pi, asg in by_pos.items():
+            full = self.params["blocks"][f"pos{self._moe_pos[pi]}"]["moe"]
+            self._slab_store = expertpool.write_slabs(
+                self._slab_store, full, asg
+            )
+
+    def _lid_to_pos_block(self, lid: int) -> Tuple[int, int]:
+        R = self.cfg.block_repeat
+        return lid // R, lid % R
+
+    def _expert_sync(self, instant_lids=()):
+        """Reconcile pool residency with the current target mask / split /
+        memory budget — called at replan safe points only, so the swapped
+        tables and routing mask can never change mid-boundary.  Layers in
+        ``instant_lids`` (initial fill, blocks entering the end tier at a
+        split change — their weights move with the unmetered block
+        re-split) materialize immediately; everything else joins the
+        prefetch queue and rides the link timeline."""
+        pool = self.expert_pool
+        target = self._target_mask_np()
+        active = self._active_lids()
+        pool.set_capacity(self._expert_capacity())
+        wanted, evictions = pool.plan(active, target, self._route_freq)
+        for lid, e in evictions:
+            pool.evict(lid, e)
+            self.n_expert_evictions += 1
+        instant_lids = set(instant_lids)
+        queue: List[Tuple[int, int]] = []
+        writes: List[Tuple[int, int, int, int]] = []
+        for lid, e in wanted:
+            if lid in instant_lids and pool.can_alloc():
+                slab = pool.alloc(lid, e)
+                pi, b = self._lid_to_pos_block(lid)
+                writes.append((slab, pi, b, e))
+            else:
+                queue.append((lid, e))
+        self._write_slabs(writes)
+        self._prefetch_queue = queue
+        self._applied_target = target
+        self._expert_tables = self._build_expert_tables()
+        self._emask_dev = jnp.asarray(target)
+        pool.touch(active, target)
+        self._expert_dirty = False
+
+    def _build_expert_tables(self) -> Dict[str, Dict[str, jax.Array]]:
+        R = self.cfg.block_repeat
+        tabs = {}
+        for pi, pos in enumerate(self._moe_pos):
+            lids = [pi * R + b for b in range(self.split)]
+            tabs[f"pos{pos}"] = expertpool.device_resident_tables(
+                self.expert_pool, lids, self._s_cap
+            )
+        return tabs
+
+    def _eres(self) -> Dict:
+        """The pooled end stages' runtime operand: slab store + per-layer
+        resident tables (shapes depend only on the split and the static
+        resident-slot count, so residency changes never retrace)."""
+        return {"store": self._slab_store, "tables": self._expert_tables}
+
+    def _advance_expert_prefetch(self):
+        """Transfer up to ``expert_prefetch_per_tick`` queued slabs: write
+        the weights into the store (unreferenced by any applied table until
+        the next safe point, so in-flight decode is untouched) and book the
+        wire time on the shared link resource — prefetch overlaps decode
+        on the occupancy timeline exactly like boundary traffic.  A queue
+        head blocked on capacity waits for safe-point evictions."""
+        if not self._expert_pooled or not self._prefetch_queue:
+            return
+        pool = self.expert_pool
+        n = 0
+        i = 0
+        writes: List[Tuple[int, int, int, int]] = []
+        while i < len(self._prefetch_queue) and n < self._expert_prefetch_per_tick:
+            lid, e = self._prefetch_queue[i]
+            if pool.table[lid, e] >= 0:
+                self._prefetch_queue.pop(i)
+                continue
+            if not pool.can_alloc():
+                break  # global budget: nothing can transfer this tick
+            if pool.resident_count(lid) >= pool.max_per_layer:
+                # this layer's slots wait for safe-point evictions — skip
+                # it, other layers' transfers must not head-of-line block
+                i += 1
+                continue
+            self._prefetch_queue.pop(i)
+            slab = pool.alloc(lid, e)
+            pi, b = self._lid_to_pos_block(lid)
+            writes.append((slab, pi, b, e))
+            t_wire = self.link.transfer_time(self._slab_bytes, self.bw.gbps)
+            self._expert_ready_s = self.timeline.occupy(
+                self._res_link, self._expert_ready_s, t_wire
+            )
+            self.expert_bytes_down += self._slab_bytes
+            self.n_expert_prefetches += 1
+            self._expert_dirty = True  # tables swap at the next safe point
+            n += 1
+        self._write_slabs(writes)
+
+    def _observe_route_stats(self, stats: Dict):
+        """EMA the gate's measured routing statistics (summed over the end
+        tier's MoE layers by the stack) — they order the eq. 4 group admit
+        and the pool's prefetch/evict priorities."""
+        n_layers = max(len(self._active_lids()), 1)
+        ef = np.asarray(stats["expert_frac"], np.float64) / n_layers
+        gf = np.asarray(stats["group_frac"], np.float64) / n_layers
+        if not (np.isfinite(ef).all() and np.isfinite(gf).all()):
+            return
+        d = self._freq_decay
+        if self._route_freq is None:
+            self._route_freq, self._group_freq = ef, gf
+        else:
+            self._route_freq = d * self._route_freq + (1 - d) * ef
+            self._group_freq = d * self._group_freq + (1 - d) * gf
 
     @property
     def plan(self) -> PipelinePlan:
@@ -320,6 +557,7 @@ class EndCloudServingEngine(SlotEngineBase):
         codec, compress, end_mask = tiers.codec, tiers.compress, tiers.end_mask
         act = jnp.dtype(cfg.dtype)
         ps = self.page_size
+        pooled = self._expert_pooled
 
         def decode_angles(lengths, B):
             pos = lengths[:, None]
@@ -341,12 +579,39 @@ class EndCloudServingEngine(SlotEngineBase):
         def end_step(end_params, tokens, pages, table, lengths):
             angles = decode_angles(lengths, tokens.shape[0])
             x = transformer.embed_inputs(end_params, cfg, tokens)
-            x, new_pages, _ = transformer.apply_stack_decode(
+            x, new_pages, aux = transformer.apply_stack_decode(
                 end_params, x, cfg, topo, angles, pages, lengths,
                 expert_mask=end_mask, page_table=table, page_size=ps,
             )
             z = comp.encode_1d(codec, x) if compress else x
+            if self._route_stats_enabled:
+                # dense-mask MoE engines measure routing too: the eq. 4
+                # group priority must come from traffic, not natural order
+                stats = {
+                    "expert_frac": aux["expert_frac"],
+                    "group_frac": aux["group_frac"],
+                }
+                return z, new_pages, stats
             return z, new_pages
+
+        # pooled variants: the target mask and the resident tables/store
+        # are RUNTIME operands (residency changes never retrace); the gate's
+        # measured routing stats come back for the frequency EMA
+        def end_step_pooled(end_params, tokens, pages, table, lengths,
+                            emask, eres):
+            angles = decode_angles(lengths, tokens.shape[0])
+            x = transformer.embed_inputs(end_params, cfg, tokens)
+            x, new_pages, aux = transformer.apply_stack_decode(
+                end_params, x, cfg, topo, angles, pages, lengths,
+                expert_mask=emask, page_table=table, page_size=ps,
+                expert_resident=eres,
+            )
+            z = comp.encode_1d(codec, x) if compress else x
+            stats = {
+                "expert_frac": aux["expert_frac"],
+                "group_frac": aux["group_frac"],
+            }
+            return z, new_pages, stats
 
         def cloud_step(cloud_params, z, pages, table, lengths):
             angles = decode_angles(lengths, z.shape[0])
@@ -367,6 +632,20 @@ class EndCloudServingEngine(SlotEngineBase):
             x, new_pages = transformer.apply_stack_prefill_chunk(
                 end_params, x, cfg, topo, angles, pages, table,
                 positions, n_valid, ps, expert_mask=end_mask,
+            )
+            z = comp.encode_1d(codec, x) if compress else x
+            return z, new_pages
+
+        def end_prefill_chunk_pooled(end_params, tokens, pages, table, start,
+                                     n_valid, emask, eres):
+            B, C = tokens.shape
+            positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+            angles = chunk_angles(positions)
+            x = transformer.embed_inputs(end_params, cfg, tokens)
+            x, new_pages = transformer.apply_stack_prefill_chunk(
+                end_params, x, cfg, topo, angles, pages, table,
+                positions, n_valid, ps, expert_mask=emask,
+                expert_resident=eres,
             )
             z = comp.encode_1d(codec, x) if compress else x
             return z, new_pages
@@ -393,9 +672,14 @@ class EndCloudServingEngine(SlotEngineBase):
                 jax.jit(fn), self._traces.setdefault(name, set()), gen
             )
 
-        self._end_step = counted("end_step", end_step)
+        self._end_step = counted(
+            "end_step", end_step_pooled if pooled else end_step
+        )
         self._cloud_step = counted("cloud_step", cloud_step)
-        self._end_prefill_chunk = counted("end_prefill_chunk", end_prefill_chunk)
+        self._end_prefill_chunk = counted(
+            "end_prefill_chunk",
+            end_prefill_chunk_pooled if pooled else end_prefill_chunk,
+        )
         self._cloud_prefill_chunk = counted(
             "cloud_prefill_chunk", cloud_prefill_chunk
         )
@@ -414,7 +698,12 @@ class EndCloudServingEngine(SlotEngineBase):
         tc = self.cloud_pool.device_rows(
             [self._cslot(s) for s in range(gsz)], active=inactive
         )
-        z, _ = self._end_step(self.end_params, tokens, self._end_pages, te, lengths)
+        eargs = (
+            (self._emask_dev, self._eres()) if self._expert_pooled else ()
+        )
+        z, _, *_ = self._end_step(
+            self.end_params, tokens, self._end_pages, te, lengths, *eargs
+        )
         logits, _ = self._cloud_step(
             self.cloud_params, z, self._cloud_pages, tc, lengths
         )
@@ -429,7 +718,7 @@ class EndCloudServingEngine(SlotEngineBase):
             [self._cslot(0)], active=np.zeros((1,), bool)
         )
         z, _ = self._end_prefill_chunk(
-            self.end_params, ctok, self._end_pages, te1, start, valid
+            self.end_params, ctok, self._end_pages, te1, start, valid, *eargs
         )
         logits, _ = self._cloud_prefill_chunk(
             self.cloud_params, z, self._cloud_pages, tc1, start, valid
@@ -495,10 +784,13 @@ class EndCloudServingEngine(SlotEngineBase):
         start = jnp.asarray([p0], jnp.int32)
         valid = jnp.asarray([v], jnp.int32)
 
+        eargs = (
+            (self._emask_dev, self._eres()) if self._expert_pooled else ()
+        )
         t0 = time.perf_counter()
         z, self._end_pages = self._end_prefill_chunk(
             self.end_params, tokens, self._end_pages,
-            self.end_pool.device_rows([slot]), start, valid,
+            self.end_pool.device_rows([slot]), start, valid, *eargs,
         )
         z.block_until_ready()
         te = self._stage_seconds("end", v)
@@ -604,13 +896,26 @@ class EndCloudServingEngine(SlotEngineBase):
         )
         lengths = jnp.asarray(self._slot_len[gs:ge], jnp.int32)
         t0 = time.perf_counter()
-        z, self._end_pages = self._end_step(
-            self.end_params, tokens, self._end_pages, table, lengths
-        )
+        if self._expert_pooled:
+            z, self._end_pages, stats = self._end_step(
+                self.end_params, tokens, self._end_pages, table, lengths,
+                self._emask_dev, self._eres(),
+            )
+        elif self._route_stats_enabled:
+            z, self._end_pages, stats = self._end_step(
+                self.end_params, tokens, self._end_pages, table, lengths
+            )
+        else:
+            z, self._end_pages = self._end_step(
+                self.end_params, tokens, self._end_pages, table, lengths
+            )
+            stats = None
         z.block_until_ready()
         te = self._stage_seconds("end", ge - gs)
         if te is None:
             te = time.perf_counter() - t0
+        if stats is not None:
+            self._observe_route_stats(stats)
 
         # meter only active slots' boundary rows: inactive and padding
         # slots' activations never cross the wire (matches the prefill
@@ -679,6 +984,7 @@ class EndCloudServingEngine(SlotEngineBase):
         for g in range(self.n_groups):
             if self._phase[g] == "boundary":
                 emitted += self._run_cloud_stage(g)
+        self._advance_expert_prefetch()
         self._apply_pending_replan()
         self._admit()
         for slot in sorted(self._jobs):
@@ -716,6 +1022,23 @@ class EndCloudServingEngine(SlotEngineBase):
             # latest state agrees with the applied mask: cancel any pending
             # change from an earlier (now recovered-from) observation
             self._pending_mask = _KEEP
+        if self._expert_pooled:
+            # the memory budget (slab capacity) may have moved even when the
+            # eq. 4 mask did not: reconcile at the next safe point, and start
+            # any newly-needed slab transfers NOW so they overlap decode.
+            # The capacity is adopted immediately — set_capacity never
+            # evicts, so raising it unblocks transfers during the window
+            # before the safe point, and lowering it only pauses allocs
+            # until the safe-point evictions land
+            self._expert_dirty = True
+            self.expert_pool.set_capacity(self._expert_capacity())
+            target = np.asarray(
+                new_mask if mask_changed else self.tiers.end_mask, bool
+            )
+            wanted, _ev = self.expert_pool.plan(
+                self._active_lids(), target, self._route_freq
+            )
+            self._prefetch_queue = list(wanted)
         # The state vector's B_bw component is a link observation only when
         # it reports a non-default value; a default-constructed 1.0 means
         # "not measured" and must not overwrite probe readings fed through
@@ -775,10 +1098,17 @@ class EndCloudServingEngine(SlotEngineBase):
         (table-aware row permutation), defrag the private pools, and rebuild
         the stage functions — but only when something a trace captures
         (split, codec flag, expert mask) actually changed."""
-        if self._pending_plan is None and self._pending_mask is _KEEP:
+        if (
+            self._pending_plan is None
+            and self._pending_mask is _KEEP
+            and not (self._expert_pooled and self._expert_dirty)
+        ):
             return
         if any(p == "boundary" for p in self._phase):
             return
+        had_pending = (
+            self._pending_plan is not None or self._pending_mask is not _KEEP
+        )
         plan = self._pending_plan or self.plan
         self._pending_plan = None
         old_split = self.split
@@ -793,6 +1123,8 @@ class EndCloudServingEngine(SlotEngineBase):
             self.end_params, self.cloud_params = split_block_params(
                 self.params, self.split
             )
+            if self._expert_pooled:
+                self.end_params = strip_expert_weights(self.end_params, self.cfg)
             cloud_rows = self.cloud_pool.table[
                 self._cloud_base : self._cloud_base + self.max_batch
             ]
@@ -809,21 +1141,37 @@ class EndCloudServingEngine(SlotEngineBase):
                 e2c, c2e,
             )
             self._defrag_private_pools()
+        if self._expert_pooled:
+            # blocks entering the end tier materialize their target
+            # residents with the (unmetered) block re-split; every other
+            # residency change rides the prefetch queue / eviction plan
+            instant = set()
+            if self.split > old_split:
+                R = self.cfg.block_repeat
+                instant = {
+                    pi * R + b
+                    for pi in range(len(self._moe_pos))
+                    for b in range(old_split, self.split)
+                }
+            self._expert_sync(instant_lids=instant)
         if (
             self.split != old_split
             or self.tiers.compress != old_compress
-            or mask_changed
+            or (mask_changed and not self._expert_pooled)
         ):
+            # pooled engines take the mask/tables as runtime operands, so a
+            # mask-only change needs no rebuild (and no retrace)
             self._build_stage_fns()
-        self.replan_events.append(
-            {
-                "old_split": old_split,
-                "new_split": self.split,
-                "measured_gbps": self.bw.gbps,
-                "compress": self.tiers.compress,
-                "mask_changed": mask_changed,
-            }
-        )
+        if had_pending:
+            self.replan_events.append(
+                {
+                    "old_split": old_split,
+                    "new_split": self.split,
+                    "measured_gbps": self.bw.gbps,
+                    "compress": self.tiers.compress,
+                    "mask_changed": mask_changed,
+                }
+            )
 
     # -- metrics --------------------------------------------------------------
 
@@ -853,6 +1201,53 @@ class EndCloudServingEngine(SlotEngineBase):
             "attn_bytes_dense_step": (
                 self.request_capacity * self.pages_per_slot * (end_pb + cloud_pb)
             ),
+        }
+
+    def _expert_hit_rate(self) -> float:
+        """Route-frequency-weighted residency coverage of the current
+        target set: 1.0 once every target expert of every active end layer
+        is resident.  Frequencies are the measured EMA plus a uniform
+        ``1/E`` prior, so experts the target just admitted (no traffic
+        measured yet — they could not be routed to) still register as
+        misses until their slab lands."""
+        if not self._expert_pooled:
+            return 1.0
+        E = self.cfg.moe.num_experts
+        f = (
+            self._route_freq if self._route_freq is not None
+            else np.zeros((E,))
+        ) + 1.0 / E
+        t = self._target_mask_np()
+        num = den = 0.0
+        for lid in self._active_lids():
+            r = self.expert_pool.resident_mask(lid)
+            num += float(f[t & r].sum())
+            den += float(f[t].sum())
+        return 1.0 if den == 0.0 else num / den
+
+    def expert_metrics(self) -> Dict[str, float]:
+        """Paged expert-weight accounting: residency, hit rate, transfer
+        traffic, and the per-decode-step expert HBM bytes the resident
+        gather moves vs the dense ``[E, d, f]`` sweep it replaced (the
+        garbage slab — one shared zeros row — is not charged)."""
+        if not self._expert_pooled:
+            return {}
+        pool = self.expert_pool
+        active = self._active_lids()
+        sb = self._slab_bytes
+        E = self.cfg.moe.num_experts
+        n_res_active = sum(pool.resident_count(lid) for lid in active)
+        return {
+            "expert_resident_slabs": pool.slabs_in_use,
+            "expert_slab_capacity": pool.capacity,
+            "expert_hit_rate": self._expert_hit_rate(),
+            "expert_bytes_down": self.expert_bytes_down,
+            "expert_bytes_up": self.expert_bytes_up,
+            "expert_bytes_resident": pool.slabs_in_use * sb,
+            "expert_bytes_step_resident": n_res_active * sb,
+            "expert_bytes_step_dense": len(active) * E * sb,
+            "expert_prefetches": self.n_expert_prefetches,
+            "expert_evictions": self.n_expert_evictions,
         }
 
     def kv_metrics(self) -> Dict[str, float]:
@@ -911,4 +1306,5 @@ class EndCloudServingEngine(SlotEngineBase):
             "replan_events": len(self.replan_events),
             "measured_gbps": self.bw.gbps,
             **self.kv_metrics(),
+            **self.expert_metrics(),
         }

@@ -1,0 +1,395 @@
+"""Paged expert-weight pool (core.expertpool + core.moe.moe_resident +
+the pooled end tier of serving.stream).
+
+Covers the tentpole invariants:
+  (a) pool allocator/policy: alloc/evict/capacity accounting, prefetch
+      priority by measured route frequency, capacity shrinks never starve
+      a layer while the budget allows one resident;
+  (b) moe_resident == moe_sorted under the same mask for any resident
+      superset of the routed experts (f32);
+  (c) greedy token parity dense-vs-pooled through the serving engines at
+      splits 0 / mid / R;
+  (d) mask shrink+grow at replan safe points: pooled engine stays
+      token-identical to the dense engine fed the same state updates, and
+      the grow's slab prefetches are booked on the link timeline;
+  (e) eviction never corrupts: poisoning evicted slabs changes nothing
+      for resident-routed tokens;
+  (f) a shrinking memory budget actually sheds experts (evictions), and
+      per-step end-tier expert HBM bytes scale with residents (<= 1/2 of
+      dense at the 40% selection cap);
+  (g) measured group frequencies reorder the eq. 4 greedy admit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import expertpool as ep
+from repro.core import moe as moe_mod
+from repro.core.hardware import PROFILES, DeviceProfile, DeviceState
+from repro.core.selection import group_priority_from_freq, residency_target
+from repro.models.model import build_model
+from repro.serving.common import Request
+from repro.serving.stream import EndCloudServingEngine
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(
+        num_layers=4, dtype="float32", param_dtype="float32"
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, 500, size=int(rng.integers(4, 16))).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _run_engine(model, params, *, expert_pool, split, profile=None,
+                updates=(), n_req=5, new_tokens=8, **kw):
+    """Run a workload, applying ``updates`` = [(after_steps, DeviceState)]
+    at fixed step counts; returns (tokens dict, engine)."""
+    eng = EndCloudServingEngine(
+        model, params,
+        end_profile=profile or PROFILES["a100"],
+        cloud_profile=PROFILES["a100"],
+        max_batch=4, max_len=64, force_split=split,
+        expert_pool=expert_pool, **kw,
+    )
+    reqs = [Request(i, p, max_new_tokens=new_tokens)
+            for i, p in enumerate(_prompts(n_req))]
+    for r in reqs:
+        eng.submit(r)
+    pending = sorted(updates, key=lambda u: u[0])
+    steps = 0
+    while eng.busy():
+        while pending and pending[0][0] <= steps:
+            eng.update_device_state(pending[0][1])
+            pending.pop(0)
+        eng.step()
+        steps += 1
+        assert steps < 10_000
+    return {r.request_id: r.generated for r in reqs}, eng
+
+
+# ----------------------------------------------------------- pool allocator
+
+def test_pool_alloc_evict_invariants():
+    pool = ep.ExpertSlabPool(num_slabs=6, n_layers=2, num_experts=8,
+                             max_per_layer=3)
+    s0 = pool.alloc(0, 2)
+    s1 = pool.alloc(1, 2)
+    assert s0 != s1 and pool.slabs_in_use == 2
+    assert pool.resident_mask(0)[2] and not pool.resident_mask(0)[3]
+    with pytest.raises(ValueError):
+        pool.alloc(0, 2)  # double alloc
+    pool.alloc(0, 0)
+    pool.alloc(0, 1)
+    with pytest.raises(ValueError):
+        pool.alloc(0, 3)  # beyond max_per_layer
+    freed = pool.evict(0, 2)
+    assert freed == s0 and pool.slabs_in_use == 3
+    with pytest.raises(ValueError):
+        pool.evict(0, 2)  # double evict
+    assert pool.free_layer(1) == [s1]
+    assert pool.slabs_in_use == 2
+    assert pool.peak_in_use == 4
+
+
+def test_pool_plan_orders_by_measured_frequency():
+    pool = ep.ExpertSlabPool(num_slabs=8, n_layers=2, num_experts=8,
+                             max_per_layer=3)
+    target = np.zeros(8, bool)
+    target[[0, 1, 2]] = True
+    freq = np.array([0.1, 0.5, 0.2, 0, 0, 0, 0, 0])
+    wanted, evictions = pool.plan([0, 1], target, freq)
+    assert evictions == []
+    # round-robin by rank so no layer is starved, freq-desc within a rank
+    assert wanted == [(0, 1), (1, 1), (0, 2), (1, 2), (0, 0), (1, 0)]
+
+
+def test_pool_capacity_shrink_keeps_one_resident_per_layer():
+    pool = ep.ExpertSlabPool(num_slabs=6, n_layers=2, num_experts=8,
+                             max_per_layer=3)
+    target = np.zeros(8, bool)
+    target[[0, 1, 2]] = True
+    for layer in (0, 1):
+        for e in (0, 1, 2):
+            pool.alloc(layer, e)
+    freq = np.array([0.6, 0.3, 0.1, 0, 0, 0, 0, 0])
+    pool.set_capacity(3)
+    wanted, evictions = pool.plan([0, 1], target, freq)
+    assert wanted == [] and len(evictions) == 3
+    for layer, e in evictions:
+        pool.evict(layer, e)
+    # lowest-frequency residents went first, and no layer went to zero
+    assert pool.resident_count(0) >= 1 and pool.resident_count(1) >= 1
+    assert pool.slabs_in_use == 3
+    assert all(not pool.resident_mask(layer)[2] for layer in (0, 1))
+
+
+def test_pool_plan_evicts_stale_nontarget_for_room():
+    pool = ep.ExpertSlabPool(num_slabs=2, n_layers=1, num_experts=8,
+                             max_per_layer=2)
+    pool.alloc(0, 6)  # non-target leftover from an old mask
+    pool.alloc(0, 7)
+    target = np.zeros(8, bool)
+    target[[0, 1]] = True
+    freq = np.zeros(8)
+    freq[6] = 0.5  # 6 is still hot, 7 is stale
+    wanted, evictions = pool.plan([0], target, freq)
+    assert wanted == [(0, 0), (0, 1)]
+    # needs both slots eventually; the stale one goes first
+    assert evictions[0] == (0, 7)
+
+
+# ------------------------------------------------------------ moe_resident
+
+def test_moe_resident_matches_sorted_for_any_superset(moe_model):
+    model, _ = moe_model
+    cfg = model.cfg
+    m = cfg.moe
+    E = m.num_experts
+    params = moe_mod.init_moe(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, cfg.d_model), jnp.float32)
+    mask = np.zeros(E, bool)
+    mask[[0, 1, 4]] = True
+    y_ref, _ = moe_mod.moe_sorted(params, x, cfg, jnp.asarray(mask))
+
+    full = {k: params[k][None] for k in ("wi", "wg", "wo") if k in params}
+    for extra in ([], [6], [2, 6]):  # resident supersets of the mask
+        S = 5
+        pool = ep.ExpertSlabPool(E, n_layers=1, num_experts=E, max_per_layer=S)
+        store = ep.init_slab_store(cfg, E)
+        asg = []
+        for e in sorted([0, 1, 4] + extra):
+            asg.append((pool.alloc(0, e), 0, e))
+        store = ep.write_slabs(store, full, asg)
+        tabs = ep.device_resident_tables(pool, [0], S)
+        rp = {
+            "gate": params["gate"],
+            "resident": {"ids": tabs["ids"][0], "slot": tabs["slot"][0],
+                         "store": store},
+        }
+        y_res, aux = moe_mod.moe_resident(rp, x, cfg, jnp.asarray(mask))
+        # ragged_dot group partitions differ (E groups vs S+1 slots), so
+        # accumulation order drifts at f32 epsilon; greedy tokens still
+        # match exactly (engine parity tests below)
+        np.testing.assert_allclose(
+            np.asarray(y_res), np.asarray(y_ref), rtol=1e-4, atol=1e-4
+        )
+        assert np.isfinite(float(aux["aux_loss"]))
+    # host-side form of the in-trace effective mask
+    resident = np.zeros(E, bool)
+    resident[[0, 1, 4, 6]] = True
+    np.testing.assert_array_equal(residency_target(mask, resident), mask)
+
+
+# ------------------------------------------------- engines: token parity
+
+@pytest.mark.parametrize("split", [0, 2, 4])
+def test_engine_token_parity_dense_vs_pooled(moe_model, split):
+    model, params = moe_model
+    dense, _ = _run_engine(model, params, expert_pool=False, split=split)
+    pooled, eng = _run_engine(model, params, expert_pool=True, split=split)
+    assert dense == pooled
+    m = eng.metrics()
+    assert m["expert_hit_rate"] == pytest.approx(1.0)
+    # the end tier's dense expert stacks are gone (the memory claim)
+    for i, spec in enumerate(model.cfg.layer_pattern):
+        if spec.moe:
+            moe_p = eng.end_params["blocks"][f"pos{i}"]["moe"]
+            assert "wi" not in moe_p and "wo" not in moe_p
+
+
+def _mask_profile(cfg, cap_n, mem_scale=1.0):
+    """Profile whose eq. 4 memory term binds the mask at ``cap_n`` experts
+    when fully free (the eq. 4 complexity model prices weights in bf16)."""
+    wb = (3 if cfg.ffn_gated else 2) * cfg.d_model * cfg.moe.d_ff_expert * 2
+    return DeviceProfile(
+        "edge-mask", peak_gflops=2000.0,
+        mem_gb=(cap_n + 1.2) * wb * mem_scale / 1e9,
+        mem_bw_gbs=51.0, net_gbps=0.05,
+    )
+
+
+def test_mask_shrink_grow_parity_and_prefetch_on_timeline(moe_model):
+    """(d) the pooled engine applies mask changes (and the grow's slab
+    arrivals) at the same safe points as the dense rebuild — greedy tokens
+    identical; the grow's prefetch bytes ride the link timeline."""
+    model, params = moe_model
+    prof = _mask_profile(model.cfg, cap_n=3)
+    updates = [(3, DeviceState(mem_free=0.7)), (7, DeviceState(mem_free=1.0))]
+    # resident-slot headroom (+ a high prefetch budget) lets the grow's
+    # slabs land before the safe point that applies the mask, so the
+    # pooled effective mask flips on the exact tick the dense rebuild
+    # does; without headroom the pool legitimately lags one safe point
+    # (evict stale residents -> transfer -> apply)
+    kw = dict(profile=prof, updates=updates, new_tokens=10,
+              expert_mem_frac=8.0, expert_prefetch_per_tick=32,
+              expert_resident_slots=model.cfg.moe.num_experts)
+    dense, deng = _run_engine(model, params, expert_pool=False, split=2, **kw)
+    pooled, peng = _run_engine(model, params, expert_pool=True, split=2, **kw)
+    # the state updates actually moved the mask both ways
+    assert any(ev["mask_changed"] for ev in deng.replan_events)
+    assert dense == pooled
+    m = peng.metrics()
+    assert m["expert_prefetches"] > 0
+    assert m["expert_bytes_down"] == (
+        m["expert_prefetches"] * peng._slab_bytes
+    )
+    # prefetch wire time is booked on the shared link resource, on top of
+    # the boundary/prefill traffic the engine's own stage meters carry
+    link_busy = peng.timeline.busy_s[peng._res_link]
+    own = peng._stage_busy["link"] + peng._prefill_busy["link"]
+    assert link_busy > own
+    assert m["expert_hit_rate"] == pytest.approx(1.0)
+
+
+def test_memory_shrink_sheds_experts_and_eviction_never_corrupts(moe_model):
+    """(e)+(f) halving the memory budget halves the slab capacity: the
+    resident set shrinks via evictions at a safe point, and poisoning the
+    evicted slabs' storage rows changes no resident-routed token."""
+    model, params = moe_model
+    cfg = model.cfg
+    slab = ep.expert_slab_bytes(cfg)
+    # capacity 6 slabs at full memory (= 2 layers x 3 target experts at
+    # split 2), 3 slabs at mem_free=0.5
+    prof = DeviceProfile(
+        "edge-evict", peak_gflops=2000.0, mem_gb=6 * slab / 1e9,
+        mem_bw_gbs=51.0, net_gbps=0.05,
+    )
+    updates = [(4, DeviceState(mem_free=0.5))]
+
+    def run(poison):
+        eng = EndCloudServingEngine(
+            model, params, end_profile=prof, cloud_profile=PROFILES["a100"],
+            max_batch=4, max_len=64, force_split=2,
+            expert_pool=True, expert_mem_frac=1.0,
+        )
+        reqs = [Request(i, p, max_new_tokens=12)
+                for i, p in enumerate(_prompts(5))]
+        for r in reqs:
+            eng.submit(r)
+        pending = list(updates)
+        steps = 0
+        poisoned = False
+        while eng.busy():
+            while pending and pending[0][0] <= steps:
+                eng.update_device_state(pending[0][1])
+                pending.pop(0)
+            eng.step()
+            steps += 1
+            if poison and not poisoned and eng.n_expert_evictions > 0:
+                # poison every free (= evicted or never-used) slab row: no
+                # applied table references them, so nothing may change
+                rows = jnp.asarray(list(eng.expert_pool._free))
+                for k in eng._slab_store:
+                    eng._slab_store[k] = (
+                        eng._slab_store[k].at[rows].set(jnp.nan)
+                    )
+                poisoned = True
+            assert steps < 10_000
+        if poison:
+            assert poisoned, "no eviction happened to poison"
+        return {r.request_id: r.generated for r in reqs}, eng
+
+    clean, ceng = run(poison=False)
+    assert ceng.n_expert_evictions > 0
+    assert ceng.expert_pool.capacity == 3
+    assert ceng.expert_pool.slabs_in_use <= 3
+    # every active layer kept at least one resident
+    for lid in ceng._active_lids():
+        assert ceng.expert_pool.resident_count(lid) >= 1
+    poisoned_tokens, _ = run(poison=True)
+    assert poisoned_tokens == clean
+    # all tokens valid (a NaN leak would argmax to 0 consistently; check
+    # streams are finished and full length)
+    assert all(len(t) == 12 for t in clean.values())
+
+
+# ------------------------------------------------- metrics / HBM scaling
+
+def test_expert_metrics_and_step_bytes_scale_with_residents(moe_model):
+    model, params = moe_model
+    _, eng = _run_engine(model, params, expert_pool=True, split=2)
+    m = eng.metrics()
+    for key in ("expert_resident_slabs", "expert_slab_capacity",
+                "expert_hit_rate", "expert_bytes_down", "expert_bytes_up",
+                "expert_bytes_resident", "expert_bytes_step_resident",
+                "expert_bytes_step_dense", "expert_prefetches",
+                "expert_evictions"):
+        assert key in m, key
+    # 40% selection cap: per-step expert HBM bytes of the resident gather
+    # are at most half the dense [E, d, f] sweep (acceptance criterion)
+    assert 0 < m["expert_bytes_step_resident"] <= m["expert_bytes_step_dense"] / 2
+    E = model.cfg.moe.num_experts
+    n_layers = len(eng._active_lids())
+    assert m["expert_bytes_step_dense"] == n_layers * E * eng._slab_bytes
+
+
+# ------------------------------------------- measured group priority (eq. 4)
+
+def test_group_priority_from_freq_orders_greedy_admit(moe_model):
+    assert group_priority_from_freq(None, 4) == [0, 1, 2, 3]
+    assert group_priority_from_freq(np.array([0.1, 0.4, 0.2, 0.3]), 4) == \
+        [1, 3, 2, 0]
+    # ties keep natural order; bad shapes fall back to natural order
+    assert group_priority_from_freq(np.zeros(4), 4) == [0, 1, 2, 3]
+    assert group_priority_from_freq(np.zeros(3), 4) == [0, 1, 2, 3]
+
+    model, params = moe_model
+    cfg = model.cfg
+    eng = EndCloudServingEngine(
+        model, params,
+        end_profile=PROFILES["a100"], cloud_profile=PROFILES["a100"],
+        max_batch=2, max_len=64, force_split=2, expert_pool=True,
+    )
+    # measured traffic says group 2 is hottest: the re-derived mask admits
+    # its experts before natural-order group 0 fills up
+    gf = np.zeros(cfg.moe.num_groups)
+    gf[2] = 1.0
+    eng._group_freq = gf
+    mask = np.asarray(eng._derive_end_mask(DeviceState()))
+    Mk = cfg.moe.num_experts // cfg.moe.num_groups
+    assert mask[2 * Mk : 2 * Mk + Mk].all()  # group 2 admitted first
+    assert mask.sum() == int(0.4 * cfg.moe.num_experts)
+
+
+def test_route_stats_are_measured_during_decode(moe_model):
+    """The engine's frequency EMA comes from the gate's measured stats —
+    it is populated by decoding and sums to ~1 over experts."""
+    model, params = moe_model
+    _, eng = _run_engine(model, params, expert_pool=True, split=2)
+    assert eng._route_freq is not None and eng._group_freq is not None
+    assert eng._route_freq.shape == (model.cfg.moe.num_experts,)
+    assert eng._group_freq.shape == (model.cfg.moe.num_groups,)
+    assert eng._route_freq.sum() == pytest.approx(1.0, rel=0.05)
+    assert eng._group_freq.sum() == pytest.approx(1.0, rel=0.05)
+    # traffic only flows to masked-in (resident) experts
+    target = np.asarray(eng.tiers.end_mask, bool)
+    assert eng._route_freq[~target].sum() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_pooled_engine_rejects_nothing_dense_path_accepts(moe_model):
+    """Pooled mode is transparent at the API: same submit/validate
+    behaviour, expert_pool=False fully restores the dense path."""
+    model, params = moe_model
+    eng = EndCloudServingEngine(
+        model, params,
+        end_profile=PROFILES["a100"], cloud_profile=PROFILES["a100"],
+        max_batch=2, max_len=64, force_split=2, expert_pool=False,
+    )
+    assert eng.expert_pool is None
+    assert eng.expert_metrics() == {}
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, np.arange(60).astype(np.int32),
+                           max_new_tokens=8))

@@ -13,7 +13,7 @@ from repro.kernels.group_gate.ref import group_gate_ref
 from repro.kernels.lowrank.ops import lowrank_decode, lowrank_encode, lowrank_roundtrip
 from repro.kernels.lowrank.ref import roundtrip_ref
 from repro.kernels.expert_mlp.ops import expert_mlp
-from repro.kernels.expert_mlp.ref import expert_mlp_ref
+from repro.kernels.expert_mlp.ref import expert_mlp_ref, expert_mlp_resident_ref
 from repro.kernels.flash_attention.ops import flash_attention_fwd
 from repro.models.attention import reference_attention
 
@@ -83,6 +83,28 @@ def test_expert_mlp_kernel_sweep(E, C, d, f, gated):
     wo = jax.random.normal(ks[3], (E, f, d)) * 0.05
     y_k = expert_mlp(x, wi, wg, wo)
     y_r = expert_mlp_ref(x, wi, wg, wo)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("S,N,C,d,f", [(3, 9, 32, 64, 128), (1, 4, 16, 32, 64),
+                                       (4, 4, 64, 128, 512)])
+@pytest.mark.parametrize("gated", [True, False])
+def test_expert_mlp_resident_sweep(S, N, C, d, f, gated):
+    """Resident-index operand (paged expert-weight pool): the grid runs
+    over resident slots, the scalar-prefetched ids pick slab rows out of
+    the store — including repeated rows (two slots may alias the garbage
+    slab) and out-of-natural-order ids."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (S, C, d), jnp.float32)
+    wi = jax.random.normal(ks[1], (N, d, f)) * 0.05
+    wg = jax.random.normal(ks[2], (N, d, f)) * 0.05 if gated else None
+    wo = jax.random.normal(ks[3], (N, f, d)) * 0.05
+    ids = jax.random.permutation(ks[4], N)[:S].astype(jnp.int32)
+    if S > 1:
+        ids = ids.at[S - 1].set(ids[0])  # aliased row
+    y_k = expert_mlp(x, wi, wg, wo, resident_ids=ids)
+    y_r = expert_mlp_resident_ref(x, wi, wg, wo, ids)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
                                rtol=1e-4, atol=1e-4)
 
