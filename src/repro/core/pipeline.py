@@ -35,6 +35,7 @@ class Task:
     comm_bytes: float  # Comm(t_i) input that must move if offloaded
     request_id: int = -1
     stage: str = ""  # human-readable ("gate", "experts[0:4]", "layers[8:24]")
+    priority_class: int = 0  # request SLO class (0 = interactive; see serving)
 
 
 @dataclass
@@ -260,14 +261,19 @@ def place_fleet(
     measured_gbps: Optional[Sequence[float]] = None,
     capacity: Optional[Sequence[int]] = None,
     max_spill: Optional[float] = None,
+    order: Optional[Sequence[int]] = None,
 ) -> Tuple[List[int], Dict[str, float]]:
     """Route-aware request placement across N end devices — ``schedule``'s
     eq. 10/11 greedy generalized from the binary end/cloud choice to a
     device fleet.
 
     Tasks are ranked by their best-case eq. 10 priority (compute-heavy,
-    cheap-to-ship first — those gain most from a good pick), then each goes
-    to the device minimizing the eq. 9 marginal cost
+    cheap-to-ship first — those gain most from a good pick) unless the
+    caller passes an explicit ``order`` (task indices, used verbatim —
+    serving frontends rank by (SLO class, arrival) instead: the eq. 10
+    ratio reorders equal-priority requests by size, which breaks FIFO
+    fairness within a class), then each goes to the device minimizing the
+    eq. 9 marginal cost
 
         alpha * (load_d + C) / rate_d + (1 - alpha) * Comm_d
 
@@ -295,12 +301,16 @@ def place_fleet(
         cm = t.comm_bytes * 8.0 / max(gbps[d] * 1e9, 1e-9)
         return cfg.alpha * ex + (1.0 - cfg.alpha) * cm
 
-    order = sorted(
-        range(len(tasks)),
-        key=lambda i: -max(
-            priority(tasks[i], comm_time(tasks[i], g), cfg.eps) for g in gbps
-        ),
-    )
+    if order is None:
+        order = sorted(
+            range(len(tasks)),
+            key=lambda i: -max(
+                priority(tasks[i], comm_time(tasks[i], g), cfg.eps)
+                for g in gbps
+            ),
+        )
+    elif sorted(order) != list(range(len(tasks))):
+        raise ValueError("order must be a permutation of the task indices")
     assignment = [-1] * len(tasks)
     obj = 0.0
     for i in order:

@@ -339,6 +339,43 @@ class PagePool:
         self._reserved[slot] = 0
         self._mapped[slot] = 0
 
+    def reserved_pages(self, slot: int) -> int:
+        """Pages this slot's reservation holds (0 = no reservation)."""
+        return int(self._reserved[slot])
+
+    # -- preemption: spill / restore ------------------------------------------
+
+    def spill_slot(self, slot: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Evict a live slot for preemption.
+
+        Returns ``(entries, phys, n_reserved)``: the slot's mapped table
+        entries, the physical page row each entry occupied, and the page
+        count of its reservation.  The slot's pages go back to the free
+        list — the caller must copy the storage rows at ``phys`` *before*
+        anything else maps (and writes) those pages, then hand
+        ``(entries, n_reserved)`` back to :meth:`restore_slot` at
+        re-admission."""
+        entries = np.nonzero(self.table[slot] >= 0)[0].astype(np.int64)
+        phys = self.table[slot, entries].astype(np.int64).copy()
+        n_reserved = int(self._reserved[slot])
+        self.free(slot)
+        return entries, phys, n_reserved
+
+    def restore_slot(self, slot: int, entries: np.ndarray,
+                     n_pages: int) -> np.ndarray:
+        """Re-admit a spilled slot: reserve ``n_pages`` (the original
+        worst-case reservation, so decode still can never run out
+        mid-stream) and map exactly the spilled ``entries``.  Returns the
+        entries' new physical rows — the caller scatters the saved page
+        data there; ring-entry indices are placement-invariant, so reads
+        through the rebuilt table see the exact pre-spill cache."""
+        self.reserve(slot, n_pages)
+        for e in entries:
+            self._map_entry(slot, int(e))
+        return self.table[slot, np.asarray(entries, np.int64)].astype(
+            np.int64
+        ).copy()
+
     # -- device views ---------------------------------------------------------
 
     def device_rows(self, slots, active=None) -> jax.Array:

@@ -1,15 +1,30 @@
-from repro.serving.common import LinkStats, Request, StageTimeline
+from repro.serving.common import LinkStats, Request, StageTimeline, VirtualClock
 from repro.serving.endcloud import EndCloudPipeline
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import FleetServingEngine
+from repro.serving.loadgen import (
+    WorkloadClass,
+    build_schedule,
+    bursty_arrivals,
+    drive,
+    poisson_arrivals,
+    summarize,
+)
 from repro.serving.stream import EndCloudServingEngine
 
 __all__ = [
     "Request",
     "LinkStats",
     "StageTimeline",
+    "VirtualClock",
     "ServingEngine",
     "EndCloudPipeline",
     "EndCloudServingEngine",
     "FleetServingEngine",
+    "WorkloadClass",
+    "poisson_arrivals",
+    "bursty_arrivals",
+    "build_schedule",
+    "drive",
+    "summarize",
 ]

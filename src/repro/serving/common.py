@@ -23,15 +23,67 @@ class Request:
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int = 16
     eos_id: int = -1  # -1 = never
+    # SLO class: lower ``priority`` admits first (0 = interactive).  The
+    # per-request latency targets are carried for reporting/accounting —
+    # the engine schedules by class, the load harness scores the targets.
+    priority: int = 1
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
     # filled by the engine
     generated: List[int] = field(default_factory=list)
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    seq: int = -1  # submission order stamp (ties within a priority class)
+    n_preemptions: int = 0
 
     @property
     def done(self) -> bool:
         return self.finish_time is not None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (None until the first token lands)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token after the first (None until finished
+        or for single-token generations)."""
+        if self.finish_time is None or len(self.generated) < 2:
+            return None
+        return (self.finish_time - self.first_token_time) / (
+            len(self.generated) - 1
+        )
+
+
+class VirtualClock:
+    """Callable clock over *modeled* time.
+
+    Engines stamp request lifecycle times (submit / first token / finish)
+    with ``self.clock()``; by default that is host wall time.  Handing an
+    engine a ``VirtualClock`` switches those stamps onto the engine's
+    ``StageTimeline`` axis: the engine detects it and sets ``now`` to the
+    modeled completion time of the stage that produced each event, so
+    TTFT/TPOT are measured on the same deterministic clock the schedule is
+    computed on.  The load harness (``serving.loadgen.drive``) owns the
+    submission side: it releases arrivals when ``now`` passes their arrival
+    time and advances ``now`` to the timeline makespan after each tick.
+    """
+
+    def __init__(self, now: float = 0.0):
+        self.now = now
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance_to(self, t: float) -> float:
+        """Monotone advance (jumping backwards is reserved for engines
+        stamping a specific stage completion)."""
+        self.now = max(self.now, t)
+        return self.now
 
 
 @dataclass
@@ -226,17 +278,22 @@ class SlotEngineBase:
         max_batch: int,
         clock: Optional[Callable[[], float]] = None,
         max_len: Optional[int] = None,
+        admission: str = "priority",
     ):
         import time as _time
 
+        if admission not in ("priority", "fifo"):
+            raise ValueError(f"admission={admission!r}")
         self.max_batch = max_batch
         self.max_len = max_len
         self.clock = clock or _time.monotonic
+        self.admission = admission
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self._next_token = np.zeros((max_batch, 1), np.int32)
         self._active = np.zeros((max_batch,), bool)
+        self._submit_seq = 0
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -282,6 +339,8 @@ class SlotEngineBase:
     def submit(self, req: Request):
         self.validate(req)
         req.submit_time = self.clock()
+        req.seq = self._submit_seq
+        self._submit_seq += 1
         self.waiting.append(req)
 
     def _slot_usable(self, slot: int) -> bool:
@@ -308,8 +367,25 @@ class SlotEngineBase:
         """Anything left to do?  (Queued, decoding, or mid-prefill.)"""
         return bool(self.waiting) or bool(self._active.any())
 
+    def _admission_order(self) -> List[Request]:
+        """The queue view admission scans.  ``"priority"`` (default) is a
+        stable sort on (priority class, submission seq): equal-priority
+        requests keep FIFO order, and a page-hungry low-priority request at
+        the FIFO head can no longer starve interactive traffic — higher
+        classes simply sort ahead of it.  ``"fifo"`` is pure submission
+        order (the pre-SLO behavior, kept as the ablation baseline).
+
+        Either way the scan *head* blocks its whole order: admitting work
+        past a page-blocked head would keep pages occupied and starve it —
+        within one class, FIFO fairness is the invariant worth keeping.
+        """
+        if self.admission == "priority":
+            return sorted(self.waiting, key=lambda r: (r.priority, r.seq))
+        return list(self.waiting)
+
     def _admit(self):
-        """Prefill waiting requests into free slots.
+        """Prefill waiting requests into free slots, scanning the queue in
+        ``_admission_order``.
 
         A request that finishes at its prefill token (EOS, or
         ``max_new_tokens == 1``) leaves its slot free, so the same slot is
@@ -317,13 +393,12 @@ class SlotEngineBase:
         ahead would idle the slot for a whole engine tick per short request.
         """
         for slot in range(self.max_batch):
-            while (
-                self.slots[slot] is None
-                and self._slot_usable(slot)
-                and self.waiting
-                and self._admittable(slot, self.waiting[0])
-            ):
-                req = self.waiting.pop(0)
+            while self.slots[slot] is None and self._slot_usable(slot):
+                queue = self._admission_order()
+                if not queue or not self._admittable(slot, queue[0]):
+                    break
+                req = queue[0]
+                self.waiting.remove(req)
                 tok, payload = self._prefill_into_slot(slot, req)
                 req.generated.append(tok)
                 if req.first_token_time is None:

@@ -47,8 +47,9 @@ class ServingEngine(SlotEngineBase):
         page_size: int = 16,
         kv_pages: Optional[int] = None,
         prefill_chunk: int = 32,
+        admission: str = "priority",
     ):
-        super().__init__(max_batch, clock, max_len=max_len)
+        super().__init__(max_batch, clock, max_len=max_len, admission=admission)
         self.model = model
         self.params = params
         self.expert_mask = expert_mask

@@ -27,14 +27,17 @@ same way: all lanes draw pages from one cloud-side
 block), so admission anywhere in the fleet is gated on fleet-wide cloud
 page availability, while each lane keeps a private end-tier pool.
 
-**Request placement** is route-aware (eq. 10/11 via
-``core.pipeline.place_fleet``): waiting requests are ranked by priority
-P = C/(Comm+eps) and each goes to the device minimizing the eq. 9 marginal
-cost over per-device *measured* bandwidth and in-flight load, subject to
-free-slot capacity.  Placement is late-binding — requests wait at the
-fleet frontend, not on a device queue, so a mid-run bandwidth cut steers
-subsequent requests away from the straggler while its in-flight work
-replans.
+**Request placement** is route-aware (eq. 9/11 via
+``core.pipeline.place_fleet``): waiting requests are taken in a stable
+(SLO priority class, arrival) order — not the eq. 10 compute/comm ratio,
+which reorders equal-priority requests by size — and each goes to the
+device minimizing the eq. 9 marginal cost over per-device *measured*
+bandwidth and in-flight load, subject to free-slot capacity.  Placement is
+late-binding — requests wait at the fleet frontend, not on a device queue,
+so a mid-run bandwidth cut steers subsequent requests away from the
+straggler while its in-flight work replans.  Lanes inherit the fleet's
+``admission`` policy and ``preemption`` flag (see ``serving.stream``); the
+fleet-global submission seq keeps cross-lane arrival order meaningful.
 """
 
 from __future__ import annotations
@@ -117,6 +120,8 @@ class FleetServingEngine:
         expert_resident_slots: Optional[int] = None,
         expert_mem_frac: float = 0.5,
         expert_prefetch_per_tick: int = 2,
+        admission: str = "priority",  # "priority" | "fifo" (frontend + lanes)
+        preemption: bool = True,  # lanes spill low-priority slots under load
     ):
         n = len(end_profiles)
         if n < 1:
@@ -126,6 +131,8 @@ class FleetServingEngine:
         ]
         if len(states) != n:
             raise ValueError(f"{len(states)} states for {n} profiles")
+        if admission not in ("priority", "fifo"):
+            raise ValueError(f"admission={admission!r}")
         self.model = model
         self.cfg = model.cfg
         self.n_devices = n
@@ -133,8 +140,10 @@ class FleetServingEngine:
         self.clock = clock or time.monotonic
         self.scheduler = scheduler or SchedulerConfig(alpha=alpha)
         self.max_spill = max_spill
+        self.admission = admission
         self.waiting: List[Request] = []  # fleet frontend queue (pre-placement)
         self.placed: List[Dict] = []  # placement log: request -> device
+        self._submit_seq = 0
 
         # One fleet-wide occupancy clock: per-device end/link resources, one
         # shared multi-server cloud resource every lane's boundaries drain to.
@@ -189,6 +198,8 @@ class FleetServingEngine:
                     expert_resident_slots=expert_resident_slots,
                     expert_mem_frac=expert_mem_frac,
                     expert_prefetch_per_tick=expert_prefetch_per_tick,
+                    admission=admission,
+                    preemption=preemption,
                 )
             )
 
@@ -197,6 +208,8 @@ class FleetServingEngine:
     def submit(self, req: Request):
         self.lanes[0].validate(req)  # all lanes share max_len
         req.submit_time = self.clock()
+        req.seq = self._submit_seq  # fleet-global: lanes never re-stamp
+        self._submit_seq += 1
         self.waiting.append(req)
 
     def _request_gflops(self, req: Request) -> float:
@@ -213,13 +226,28 @@ class FleetServingEngine:
 
     def _place(self):
         """Route-aware placement of frontend requests onto devices with free
-        admission capacity (eq. 10/11 over measured per-device bandwidth and
-        load).  Dispatch preserves submit order within each lane so a
-        single-device fleet admits exactly like a standalone engine."""
+        admission capacity: the eq. 9 marginal-cost device choice over
+        measured per-device bandwidth and load, taking requests in a stable
+        (priority class, arrival seq) order — NOT the eq. 10 compute/comm
+        ranking, which reorders equal-priority requests by size and breaks
+        FIFO fairness within a class (``admission="fifo"`` drops the class
+        key and places in pure arrival order).  Dispatch preserves that
+        order within each lane so a single-device fleet admits exactly like
+        a standalone engine."""
         if not self.waiting:
             return
+        # Under priority admission a full lane still has *preemptible*
+        # capacity for the best waiting class: dispatching into it lets the
+        # lane spill a low-priority slot rather than park the interactive
+        # request at the frontend behind running batch work.
+        p_best = min(r.priority for r in self.waiting)
         capacity = [
-            max(0, lane.free_slots() - len(lane.waiting))
+            max(
+                0,
+                lane.free_slots()
+                + lane.preemptible_slots(p_best)
+                - len(lane.waiting),
+            )
             for lane in self.lanes
         ]
         if not any(capacity):
@@ -231,9 +259,17 @@ class FleetServingEngine:
                 comm_bytes=4.0 * len(r.prompt),  # token ids to the device
                 request_id=r.request_id,
                 stage="request",
+                priority_class=r.priority,
             )
             for i, r in enumerate(self.waiting)
         ]
+        if self.admission == "priority":
+            order = sorted(
+                range(len(self.waiting)),
+                key=lambda i: (self.waiting[i].priority, self.waiting[i].seq),
+            )
+        else:
+            order = list(range(len(self.waiting)))
         assignment, _ = place_fleet(
             tasks,
             [lane.tiers.end_cap for lane in self.lanes],
@@ -242,21 +278,25 @@ class FleetServingEngine:
             measured_gbps=[lane.bw.gbps for lane in self.lanes],
             capacity=capacity,
             max_spill=self.max_spill,
+            order=order,
         )
-        still_waiting: List[Request] = []
-        for i, req in enumerate(self.waiting):
+        # dispatch in placement order so each lane's queue keeps it
+        for i in order:
+            req = self.waiting[i]
             d = assignment[i]
             if d < 0:
-                still_waiting.append(req)
                 continue
             # direct dispatch (already validated + stamped at fleet submit;
             # lane.submit would re-stamp submit_time and hide frontend wait)
             self.lanes[d].waiting.append(req)
             self.placed.append(
                 {"request_id": req.request_id, "device": d,
-                 "gflops": tasks[i].gflops}
+                 "gflops": tasks[i].gflops, "priority": req.priority}
             )
-        self.waiting = still_waiting
+        # the frontend queue itself stays in submission order
+        self.waiting = [
+            r for i, r in enumerate(self.waiting) if assignment[i] < 0
+        ]
 
     # -- stepping -------------------------------------------------------------
 
@@ -270,11 +310,14 @@ class FleetServingEngine:
             emitted += lane.step()
         return emitted
 
+    def busy(self) -> bool:
+        """Anything left to do anywhere in the fleet?  (Frontend queue,
+        lane queues, in-flight prefill, or active decode.)"""
+        return bool(self.waiting) or any(lane.busy() for lane in self.lanes)
+
     def run(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
-            if not self.waiting and not any(
-                lane.busy() for lane in self.lanes
-            ):
+            if not self.busy():
                 break
             self.step()
         return self.finished
@@ -348,6 +391,13 @@ class FleetServingEngine:
             "cloud_busy_s": self.timeline.busy_s.get("cloud", 0.0),
             "replan_events": len(self.replan_events),
             "n_placed": len(self.placed),
+            "preemptions": sum(lane.n_preemptions for lane in self.lanes),
+            "preempt_restores": sum(
+                lane.n_preempt_restores for lane in self.lanes
+            ),
+            "preempt_spill_bytes": sum(
+                lane.preempt_spill_bytes for lane in self.lanes
+            ),
             # fleet-wide paged-KV accounting: per-lane end pools plus the
             # one shared cloud pool (admission anywhere gates on the latter)
             "kv_pages_in_use": kv_in_use,

@@ -61,6 +61,26 @@ comes from *measured* stage-1 gate statistics
 (``selection.group_priority_from_freq`` over an EMA of ``group_frac``),
 not natural order.
 
+**SLO-aware admission and preemption.**  Requests carry a priority class
+(``Request.priority``, 0 = interactive) and optional TTFT/TPOT SLO
+targets.  Admission scans the queue in (priority, submission-seq) order —
+a stable sort, so equal-priority traffic keeps FIFO fairness while a
+page-hungry low-priority head can no longer starve interactive requests —
+and the order head blocks its order (``SlotEngineBase._admission_order``).
+When the head outranks running work and still cannot be admitted,
+preemption evicts the youngest strictly-lower-priority victim at the
+drained safe point (every group "ready", the same point replans apply):
+an in-flight prefill job is simply cancelled and re-queued, a decoding
+slot has its mapped KV pages spilled off both tier pools via the page
+tables (``PagePool.spill_slot``) and restored byte-exact on re-admission
+(``restore_slot``) — the resumed token stream is bit-identical to an
+uninterrupted run, even across a replan in between, because the spill is
+stored merged across tiers and re-split at the restore-time boundary.
+Handing the engine a ``VirtualClock`` stamps request lifecycle times
+(submit / first token / finish) on the modeled ``StageTimeline`` axis, so
+the load harness (``serving.loadgen``) measures TTFT/TPOT on the same
+deterministic clock the schedule is computed on.
+
 **Replanning.**  Link measurements arrive through ``observe_bandwidth``
 and device drift through ``update_device_state``, which also re-derives the
 end tier's expert mask from the new state vector (eq. 2-4).  Either trigger
@@ -102,6 +122,7 @@ from repro.serving.common import (
     SlotEngineBase,
     StageTimeline,
     TraceCounter,
+    VirtualClock,
 )
 from repro.serving.endcloud import (
     TierPlan,
@@ -139,6 +160,27 @@ class _PrefillJob:
         self.ready_s = 0.0  # modeled completion time of the last chunk
 
 
+class _SpillState:
+    """A preempted request's KV state, lifted off the device pools.
+
+    ``blocks`` holds the slot's mapped page rows for ALL block repeats,
+    merged across the two tiers in block order ([0, R)): restore re-splits
+    at the *restore-time* split, so a replan between spill and restore (the
+    page layout, even the tier boundary, may have moved) cannot corrupt the
+    stream — ring-entry indices are placement-invariant, and attention
+    reads pages through the rebuilt table in entry order."""
+
+    __slots__ = ("entries", "blocks", "length", "next_token", "n_pages")
+
+    def __init__(self, entries: np.ndarray, blocks: Dict, length: int,
+                 next_token: int, n_pages: int):
+        self.entries = entries  # mapped ring entries (same for both tiers)
+        self.blocks = blocks  # pytree of [R_total, n_entries, ps, KV, hd]
+        self.length = length  # _slot_len at the safe point
+        self.next_token = next_token  # pending token (KV not yet written)
+        self.n_pages = n_pages  # original worst-case reservation
+
+
 class EndCloudServingEngine(SlotEngineBase):
     def __init__(
         self,
@@ -171,6 +213,8 @@ class EndCloudServingEngine(SlotEngineBase):
         expert_resident_slots: Optional[int] = None,  # per-layer slot count
         expert_mem_frac: float = 0.5,  # end mem budget share for slabs
         expert_prefetch_per_tick: int = 2,
+        admission: str = "priority",  # "priority" | "fifo" (see SlotEngineBase)
+        preemption: bool = True,  # spill lower-priority slots for a blocked head
     ):
         if not kvcache.pattern_is_pageable(model.cfg):
             raise NotImplementedError(
@@ -185,8 +229,18 @@ class EndCloudServingEngine(SlotEngineBase):
         self.n_groups = max(1, min(n_groups, max_batch))
         self._group_size = -(-max_batch // self.n_groups)  # ceil
         padded_batch = self.padded_batch(max_batch, n_groups)
-        super().__init__(padded_batch, clock, max_len=max_len)
+        super().__init__(padded_batch, clock, max_len=max_len,
+                         admission=admission)
         self.request_capacity = max_batch  # user-visible slot capacity
+        # Preemption only acts under priority admission (the FIFO mode is
+        # the pure pre-SLO ablation: nothing jumps, nothing is evicted).
+        self.preemption = preemption and admission == "priority"
+        self._spilled: Dict[int, _SpillState] = {}  # request_id -> spilled KV
+        self.n_preemptions = 0
+        self.n_preempt_restores = 0
+        self.preempt_spill_bytes = 0
+        # a VirtualClock switches request stamps onto the modeled timeline
+        self._virtual_time = isinstance(self.clock, VirtualClock)
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -745,27 +799,193 @@ class EndCloudServingEngine(SlotEngineBase):
         return min(self.end_pool.num_pages, self.cloud_pool.num_pages)
 
     def _admit(self):
-        """Start a chunked-prefill job per free slot: reserve the request's
-        worst-case page count in BOTH tier pools (admission is page-aware —
-        a free slot without pages stays idle), then let ``step`` stream the
-        prompt through the stage functions one chunk per tick.  FIFO: a
-        head-of-queue request that cannot reserve pages blocks the queue."""
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self._slot_usable(slot):
-                continue
-            if not self.waiting:
+        """Admit waiting requests in ``_admission_order`` (priority class,
+        then submission seq — see ``SlotEngineBase``): reserve the
+        request's worst-case page count in BOTH tier pools (admission is
+        page-aware — a free slot without pages stays idle), then either
+        start a chunked-prefill job or, for a previously preempted request,
+        restore its spilled KV and resume decode in place.  The order head
+        blocks its whole order (admitting past a page-blocked head would
+        keep pages occupied and starve it); when the blocked head outranks
+        running work and preemption is on, a strictly lower-priority slot
+        is spilled to make room and admission retries."""
+        while True:
+            self._admit_pass()
+            if self.preemption and self._try_preempt():
+                continue  # a victim was spilled: the head may now admit
+            break
+
+    def _admit_pass(self) -> int:
+        admitted = 0
+        free = [
+            s for s in range(self.max_batch)
+            if self.slots[s] is None and self._slot_usable(s)
+        ]
+        for req in self._admission_order():
+            spilled = req.request_id in self._spilled
+            # restores activate their slot immediately, which is only safe
+            # while the slot's group has no boundary in flight (engine
+            # ticks admit with every group drained; direct _admit calls
+            # may not)
+            usable = [
+                s for s in free
+                if not spilled or self._phase[self._group_of(s)] == "ready"
+            ]
+            if not usable:
                 break
-            req = self.waiting[0]
             need = self._pages_for(req)
             if not (
                 self.end_pool.can_reserve(need)
                 and self.cloud_pool.can_reserve(need)
             ):
                 break
-            self.waiting.pop(0)
-            self.end_pool.reserve(slot, need)
-            self.cloud_pool.reserve(self._cslot(slot), need)
-            self._jobs[slot] = _PrefillJob(req, slot, self._group_of(slot))
+            slot = usable[0]
+            free.remove(slot)
+            self.waiting.remove(req)
+            if spilled:
+                # PagePool.restore_slot re-reserves internally
+                self._restore_into_slot(slot, req)
+            else:
+                self.end_pool.reserve(slot, need)
+                self.cloud_pool.reserve(self._cslot(slot), need)
+                job = _PrefillJob(req, slot, self._group_of(slot))
+                if self._virtual_time:
+                    # prefill cannot start before the request arrived
+                    job.ready_s = req.submit_time
+                self._jobs[slot] = job
+            admitted += 1
+        return admitted
+
+    # -- preemption: spill a low-priority slot at the drained safe point ------
+
+    def preemptible_slots(self, priority: int) -> int:
+        """How many running victims a request of class ``priority`` could
+        evict: active decode slots of strictly lower classes (prefill jobs
+        are never preempted — see ``_try_preempt``).  Zero when preemption
+        is off.  The fleet frontend adds this to a lane's admission
+        capacity so a high-priority request is dispatched into a full lane
+        instead of parking behind it."""
+        if not self.preemption:
+            return 0
+        return sum(
+            1 for s in range(self.max_batch)
+            if self.slots[s] is not None and self.slots[s].priority > priority
+        )
+
+    def _try_preempt(self) -> bool:
+        """If the admission head outranks running work and cannot be
+        admitted, evict one victim — the youngest decoding slot of the
+        lowest priority class strictly below the head's, its KV spilled
+        via the page tables and restored intact on re-admission.  Only
+        *running* (decoding) slots are victims: an in-flight prefill job
+        is short and bounded, and cancelling it would discard its finished
+        chunks — evicting prefill under sustained interactive pressure
+        livelocks the low-priority class (it re-runs the same chunks
+        forever) without buying latency.  Returns True iff a victim was
+        evicted; ``_admit`` then retries, evicting further victims if one
+        was not enough."""
+        queue = self._admission_order()
+        if not queue:
+            return False
+        head = queue[0]
+        victims = [
+            s for s in range(self.max_batch)
+            if self.slots[s] is not None
+            and self.slots[s].priority > head.priority
+        ]
+        if not victims:
+            return False
+        # feasibility: even evicting every candidate must cover the head's
+        # page needs in both pools, else the spills are wasted churn
+        need = self._pages_for(head)
+        e_avail = self.end_pool.pages_available + sum(
+            self.end_pool.reserved_pages(s) for s in victims
+        )
+        c_avail = self.cloud_pool.pages_available + sum(
+            self.cloud_pool.reserved_pages(self._cslot(s)) for s in victims
+        )
+        if e_avail < need or c_avail < need:
+            return False
+        # victim choice is deterministic: lowest class, youngest arrival
+        _, _, victim = max(
+            (self.slots[s].priority, self.slots[s].seq, s) for s in victims
+        )
+        self._preempt_slot(victim)
+        return True
+
+    def _preempt_slot(self, slot: int):
+        """Spill a decoding slot: copy its mapped page rows off both tier
+        storages (merged across tiers in block order — see ``_SpillState``),
+        free the slot and both reservations, and re-queue the request with
+        its spilled KV parked under its request id.  Only called with the
+        slot's group drained, so ``_slot_len``/``_next_token`` are at a
+        token boundary: the pending token's KV is not yet written, exactly
+        the state a fresh activation leaves behind."""
+        req = self.slots[slot]
+        entries_e, phys_e, n_pages = self.end_pool.spill_slot(slot)
+        entries_c, phys_c, _ = self.cloud_pool.spill_slot(self._cslot(slot))
+        if not np.array_equal(entries_e, entries_c):
+            raise RuntimeError(
+                f"tier pools out of lockstep for slot {slot}: "
+                f"{entries_e.tolist()} vs {entries_c.tolist()}"
+            )
+        ie = jnp.asarray(phys_e, jnp.int32)
+        ic = jnp.asarray(phys_c, jnp.int32)
+        end_part = jax.tree.map(lambda l: np.asarray(l[:, ie]), self._end_pages)
+        cloud_part = jax.tree.map(
+            lambda l: np.asarray(l[:, ic]), self._cloud_pages
+        )
+        blocks = jax.tree.map(
+            lambda a, b: np.concatenate([a, b], axis=0), end_part, cloud_part
+        )
+        self._spilled[req.request_id] = _SpillState(
+            entries_e, blocks, int(self._slot_len[slot]),
+            int(self._next_token[slot, 0]), n_pages,
+        )
+        self.preempt_spill_bytes += sum(
+            l.nbytes for l in jax.tree.leaves(blocks)
+        )
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        self.slots[slot] = None
+        self._active[slot] = False
+        self._slot_len[slot] = 0
+        self.waiting.append(req)
+
+    def _restore_into_slot(self, slot: int, req: Request):
+        """Re-admit a preempted request: both pools have re-reserved its
+        original page count; map its spilled entries, scatter the saved
+        page data into the new physical rows split at the *current* tier
+        boundary, and resume decode mid-stream — the token stream continues
+        bit-identically because page contents are byte-exact copies and
+        attention reads entries, not physical rows."""
+        st = self._spilled.pop(req.request_id)
+        phys_e = self.end_pool.restore_slot(slot, st.entries, st.n_pages)
+        phys_c = self.cloud_pool.restore_slot(
+            self._cslot(slot), st.entries, st.n_pages
+        )
+        s = self.split
+        ie = jnp.asarray(phys_e, jnp.int32)
+        ic = jnp.asarray(phys_c, jnp.int32)
+        self._end_pages = jax.tree.map(
+            lambda l, d: l.at[:, ie].set(jnp.asarray(d[:s], l.dtype)),
+            self._end_pages, st.blocks,
+        )
+        self._cloud_pages = jax.tree.map(
+            lambda l, d: l.at[:, ic].set(jnp.asarray(d[s:], l.dtype)),
+            self._cloud_pages, st.blocks,
+        )
+        self._slot_len[slot] = st.length
+        self.slots[slot] = req
+        self._next_token[slot, 0] = st.next_token
+        self._active[slot] = True
+        self.n_preempt_restores += 1
+        if self._virtual_time:
+            # the resumed stream cannot decode before "now"
+            g = self._group_of(slot)
+            self._group_ready_s[g] = max(
+                self._group_ready_s[g], self.clock.now
+            )
 
     def _advance_prefill(self, job: _PrefillJob):
         """Stream one prompt chunk through end -> link -> cloud, booking the
@@ -835,6 +1055,10 @@ class EndCloudServingEngine(SlotEngineBase):
                 continue
             req, tok = job.req, job.first_tok
             req.generated.append(tok)
+            if self._virtual_time:
+                # stamp on the modeled axis: the first token exists when
+                # the last prefill chunk drains the cloud stage
+                self.clock.now = job.ready_s
             if req.first_token_time is None:
                 req.first_token_time = self.clock()
             del self._jobs[slot]
@@ -847,6 +1071,12 @@ class EndCloudServingEngine(SlotEngineBase):
             self.slots[slot] = req
             self._next_token[slot, 0] = tok
             self._active[slot] = True
+            if self._virtual_time:
+                # the group's next decode step cannot start before this
+                # request's prefill finished feeding it
+                self._group_ready_s[job.group] = max(
+                    self._group_ready_s[job.group], job.ready_s
+                )
 
     def _release_slot(self, slot: int):
         self.end_pool.free(slot)
@@ -971,6 +1201,9 @@ class EndCloudServingEngine(SlotEngineBase):
         self._slot_len[active_idx] += 1
         ids = np.zeros((self.max_batch,), np.int64)
         ids[gs:ge] = np.asarray(jnp.argmax(logits, -1))
+        if self._virtual_time:
+            # finish stamps for this group land at its cloud completion
+            self.clock.now = done_c
         return self._harvest(ids, slot_range=range(gs, ge))
 
     def step(self) -> int:
@@ -1303,6 +1536,9 @@ class EndCloudServingEngine(SlotEngineBase):
             "serial_total_s": serial_total,
             "prefill_s": sum(self._prefill_busy.values()),
             "prefill_chunks": self.n_prefill_chunks,
+            "preemptions": self.n_preemptions,
+            "preempt_restores": self.n_preempt_restores,
+            "preempt_spill_bytes": self.preempt_spill_bytes,
             "replan_events": len(self.replan_events),
             "measured_gbps": self.bw.gbps,
             **self.kv_metrics(),

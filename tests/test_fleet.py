@@ -106,6 +106,65 @@ def test_place_fleet_load_balances_equal_devices():
     assert sorted(assignment) == [0, 0, 1, 1]
 
 
+def test_place_fleet_explicit_order_overrides_eq10_ranking():
+    """The eq. 10 ranking picks compute-heavy tasks first; an explicit
+    ``order`` must be used verbatim instead (serving frontends pass
+    (SLO class, arrival) order), and a non-permutation must be rejected."""
+    cfg = SchedulerConfig(alpha=0.5, t_end=1e9)
+    caps = [Capability(gflop_budget=1.0, mem_budget_gb=8.0, net_gbps=1.0)]
+    small = Task(0, gflops=1.0, comm_bytes=10.0)
+    big = Task(1, gflops=50.0, comm_bytes=10.0)
+    # one admission slot: only the first-ranked task lands
+    assignment, _ = place_fleet([small, big], caps, cfg, capacity=[1])
+    assert assignment == [-1, 0], "eq. 10 must rank the big task first"
+    assignment, _ = place_fleet(
+        [small, big], caps, cfg, capacity=[1], order=[0, 1]
+    )
+    assert assignment == [0, -1], "explicit order must be used verbatim"
+    with pytest.raises(ValueError, match="permutation"):
+        place_fleet([small, big], caps, cfg, order=[0, 0])
+
+
+def test_fleet_placement_keeps_submission_order_within_class(tiny_model):
+    """Regression: the frontend used to rank by eq. 10, so a later large
+    request jumped an earlier small one of the same SLO class.  Placement
+    must be a stable (priority class, arrival seq) sort: equal-priority
+    requests keep submission order, lower classes still yield to higher."""
+    model, params = tiny_model
+
+    def build():
+        return FleetServingEngine(
+            model, params,
+            end_profiles=[STRONG], cloud_profile=CLOUD,
+            max_batch=1, max_len=128, timing="modeled",
+        )
+
+    # same class, wildly different size: eq. 10 would place the big one
+    # first (priority ~ gflops/eps); arrival order must win instead
+    small = Request(0, np.arange(4).astype(np.int32), max_new_tokens=4)
+    big = Request(1, np.arange(60).astype(np.int32), max_new_tokens=16)
+    eng = build()
+    eng.submit(small)
+    eng.submit(big)
+    done = eng.run()
+    assert len(done) == 2
+    assert [ev["request_id"] for ev in eng.placed] == [0, 1]
+
+    # across classes: the later interactive request outranks the earlier
+    # batch one
+    batch = Request(0, np.arange(60).astype(np.int32), max_new_tokens=16,
+                    priority=2)
+    inter = Request(1, np.arange(4).astype(np.int32), max_new_tokens=4,
+                    priority=0)
+    eng = build()
+    eng.submit(batch)
+    eng.submit(inter)
+    done = eng.run()
+    assert len(done) == 2
+    assert [ev["request_id"] for ev in eng.placed] == [1, 0]
+    assert eng.placed[0]["priority"] == 0
+
+
 def test_fleet_device_mask_never_empty():
     """A device too weak for any expert still exposes its first one (the
     shard_masks_for_fleet guarantee, single-device form)."""

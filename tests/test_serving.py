@@ -99,6 +99,64 @@ def test_rejects_overlong_request(tiny_model):
     assert len(done) == 1 and len(done[0].generated) == 16
 
 
+def test_never_reservable_request_fails_loudly(tiny_model):
+    """A request whose worst-case page count exceeds the whole pool can
+    never be admitted; parking it at the head of the queue would starve
+    everything behind it, so submit must reject it."""
+    model, params = tiny_model
+    eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                        page_size=16, kv_pages=2)
+    assert eng.paged
+    with pytest.raises(ValueError, match="never"):
+        eng.submit(Request(0, np.arange(40).astype(np.int32),
+                           max_new_tokens=8))
+    assert not eng.waiting
+
+
+@pytest.mark.parametrize("admission", ["priority", "fifo"])
+def test_priority_head_does_not_starve_interactive(tiny_model, admission):
+    """A page-hungry low-priority request at the head of the FIFO queue
+    blocks everyone behind it in ``fifo`` mode; ``priority`` admission
+    sorts the interactive request ahead of the blocked head and admits it
+    into the free slot.  Both modes eventually finish everything."""
+    model, params = tiny_model
+    probe = ServingEngine(model, params, max_batch=2, max_len=64,
+                          page_size=16)
+    running = Request(0, np.arange(24).astype(np.int32), max_new_tokens=8,
+                      priority=0)
+    hungry = Request(1, np.arange(40).astype(np.int32), max_new_tokens=8,
+                     priority=2)
+    small = Request(2, np.arange(6).astype(np.int32), max_new_tokens=8,
+                    priority=0)
+    need = {r.request_id: probe._pages_for(r) for r in (running, hungry, small)}
+    # pool sized so: running fits, hungry does NOT fit beside it, small does
+    kv_pages = need[0] + need[1] - 1
+    assert kv_pages >= need[0] + need[2]
+    eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                        page_size=16, kv_pages=kv_pages,
+                        admission=admission)
+    eng.submit(running)
+    eng.step()
+    assert eng.slots[0] is running
+    eng.submit(hungry)
+    eng.step()
+    assert hungry in eng.waiting, "hungry head must wait for pages"
+    eng.submit(small)
+    eng.step()
+    if admission == "priority":
+        # interactive jumps the page-blocked low-priority head
+        assert small not in eng.waiting
+        assert eng.slots[1] is small
+        assert hungry in eng.waiting
+    else:
+        # pure FIFO: the blocked head blocks the whole queue
+        assert small in eng.waiting
+        assert eng.slots[1] is None
+    done = eng.run()
+    assert len(done) == 3
+    assert eng.pool.pages_in_use == 0
+
+
 def test_eos_terminates(tiny_model):
     model, params = tiny_model
     eng = ServingEngine(model, params, max_batch=2, max_len=64)

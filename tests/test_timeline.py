@@ -1,0 +1,85 @@
+"""Direct unit tests for StageTimeline's interval-booking occupancy clock.
+
+The serving engines and fleet benchmarks lean on StageTimeline for every
+modeled latency number; these tests pin its queueing semantics down
+without a model in the loop: multi-server parallel booking, backfill into
+earlier gaps (fleet lanes book the shared cloud out of virtual-time
+order), FCFS gap reuse, and per-resource isolation.
+"""
+
+import pytest
+
+from repro.serving.common import StageTimeline
+
+
+def test_multi_server_parallel_booking():
+    # two cloud servers: two unit jobs at t=0 run in parallel, the third
+    # queues behind the earlier-free server
+    tl = StageTimeline(resources=["cloud"], capacity={"cloud": 2})
+    assert tl.occupy("cloud", 0.0, 1.0) == 1.0
+    assert tl.occupy("cloud", 0.0, 1.0) == 1.0
+    assert tl.occupy("cloud", 0.0, 1.0) == 2.0
+    assert tl.busy_s["cloud"] == pytest.approx(3.0)
+    assert tl.makespan_s == pytest.approx(2.0)
+    assert tl.serial_s == pytest.approx(3.0)
+
+
+def test_backfill_into_earlier_gap():
+    # a slow lane books the far future first; a fast lane's later request
+    # must land in the earlier idle gap, not behind the future booking
+    tl = StageTimeline(resources=["cloud"])
+    assert tl.occupy("cloud", 100.0, 5.0) == 105.0
+    assert tl.occupy("cloud", 10.0, 5.0) == 15.0
+    assert tl.makespan_s == pytest.approx(105.0)
+    assert tl.busy_s["cloud"] == pytest.approx(10.0)
+
+
+def test_fcfs_gap_reuse():
+    # busy [0,2) and [5,7): a 3s job at ready=0 fits exactly in [2,5);
+    # the next 3s job finds every gap too small and queues at the tail
+    tl = StageTimeline(resources=["end"])
+    tl.occupy("end", 0.0, 2.0)
+    tl.occupy("end", 5.0, 2.0)
+    assert tl.occupy("end", 0.0, 3.0) == 5.0
+    assert tl.occupy("end", 0.0, 3.0) == 10.0
+    assert tl.makespan_s == pytest.approx(10.0)
+
+
+def test_gap_too_small_is_skipped():
+    # busy [0,2) and [3,5): a 2s job cannot fit the 1s hole at [2,3)
+    tl = StageTimeline(resources=["end"])
+    tl.occupy("end", 0.0, 2.0)
+    tl.occupy("end", 3.0, 2.0)
+    assert tl.occupy("end", 0.0, 2.0) == 7.0
+
+
+def test_resource_isolation():
+    # occupancy on one resource never delays another; busy_s is per-resource
+    tl = StageTimeline(resources=["end", "link"])
+    assert tl.occupy("end", 0.0, 4.0) == 4.0
+    assert tl.occupy("link", 0.0, 1.0) == 1.0
+    assert tl.busy_s == {"end": 4.0, "link": 1.0}
+    assert tl.free_at["end"] == pytest.approx(4.0)
+    assert tl.free_at["link"] == pytest.approx(1.0)
+    assert tl.serial_s == pytest.approx(5.0)
+
+
+def test_add_resource_idempotent():
+    tl = StageTimeline(resources=["cloud"], capacity={"cloud": 2})
+    tl.occupy("cloud", 0.0, 1.0)
+    tl.add_resource("end0")
+    assert tl.occupy("end0", 0.0, 2.0) == 2.0
+    # re-registering must not wipe existing bookings or shrink capacity
+    tl.add_resource("cloud", capacity=1)
+    tl.add_resource("end0")
+    assert tl.busy_s["cloud"] == pytest.approx(1.0)
+    assert tl.busy_s["end0"] == pytest.approx(2.0)
+    assert tl.occupy("cloud", 0.0, 1.0) == 1.0  # second server still there
+
+
+def test_zero_service_books_nothing():
+    tl = StageTimeline(resources=["end"])
+    assert tl.occupy("end", 3.0, 0.0) == 3.0
+    assert tl.busy_s["end"] == 0.0
+    # the zero-length job leaves no interval behind to block others
+    assert tl.occupy("end", 0.0, 1.0) == 1.0
