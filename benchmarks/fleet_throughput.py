@@ -25,6 +25,15 @@ safe point (every end layer keeps at least one resident), and the fleet
 keeps serving: every request completes, no other lane evicts or replans,
 aggregate tok/s stays positive.
 
+Phase 4 exercises the fleet-wide expert store under skewed routing: two
+lanes' measured traffic drifts to *overlapping* expert groups, so one
+lane's slab misses are served from the peer that already fetched them —
+over the modeled end<->end LAN, booked on BOTH lanes' link timelines —
+while the divergent remainder keeps fleet-wide unique residency well
+above any single lane's slab capacity, and the peer-served slabs come
+off the cloud downlink (strictly fewer ``expert_bytes_down`` than the
+isolated-pools baseline on the same trace).
+
 Tokens are computed for real; stage times use ``timing="modeled"`` (the
 planner's capability cost model) because one host cannot exhibit four
 declared device speeds — which also makes the run deterministic.
@@ -197,6 +206,17 @@ def run(
         seed=seed,
     )
 
+    # -- phase 4: fleet expert store — skewed routes, peer slab fetch,
+    # -- fleet-wide de-duplicated residency ----------------------------------
+    fleet_store_row = _run_fleet_expert_store(
+        n_requests=max(n_requests // 4, 8),
+        max_new_tokens=max_new_tokens,
+        max_batch=max_batch,
+        cloud_servers=cloud_servers,
+        max_spill=max_spill,
+        seed=seed,
+    )
+
     row = {
         "arch": cfg.name,
         "block_repeat": cfg.block_repeat,
@@ -204,6 +224,7 @@ def run(
         "compression_rank": rank,
         "scaling": scaling,
         "expert_memory_cut": expert_row,
+        "fleet_expert_store": fleet_store_row,
         "bandwidth_cut": {
             "device": cut_dev,
             "gbps_cut": gbps_cut,
@@ -318,11 +339,164 @@ def _run_expert_memory_cut(
     return row
 
 
+def _run_fleet_expert_store(
+    *,
+    n_requests: int,
+    max_new_tokens: int,
+    max_batch: int,
+    cloud_servers: int,
+    max_spill: float,
+    seed: int,
+) -> Dict:
+    """Skewed-route fleet on an MoE model: lane 0's traffic drifts to
+    groups {2,3}, lane 1's to {1,2}.  Lane 1's misses on the shared group
+    2 experts are served from lane 0 over the modeled end<->end LAN; the
+    divergent remainder keeps the fleet-wide unique resident set >= 1.5x
+    any single lane's slab capacity."""
+    from repro.core.expertpool import expert_slab_bytes
+    from repro.core.hardware import DeviceState
+
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    slab = expert_slab_bytes(cfg)
+    E, K = cfg.moe.num_experts, cfg.moe.num_groups
+    Mk = E // K
+    cap_n = max(1, int(cfg.moe.local_selection_cap * E))
+    n_pos = sum(1 for s in cfg.layer_pattern if s.moe)
+
+    def build(mems, force_splits=None, expert_fleet=True):
+        profiles = [
+            DeviceProfile(f"end-moe{i}", peak_gflops=p.peak_gflops,
+                          mem_gb=mems[i], mem_bw_gbs=p.mem_bw_gbs,
+                          net_gbps=p.net_gbps)
+            for i, p in enumerate(FLEET_PROFILES[:2])
+        ]
+        return FleetServingEngine(
+            model, params,
+            end_profiles=profiles, cloud_profile=CLOUD,
+            cloud_servers=cloud_servers,
+            max_batch=max_batch, max_len=128,
+            timing="modeled", max_spill=max_spill,
+            force_splits=force_splits, expert_fleet=expert_fleet,
+            expert_peer_gbps=25.0,  # fleet LAN >> either WAN uplink
+            expert_prefetch_per_tick=4, preemption=False,
+        )
+
+    # probe pass: the pinned splits must be the planner's own optima —
+    # a device-state update re-runs the split search, and a boundary move
+    # would re-base layer ids and instant-fill entering blocks (phase 3's
+    # pattern; memory never enters the split search so generous probe
+    # memory finds the same splits)
+    splits = [lane.split for lane in build([1.0, 1.0]).lanes]
+    # lane memory sized so the slab budget exactly covers each lane's
+    # target expert set: divergent masks then cannot hide behind slack
+    # capacity — residency must actually swap via evictions
+    mems = [2 * max(s, 1) * n_pos * cap_n * slab / 1e9 for s in splits]
+
+    # measured traffic skew, injected as the engines' EMA state: group
+    # frequencies steer the eq. 4 admit, expert frequencies clear the
+    # registry's 1/E replication bar for the experts each lane re-admits
+    # 0.8/0.2: the gap must exceed the bounded group-cost term (0.5 after
+    # normalization), or the registry's cheap-to-place signal would
+    # reorder the admit toward the peer-resident group and shrink the
+    # divergence this scenario is built to show
+    def skew(groups):
+        gf = np.zeros(K)
+        gf[groups[0]], gf[groups[1]] = 0.8, 0.2
+        mask_e = [g * Mk + j for g in groups for j in range(Mk)]
+        ef = np.zeros(E)
+        ef[mask_e] = 1.0 / len(mask_e)
+        return gf, ef
+
+    def drive(expert_fleet):
+        eng = build(mems, force_splits=splits, expert_fleet=expert_fleet)
+        for r in _requests(n_requests, max_new_tokens, seed + 3):
+            eng.submit(r)
+        for _ in range(2):
+            eng.step()
+        # lane 0 drifts first: groups {2,3} — every re-admitted slab comes
+        # from the cloud (no peer holds them yet)
+        gf, ef = skew((2, 3))
+        eng.lanes[0]._group_freq, eng.lanes[0]._route_freq = gf, ef
+        eng.update_device_state(0, DeviceState())
+        for _ in range(8):
+            eng.step()
+        # lane 1 follows onto overlapping groups {1,2}: its misses on the
+        # shared group-2 experts are now peer-resident on lane 0
+        gf, ef = skew((1, 2))
+        eng.lanes[1]._group_freq, eng.lanes[1]._route_freq = gf, ef
+        eng.update_device_state(1, DeviceState())
+        done = eng.run()
+        assert len(done) == n_requests, "expert-store phase stalled the fleet"
+        return eng
+
+    eng = drive(expert_fleet=True)
+    iso = drive(expert_fleet=False)
+    m, mi = eng.metrics(), iso.metrics()
+    reg = eng.expert_registry
+
+    # peer fetch happened, and every transfer flowed lane 0 -> lane 1
+    assert m["expert_peer_fetches"] > 0, "no slab was served from a peer"
+    assert all((s, d) == (0, 1) for s, d, _ in reg.peer_bookings)
+    # both ends of each peer transfer ride the fleet timeline: a lane's
+    # link busy time is its own boundary/prefill/slab traffic plus the
+    # peer seconds it served as a source
+    for i, lane in enumerate(eng.lanes):
+        peer_out = sum(t for s, _d, t in reg.peer_bookings if s == i)
+        own = (lane._stage_busy["link"] + lane._prefill_busy["link"]
+               + lane.expert_wire_s)
+        assert abs(eng.timeline.busy_s[f"link{i}"] - (own + peer_out)) < 1e-9
+    # divergent masks: fleet-wide unique residency beats any single lane's
+    # slab capacity by >= 1.5x, yet the shared experts are still held once
+    # per interested lane (unique < summed residents)
+    unique = m["expert_unique_residents"]
+    max_cap = max(lane.expert_pool.capacity for lane in eng.lanes)
+    assert unique >= 1.5 * max_cap, (unique, max_cap)
+    assert unique < m["expert_resident_slabs"]
+    # the peer-served slabs came off the cloud downlink: strictly fewer
+    # cloud bytes than the isolated-pools baseline on the SAME trace
+    assert mi["expert_peer_fetches"] == 0
+    assert m["expert_bytes_down"] < mi["expert_bytes_down"], (
+        m["expert_bytes_down"], mi["expert_bytes_down"]
+    )
+    assert m["aggregate_tokens_per_s"] > 0
+
+    row = {
+        "splits": splits,
+        "unique_residents": unique,
+        "resident_slabs": m["expert_resident_slabs"],
+        "dedup_ratio": round(m["expert_fleet_dedup_ratio"], 4),
+        "max_lane_capacity": max_cap,
+        "peer_fetches": m["expert_peer_fetches"],
+        "bytes_peer": m["expert_bytes_peer"],
+        "bytes_down": m["expert_bytes_down"],
+        "bytes_down_isolated": mi["expert_bytes_down"],
+        "fleet_hit_rate": round(m["expert_hit_rate"], 4),
+        "aggregate_tokens_per_s": round(m["aggregate_tokens_per_s"], 2),
+    }
+    print(
+        f"[fleet_throughput] fleet expert store: "
+        f"{row['peer_fetches']} peer fetch(es) "
+        f"({row['bytes_peer']/1024:.0f}KiB off the cloud downlink, "
+        f"down {row['bytes_down']/1024:.0f}KiB vs "
+        f"{row['bytes_down_isolated']/1024:.0f}KiB isolated), "
+        f"unique residents {unique} vs lane capacity {max_cap} "
+        f"(dedup ratio {row['dedup_ratio']}), "
+        f"agg={row['aggregate_tokens_per_s']:.1f} tok/s (all requests done)",
+        flush=True,
+    )
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="bench_fleet.json")
+    ap.add_argument("--n-requests", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
-    json.dump([run()], open(args.out, "w"), indent=1)
+    row = run(n_requests=args.n_requests, max_new_tokens=args.new_tokens)
+    json.dump([row], open(args.out, "w"), indent=1)
     return 0
 
 

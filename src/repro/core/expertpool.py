@@ -34,11 +34,13 @@ resident.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.pipeline import peer_comm_time
 
 
 def expert_slab_bytes(cfg) -> int:
@@ -316,6 +318,306 @@ class ExpertSlabPool:
                     need -= 1
                     overflow -= 1
         return wanted, evictions
+
+
+class FleetExpertRegistry:
+    """Location-aware fleet-wide expert store: residency *planning* split
+    from per-device *storage*.
+
+    Each fleet lane keeps its :class:`ExpertSlabPool` as the storage
+    backend (same slab/table device format, garbage slab, resident
+    kernel); the registry owns the fleet-wide map
+    ``(layer, expert) -> {lane: slab, freq, last_use}`` (see
+    :meth:`fleet_map`) and layers three policies on top:
+
+      * **De-duplication** (:meth:`plan_lane`) — a lane fetches its own
+        copy of an expert some peer already holds only when the lane's
+        *measured* route frequency justifies the slab
+        (``freq[e] >= dedup_min_freq``, default the uniform share
+        ``1/E``); colder duplicates are served over the peer link
+        instead.  Unmeasured lanes always replicate — cold fleets behave
+        exactly like PR 5's isolated pools, which is what keeps greedy
+        decode parity.
+      * **Source choice** (:meth:`pick_source`) — each queued slab
+        transfer picks peer-lane vs. cloud by modeled link cost at
+        *transfer* time (holders are read live, so a peer that evicted
+        meanwhile falls back to the cloud path).  Without a declared
+        fleet LAN a peer path rides both WAN uplinks and can never beat
+        the direct cloud fetch (see ``pipeline.peer_link_gbps``), so the
+        default fleet is cloud-only — exactly the isolated behavior.
+      * **Placement cost** (:meth:`lane_miss_cost_s`,
+        :meth:`group_fetch_costs`) — expected wire seconds to repair a
+        lane's misses, fed into ``place_fleet`` (request placement) and
+        ``selection.group_priority_from_freq`` (the eq. 4 group admit),
+        so routing and request placement see the same residency map.
+
+    The registry is pure host-side bookkeeping: it never touches device
+    storage and books peer wire time through per-lane callbacks onto the
+    fleet's shared ``StageTimeline`` link resources (both ends of a peer
+    transfer are occupied, so peer traffic overlaps decode exactly like
+    cloud prefetches).
+    """
+
+    def __init__(
+        self,
+        n_layers: int,
+        num_experts: int,
+        slab_bytes: int,
+        *,
+        lan_gbps: Optional[float] = None,
+        dedup_min_freq: Optional[float] = None,
+    ):
+        self.n_layers = n_layers
+        self.num_experts = num_experts
+        self.slab_bytes = slab_bytes
+        self.lan_gbps = lan_gbps
+        self.dedup_min_freq = (
+            1.0 / num_experts if dedup_min_freq is None else dedup_min_freq
+        )
+        self._pools: List[ExpertSlabPool] = []
+        self._link_gbps: List[Callable[[], float]] = []
+        self._book_link: List[Callable[[float, float], float]] = []
+        self._freq: List[Optional[np.ndarray]] = []
+        self.peer_fetches = 0
+        self.peer_bytes = 0
+        # (src_lane, dst_lane, wire_seconds) per peer transfer booked
+        self.peer_bookings: List[Tuple[int, int, float]] = []
+
+    # -- lanes ----------------------------------------------------------------
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self._pools)
+
+    def register_lane(
+        self,
+        pool: ExpertSlabPool,
+        *,
+        link_gbps: Callable[[], float],
+        book_link: Callable[[float, float], float],
+    ) -> int:
+        """Attach one lane's slab pool as a storage backend.  ``link_gbps``
+        reports the lane's measured uplink; ``book_link`` occupies the
+        lane's link resource on the fleet timeline (``(ready_s,
+        seconds) -> end_s``).  Returns the lane id (registration order —
+        the fleet registers lanes in device order)."""
+        if pool.n_layers != self.n_layers or (
+            pool.num_experts != self.num_experts
+        ):
+            raise ValueError(
+                f"pool geometry ({pool.n_layers}, {pool.num_experts}) != "
+                f"registry ({self.n_layers}, {self.num_experts})"
+            )
+        self._pools.append(pool)
+        self._link_gbps.append(link_gbps)
+        self._book_link.append(book_link)
+        self._freq.append(None)
+        return len(self._pools) - 1
+
+    def note_freq(self, lane: int, freq: Optional[np.ndarray]):
+        """Record a lane's measured route-frequency EMA (the fleet ticks
+        this; ``plan_lane`` also notes the freq it plans against)."""
+        if freq is not None:
+            self._freq[lane] = np.asarray(freq, np.float64).copy()
+
+    # -- the fleet-wide map ---------------------------------------------------
+
+    def holders(self, lid: int, e: int, *, exclude: Optional[int] = None
+                ) -> List[int]:
+        """Lanes whose pool currently holds ``(layer, expert)``."""
+        return [
+            i for i, p in enumerate(self._pools)
+            if i != exclude and p.table[lid, e] >= 0
+        ]
+
+    def fleet_map(self) -> Dict[Tuple[int, int], Dict]:
+        """The registry's view: every fleet-resident ``(layer, expert)``
+        with its holders' physical slabs, the max measured frequency across
+        holders, and the freshest LRU stamp (introspection / tests)."""
+        out: Dict[Tuple[int, int], Dict] = {}
+        for i, p in enumerate(self._pools):
+            for lid, e in zip(*np.nonzero(p.table >= 0)):
+                lid, e = int(lid), int(e)
+                ent = out.setdefault(
+                    (lid, e),
+                    {"holders": {}, "freq": 0.0, "last_use": 0},
+                )
+                ent["holders"][i] = int(p.table[lid, e])
+                if self._freq[i] is not None:
+                    ent["freq"] = max(ent["freq"], float(self._freq[i][e]))
+                ent["last_use"] = max(
+                    ent["last_use"], int(p.last_used[lid, e])
+                )
+        return out
+
+    def unique_residents(self) -> int:
+        """Distinct fleet-wide resident ``(layer, expert)`` pairs."""
+        if not self._pools:
+            return 0
+        held = np.zeros((self.n_layers, self.num_experts), bool)
+        for p in self._pools:
+            held |= p.table >= 0
+        return int(held.sum())
+
+    def total_residents(self) -> int:
+        return sum(p.slabs_in_use for p in self._pools)
+
+    def dedup_ratio(self) -> float:
+        """Fleet resident slabs over unique resident (layer, expert)
+        pairs: 1.0 = fully de-duplicated, ``n_lanes`` = every resident
+        replicated everywhere."""
+        return self.total_residents() / max(self.unique_residents(), 1)
+
+    # -- link cost model ------------------------------------------------------
+
+    def cloud_fetch_s(self, lane: int) -> float:
+        """Modeled wire time of one slab over the lane's cloud uplink."""
+        gbps = self._link_gbps[lane]()
+        return self.slab_bytes * 8.0 / max(gbps * 1e9, 1e-9)
+
+    def peer_fetch_s(self, lane: int, src: int) -> float:
+        """Modeled wire time of one slab over the end<->end link."""
+        return peer_comm_time(
+            self.slab_bytes,
+            self._link_gbps[src](),
+            self._link_gbps[lane](),
+            lan_gbps=self.lan_gbps,
+        )
+
+    def pick_source(self, lane: int, lid: int, e: int
+                    ) -> Tuple[Optional[int], float]:
+        """Cheapest source for a slab fetch of ``(layer, expert)`` onto
+        ``lane``: ``(peer_lane | None, wire_seconds)`` — ``None`` means the
+        cloud path.  A peer must be *strictly* cheaper to win (ties keep
+        the cloud: its copy is always authoritative)."""
+        best_src: Optional[int] = None
+        best_t = self.cloud_fetch_s(lane)
+        for j in self.holders(lid, e, exclude=lane):
+            t = self.peer_fetch_s(lane, j)
+            if t < best_t:
+                best_src, best_t = j, t
+        return best_src, best_t
+
+    def book_peer(self, src: int, dst: int, ready_s: float, seconds: float
+                  ) -> float:
+        """Occupy the *source* lane's link resource for a peer transfer
+        (the destination books its own link itself — both ends of the
+        transfer appear on the fleet timeline and overlap decode)."""
+        done = self._book_link[src](ready_s, seconds)
+        self.peer_fetches += 1
+        self.peer_bytes += self.slab_bytes
+        self.peer_bookings.append((src, dst, seconds))
+        return done
+
+    # -- residency planning ---------------------------------------------------
+
+    def _replicate_justified(
+        self, lane: int, lid: int, e: int, freq: Optional[np.ndarray]
+    ) -> bool:
+        if not self.holders(lid, e, exclude=lane):
+            return True  # sole fleet copy: always place it
+        if freq is None:
+            return True  # unmeasured lane: no evidence to dedup on
+        return float(freq[e]) >= self.dedup_min_freq
+
+    def plan_lane(
+        self,
+        lane: int,
+        active_layers: Sequence[int],
+        target: np.ndarray,
+        freq: Optional[np.ndarray] = None,
+    ) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int]]]:
+        """One lane's :meth:`ExpertSlabPool.plan` with the fleet
+        de-duplication rule applied to the want list: a duplicate of an
+        expert already resident on a peer is only fetched when this lane's
+        measured frequency clears ``dedup_min_freq`` — otherwise the lane
+        serves it over the peer link (or the cloud) on miss.  Evictions
+        are the pool's own (de-dup never forces an eviction: an existing
+        duplicate is trimmed only by normal capacity pressure, so a
+        registry-attached lane's residency is always a subset of the
+        isolated pool's — the greedy-parity superset property)."""
+        self.note_freq(lane, freq)
+        wanted, evictions = self._pools[lane].plan(active_layers, target, freq)
+        wanted = [
+            (lid, e) for lid, e in wanted
+            if self._replicate_justified(lane, lid, e, freq)
+        ]
+        return wanted, evictions
+
+    # -- placement cost feeds -------------------------------------------------
+
+    def _f_eff(self, lane: int) -> np.ndarray:
+        """Measured frequency EMA plus the uniform ``1/E`` prior (matching
+        the engines' hit-rate weighting: just-admitted experts register)."""
+        E = self.num_experts
+        f = self._freq[lane]
+        return (np.zeros((E,)) if f is None else f) + 1.0 / E
+
+    def expert_fetch_costs(
+        self, lane: int, active_layers: Sequence[int]
+    ) -> np.ndarray:
+        """Per-expert modeled wire seconds to make the expert resident on
+        the lane's active end layers (0 where already resident), averaged
+        over layers — the per-expert placement cost the group priority
+        consumes."""
+        E = self.num_experts
+        cost = np.zeros((E,))
+        active = list(active_layers)
+        if not active:
+            return cost
+        pool = self._pools[lane]
+        for e in range(E):
+            c = 0.0
+            for lid in active:
+                if pool.table[lid, e] < 0:
+                    c += self.pick_source(lane, lid, e)[1]
+            cost[e] = c / len(active)
+        return cost
+
+    def group_fetch_costs(
+        self, lane: int, active_layers: Sequence[int], num_groups: int
+    ) -> np.ndarray:
+        """Expert fetch costs folded to HL-GGN groups (mean over each
+        group's experts) for ``selection.group_priority_from_freq``."""
+        per_expert = self.expert_fetch_costs(lane, active_layers)
+        return per_expert.reshape(num_groups, -1).mean(-1)
+
+    def lane_miss_cost_s(
+        self,
+        lane: int,
+        active_layers: Sequence[int],
+        target: np.ndarray,
+    ) -> float:
+        """Expected extra wire seconds per routed token on this lane: each
+        active layer's non-resident target experts weighted by measured
+        routing probability times their cheapest fetch time.  A heuristic
+        placement *signal* (misses amortize over many tokens), not a
+        latency prediction — ``place_fleet`` uses it to steer requests
+        toward lanes whose residency already matches their traffic."""
+        f = self._f_eff(lane)
+        target = np.asarray(target, bool)
+        pool = self._pools[lane]
+        cost = 0.0
+        for lid in active_layers:
+            for e in np.nonzero(target & (pool.table[lid] < 0))[0]:
+                e = int(e)
+                cost += float(f[e]) * self.pick_source(lane, lid, e)[1]
+        return cost
+
+    # -- cloud-side view ------------------------------------------------------
+
+    def cloud_expert_load(self) -> np.ndarray:
+        """Per-expert share of fleet traffic that drains to the *cloud*
+        tier: each lane's effective frequency counts where the lane holds
+        no layer's copy of the expert (misses route to the cloud's dense
+        stacks).  This is the weight ``distributed.sharding``'s
+        fleet-aware expert sharding balances across cloud servers."""
+        E = self.num_experts
+        load = np.zeros((E,))
+        for i, p in enumerate(self._pools):
+            any_resident = (p.table >= 0).any(axis=0)  # [E]
+            load += self._f_eff(i) * (~any_resident)
+        return load
 
 
 def device_resident_tables(

@@ -69,6 +69,34 @@ def comm_time(task: Task, net_gbps: float, compression: float = 1.0) -> float:
     return task.comm_bytes * compression * 8.0 / max(net_gbps * 1e9, 1e-9)
 
 
+def peer_link_gbps(
+    gbps_a: float, gbps_b: float, *, lan_gbps: Optional[float] = None
+) -> float:
+    """Modeled end<->end link rate between two fleet devices.
+
+    With a declared fleet LAN (``lan_gbps``: the devices sit behind one
+    switch — the deployment where a peer slab fetch beats the cloud path)
+    the LAN rate applies.  Without one, a peer transfer rides both
+    devices' WAN uplinks and is bottlenecked by the slower — it can then
+    never beat the direct cloud path, so cost-based source selection
+    (``expertpool.FleetExpertRegistry.pick_source``) keeps the cloud."""
+    if lan_gbps is not None:
+        return lan_gbps
+    return min(gbps_a, gbps_b)
+
+
+def peer_comm_time(
+    nbytes: float,
+    gbps_a: float,
+    gbps_b: float,
+    *,
+    lan_gbps: Optional[float] = None,
+) -> float:
+    """Wire seconds for ``nbytes`` over the modeled end<->end link."""
+    rate = peer_link_gbps(gbps_a, gbps_b, lan_gbps=lan_gbps)
+    return nbytes * 8.0 / max(rate * 1e9, 1e-9)
+
+
 def schedule(
     tasks: Sequence[Task],
     end_cap: Capability,
@@ -262,6 +290,7 @@ def place_fleet(
     capacity: Optional[Sequence[int]] = None,
     max_spill: Optional[float] = None,
     order: Optional[Sequence[int]] = None,
+    expert_cost: Optional[Sequence[float]] = None,
 ) -> Tuple[List[int], Dict[str, float]]:
     """Route-aware request placement across N end devices — ``schedule``'s
     eq. 10/11 greedy generalized from the binary end/cloud choice to a
@@ -285,8 +314,13 @@ def place_fleet(
     ``max_spill`` times worse than the fleet-wide best (which may merely be
     out of slots right now), the task is left unplaced rather than dumped
     on a straggler — a queued request can still take a good device next
-    tick, a placed one cannot.  Returns one device index per task (-1 =
-    leave it queued) plus stats.
+    tick, a placed one cannot.  ``expert_cost`` is a per-device residency
+    surcharge in seconds per task GFLOP (the fleet expert registry's
+    expected expert-miss wire time, normalized by per-token compute) added
+    to the marginal — request placement then sees the same fleet-wide
+    residency map as the gate's group priority, steering requests toward
+    lanes whose resident experts already match their traffic.  Returns one
+    device index per task (-1 = leave it queued) plus stats.
     """
     n = len(end_caps)
     load = list(loads) if loads is not None else [0.0] * n
@@ -295,11 +329,16 @@ def place_fleet(
         (measured_gbps[d] if measured_gbps is not None else end_caps[d].net_gbps)
         for d in range(n)
     ]
+    ecost = list(expert_cost) if expert_cost is not None else [0.0] * n
+    if len(ecost) != n:
+        raise ValueError(
+            f"expert_cost has {len(ecost)} entries for {n} devices"
+        )
 
     def marginal(t: Task, d: int) -> float:
         ex = (load[d] + t.gflops) / max(end_caps[d].gflop_budget * 1e3, 1e-9)
         cm = t.comm_bytes * 8.0 / max(gbps[d] * 1e9, 1e-9)
-        return cfg.alpha * ex + (1.0 - cfg.alpha) * cm
+        return cfg.alpha * ex + (1.0 - cfg.alpha) * cm + ecost[d] * t.gflops
 
     if order is None:
         order = sorted(

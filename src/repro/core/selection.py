@@ -90,19 +90,75 @@ def end_mask_for(
 
 
 def group_priority_from_freq(
-    group_freq: Optional[np.ndarray], num_groups: int
+    group_freq: Optional[np.ndarray],
+    num_groups: int,
+    group_cost: Optional[np.ndarray] = None,
 ) -> Sequence[int]:
     """Group order for the eq. 4 greedy admit from *measured* stage-1
     routing frequencies (the gate's ``group_frac`` statistic, EMA'd by the
     serving engines): most-routed group first, stable natural order on
     ties — and exactly natural order when nothing has been measured yet,
-    so cold engines behave as before."""
+    so cold engines behave as before.
+
+    ``group_cost`` (optional, [K] >= 0) is a per-group *placement* cost —
+    the fleet expert registry's modeled wire seconds to make the group's
+    experts resident (0 for already-resident groups).  Both signals are
+    normalized to sum 1 and the score is ``freq - 0.5 * cost``: among
+    similarly-routed groups the cheap-to-place (already resident, or
+    peer-servable) ones are admitted first, so routing sees the same
+    fleet residency map as request placement.  All-zero costs (everything
+    resident) leave the pure-frequency order unchanged."""
     if group_freq is None:
         return list(range(num_groups))
     f = np.asarray(group_freq, np.float64)
     if f.shape != (num_groups,) or not np.isfinite(f).all():
         return list(range(num_groups))
-    return [int(g) for g in np.argsort(-f, kind="stable")]
+    score = f / s if (s := float(f.sum())) > 0 else f
+    if group_cost is not None:
+        c = np.asarray(group_cost, np.float64)
+        if c.shape == (num_groups,) and np.isfinite(c).all() and c.sum() > 0:
+            score = score - 0.5 * c / float(c.sum())
+    return [int(g) for g in np.argsort(-score, kind="stable")]
+
+
+def validate_expert_mask(
+    mask,
+    num_experts: Optional[int] = None,
+    *,
+    where: str = "end tier",
+):
+    """Reject an expert target mask that selects no experts — loudly and
+    identically on every engine path.
+
+    An all-False mask is silently pathological either way it is consumed:
+    a dense engine hands the gate all ``-inf`` logits and the softmax
+    *renormalizes to uniform* weights over the very experts the mask
+    excluded, while a pooled engine routes every token to the zero garbage
+    slab and emits garbage activations.  Neither is the configuration
+    anyone asked for, and the two paths silently diverge — so both
+    validate here at the engine boundary instead.  ``None`` (dense model /
+    no masking) passes through."""
+    if mask is None:
+        return None
+    m = np.asarray(mask)
+    if m.ndim != 1:
+        raise ValueError(
+            f"{where}: expert mask must be 1-D [E], got shape {m.shape}"
+        )
+    if num_experts is not None and m.shape[0] != num_experts:
+        raise ValueError(
+            f"{where}: expert mask has {m.shape[0]} entries for "
+            f"{num_experts} experts"
+        )
+    if not m.astype(bool).any():
+        raise ValueError(
+            f"{where}: expert mask selects no experts — a dense gate would "
+            "silently renormalize to uniform weights over the excluded "
+            "experts while a pooled end tier routes every token to the "
+            "zero garbage slab; widen selection_eps, fix the device state, "
+            "or drop the mask entirely"
+        )
+    return mask
 
 
 def residency_target(

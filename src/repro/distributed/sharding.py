@@ -229,3 +229,47 @@ def named(tree_specs, topo: Topology):
         tree_specs,
         is_leaf=lambda s: isinstance(s, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-aware cloud expert sharding (serving-time, registry-driven)
+# ---------------------------------------------------------------------------
+
+
+def fleet_expert_shards(
+    expert_load: Sequence[float], num_servers: int
+) -> list:
+    """Partition experts across the multi-server cloud tier, balanced by
+    *measured* load — the fleet expert registry's ``cloud_expert_load``
+    (each expert weighted by the share of fleet traffic whose misses drain
+    to the cloud; fleet-resident experts weigh ~0, so the hot cloud
+    experts are exactly the ones no end lane holds).
+
+    Greedy LPT: heaviest expert to the least-loaded server, expert id as
+    the deterministic tie-break.  Returns ``num_servers`` sorted expert-id
+    lists covering every expert exactly once — the serving-time analogue
+    of the mesh-time ``[R, E, d, f] -> tp`` expert-dim rule above, but
+    load-balanced instead of uniform."""
+    if num_servers < 1:
+        raise ValueError(f"num_servers={num_servers}")
+    load = [float(x) for x in expert_load]
+    shards: list = [[] for _ in range(num_servers)]
+    totals = [0.0] * num_servers
+    for e in sorted(range(len(load)), key=lambda e: (-load[e], e)):
+        s = min(range(num_servers), key=lambda s: (totals[s], s))
+        shards[s].append(e)
+        totals[s] += load[e]
+    return [sorted(s) for s in shards]
+
+
+def shard_expert_stacks(moe_params: Dict, shards: Sequence[Sequence[int]]) -> list:
+    """Slice a dense stacked expert subtree ``{"wi": [R, E, d, f], ...}``
+    into per-server subtrees along the expert dim per
+    :func:`fleet_expert_shards` (each server holds only its experts'
+    rows).  Gate parameters stay replicated — routing needs every
+    expert's logit everywhere."""
+    out = []
+    for shard in shards:
+        idx = jnp.asarray(list(shard), jnp.int32)
+        out.append(jax.tree.map(lambda leaf: leaf[:, idx], dict(moe_params)))
+    return out

@@ -95,11 +95,20 @@ class LinkStats:
 
     bytes_up: int = 0
     bytes_down: int = 0
+    bytes_peer: int = 0
     transfers: int = 0
     seconds_up: float = 0.0
+    seconds_peer: float = 0.0
 
     def transfer_time(self, nbytes: int, gbps: float) -> float:
         return nbytes * 8.0 / max(gbps * 1e9, 1e-9)
+
+    def record_peer(self, nbytes: int, seconds: float) -> None:
+        """Meter an end<->end transfer (peer expert-slab fetch — the wire
+        time is modeled by the fleet registry's peer-link cost, so it is
+        recorded rather than derived from the cloud uplink rate)."""
+        self.bytes_peer += nbytes
+        self.seconds_peer += seconds
 
     def record_up(self, nbytes: int, gbps: float) -> float:
         """Meter an end->cloud transfer; returns its modeled wire time."""

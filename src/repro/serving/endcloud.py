@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.core import compression as comp
 from repro.core.hardware import Capability, DeviceProfile, DeviceState, capability
 from repro.core.pipeline import PipelinePlan, plan_pipeline_split
-from repro.core.selection import end_mask_for
+from repro.core.selection import end_mask_for, validate_expert_mask
 from repro.models import attention as attn_mod
 from repro.models import transformer
 from repro.models.model import Model
@@ -211,6 +211,15 @@ def plan_tiers(
         end_mask = end_mask_from_state(
             cfg, end_profile, end_state, selection_eps=selection_eps
         )
+    # engine boundary: an all-False mask diverges silently (dense gates
+    # renormalize to uniform, pooled tiers route to the garbage slab) —
+    # both executor families plan tiers through here, so both reject it
+    # identically (selection.validate_expert_mask)
+    validate_expert_mask(
+        end_mask,
+        cfg.moe.num_experts if cfg.moe is not None else None,
+        where="plan_tiers(end_mask)",
+    )
 
     # Codec (eq. 8).
     codec = codec_params

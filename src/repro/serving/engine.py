@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.selection import validate_expert_mask
 from repro.models import kvcache
 from repro.models.model import Model
 from repro.serving.common import Request, SlotEngineBase, TraceCounter
@@ -52,6 +53,13 @@ class ServingEngine(SlotEngineBase):
         super().__init__(max_batch, clock, max_len=max_len, admission=admission)
         self.model = model
         self.params = params
+        # same boundary check as plan_tiers: a mask selecting no experts
+        # would silently renormalize the gate to uniform weights
+        validate_expert_mask(
+            expert_mask,
+            model.cfg.moe.num_experts if model.cfg.moe is not None else None,
+            where="ServingEngine(expert_mask)",
+        )
         self.expert_mask = expert_mask
         self.paged = kvcache.pattern_is_pageable(model.cfg)
         self._traces: Dict[str, set] = {}

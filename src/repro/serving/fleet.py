@@ -49,9 +49,11 @@ import jax.numpy as jnp
 
 import jax
 
+from repro.core import expertpool
 from repro.core.hardware import DeviceProfile, DeviceState
 from repro.core.pipeline import SchedulerConfig, Task, place_fleet
 from repro.core.selection import fleet_device_mask
+from repro.distributed.sharding import fleet_expert_shards
 from repro.models import kvcache
 from repro.models.kvcache import PagePool
 from repro.models.model import Model
@@ -120,6 +122,9 @@ class FleetServingEngine:
         expert_resident_slots: Optional[int] = None,
         expert_mem_frac: float = 0.5,
         expert_prefetch_per_tick: int = 2,
+        expert_fleet: bool = True,  # fleet-wide expert registry (vs isolated)
+        expert_peer_gbps: Optional[float] = None,  # modeled end<->end LAN rate
+        expert_dedup_min_freq: Optional[float] = None,  # default 1/E
         admission: str = "priority",  # "priority" | "fifo" (frontend + lanes)
         preemption: bool = True,  # lanes spill low-priority slots under load
     ):
@@ -164,6 +169,28 @@ class FleetServingEngine:
         self.cloud_pool = PagePool(
             cloud_kv_pages or n * padded * pps, page_size, pps, n_slots=0
         )
+        # Fleet expert store: one location-aware registry owns residency
+        # planning across every lane's slab pool — de-duplicated placement,
+        # peer-vs-cloud slab sourcing over the modeled end<->end link, and
+        # the placement-cost feed `_place` hands to place_fleet.  Lanes
+        # register in device order, so registry lane ids == device ids.
+        # ``expert_fleet=False`` keeps PR 5's isolated per-lane pools (the
+        # dedup/peer ablation baseline).
+        pooled = bool(
+            (expert_pool if expert_pool is not None else True)
+            and model.cfg.moe is not None
+            and any(spec.moe for spec in model.cfg.layer_pattern)
+        )
+        self.expert_registry: Optional[expertpool.FleetExpertRegistry] = None
+        if expert_fleet and pooled:
+            n_moe = sum(1 for spec in model.cfg.layer_pattern if spec.moe)
+            self.expert_registry = expertpool.FleetExpertRegistry(
+                n_moe * model.cfg.block_repeat,
+                model.cfg.moe.num_experts,
+                expertpool.expert_slab_bytes(model.cfg),
+                lan_gbps=expert_peer_gbps,
+                dedup_min_freq=expert_dedup_min_freq,
+            )
         self.lanes: List[FleetLane] = []
         for i in range(n):
             self.lanes.append(
@@ -198,6 +225,7 @@ class FleetServingEngine:
                     expert_resident_slots=expert_resident_slots,
                     expert_mem_frac=expert_mem_frac,
                     expert_prefetch_per_tick=expert_prefetch_per_tick,
+                    expert_registry=self.expert_registry,
                     admission=admission,
                     preemption=preemption,
                 )
@@ -279,6 +307,7 @@ class FleetServingEngine:
             capacity=capacity,
             max_spill=self.max_spill,
             order=order,
+            expert_cost=self._expert_placement_cost(),
         )
         # dispatch in placement order so each lane's queue keeps it
         for i in order:
@@ -298,12 +327,35 @@ class FleetServingEngine:
             r for i, r in enumerate(self.waiting) if assignment[i] < 0
         ]
 
+    def _expert_placement_cost(self) -> Optional[List[float]]:
+        """Per-device residency surcharge for ``place_fleet`` (seconds per
+        task GFLOP): the registry's expected expert-miss wire time per
+        routed token, normalized by per-token compute so the surcharge
+        scales with request size like the other marginal terms.  Zero
+        everywhere once every lane's target set is resident — placement
+        then reduces exactly to the PR 6 marginal (parity)."""
+        if self.expert_registry is None:
+            return None
+        gpt = 2.0 * self.cfg.active_param_count() * 1e-9  # GFLOPs per token
+        return [
+            self.expert_registry.lane_miss_cost_s(
+                i, lane._active_lids(), lane._target_mask_np()
+            ) / max(gpt, 1e-12)
+            for i, lane in enumerate(self.lanes)
+        ]
+
     # -- stepping -------------------------------------------------------------
 
     def step(self) -> int:
         """One fleet tick: place frontend requests, then advance every lane
         (each lane drains its cloud boundaries on the shared resource, admits
-        from its own queue, and refills its end tier)."""
+        from its own queue, and refills its end tier).  The expert registry
+        is ticked first: every lane's measured route-frequency EMA is pushed
+        into the fleet map, so de-dup decisions and placement costs this
+        tick see fleet-wide measurements."""
+        if self.expert_registry is not None:
+            for i, lane in enumerate(self.lanes):
+                self.expert_registry.note_freq(i, lane._route_freq)
         self._place()
         emitted = 0
         for lane in self.lanes:
@@ -425,18 +477,54 @@ class FleetServingEngine:
         pooled = [m for m in per_device if "expert_resident_slabs" in m]
         if not pooled:
             return {}
-        return {
+        # hit rate weighted by per-lane routed tokens: an idle lane (hit
+        # rate 1.0 over zero traffic) must not inflate the fleet number.
+        # All-zero weights (nothing decoded yet) fall back to the plain mean.
+        weights = [m.get("expert_routed_tokens", 0) for m in pooled]
+        total_w = sum(weights)
+        if total_w > 0:
+            hit = sum(
+                m["expert_hit_rate"] * w for m, w in zip(pooled, weights)
+            ) / total_w
+        else:
+            hit = sum(m["expert_hit_rate"] for m in pooled) / len(pooled)
+        out = {
             "expert_resident_slabs": sum(
                 m["expert_resident_slabs"] for m in pooled
             ),
             "expert_slab_capacity": sum(
                 m["expert_slab_capacity"] for m in pooled
             ),
-            "expert_hit_rate": (
-                sum(m["expert_hit_rate"] for m in pooled) / len(pooled)
-            ),
+            "expert_hit_rate": hit,
             "expert_bytes_down": sum(m["expert_bytes_down"] for m in pooled),
+            "expert_bytes_peer": sum(m["expert_bytes_peer"] for m in pooled),
             "expert_bytes_up": sum(m["expert_bytes_up"] for m in pooled),
             "expert_prefetches": sum(m["expert_prefetches"] for m in pooled),
+            "expert_peer_fetches": sum(
+                m["expert_peer_fetches"] for m in pooled
+            ),
             "expert_evictions": sum(m["expert_evictions"] for m in pooled),
+            "expert_routed_tokens": total_w,
         }
+        if self.expert_registry is not None:
+            # fleet-wide residency map: unique (layer, expert) pairs vs the
+            # summed per-lane slabs — how much the de-dup policy is buying
+            out["expert_unique_residents"] = (
+                self.expert_registry.unique_residents()
+            )
+            out["expert_fleet_dedup_ratio"] = self.expert_registry.dedup_ratio()
+        return out
+
+    def cloud_expert_shards(self) -> Optional[List[List[int]]]:
+        """Shard the cloud tier's dense expert stacks across the
+        multi-server cloud using the registry map: experts are weighted by
+        the share of fleet traffic that actually drains to the cloud (a
+        lane's misses — fleet-resident experts are served on the ends) and
+        balanced across ``cloud_servers`` (``sharding.fleet_expert_shards``).
+        Apply with ``sharding.shard_expert_stacks``.  None when the fleet
+        runs isolated pools / dense models."""
+        if self.expert_registry is None:
+            return None
+        return fleet_expert_shards(
+            self.expert_registry.cloud_expert_load(), self.cloud_servers
+        )

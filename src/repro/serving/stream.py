@@ -111,7 +111,7 @@ from repro.core import compression as comp
 from repro.core import expertpool
 from repro.core.hardware import DeviceProfile, DeviceState, capability
 from repro.core.pipeline import BandwidthEstimator, PipelinePlan, replan_pipeline
-from repro.core.selection import group_priority_from_freq
+from repro.core.selection import group_priority_from_freq, validate_expert_mask
 from repro.models import attention as attn_mod
 from repro.models import kvcache, transformer
 from repro.models.kvcache import PagePool
@@ -213,6 +213,7 @@ class EndCloudServingEngine(SlotEngineBase):
         expert_resident_slots: Optional[int] = None,  # per-layer slot count
         expert_mem_frac: float = 0.5,  # end mem budget share for slabs
         expert_prefetch_per_tick: int = 2,
+        expert_registry=None,  # fleet-shared expertpool.FleetExpertRegistry
         admission: str = "priority",  # "priority" | "fifo" (see SlotEngineBase)
         preemption: bool = True,  # spill lower-priority slots for a blocked head
     ):
@@ -264,6 +265,11 @@ class EndCloudServingEngine(SlotEngineBase):
         self._route_freq: Optional[np.ndarray] = None  # [E] EMA expert_frac
         self._group_freq: Optional[np.ndarray] = None  # [K] EMA group_frac
         self._freq_decay = 0.9
+        # fleet-shared expert registry: residency planning is delegated to
+        # it once this lane registers (after the pool exists); the mask
+        # derivation below may run before that, so both attrs exist now
+        self.expert_registry = expert_registry if self._expert_pooled else None
+        self._registry_lane: Optional[int] = None
         # any MoE end tier (pooled or dense-mask) measures routing stats
         self._route_stats_enabled = model.cfg.moe is not None and bool(
             self._moe_pos
@@ -391,12 +397,24 @@ class EndCloudServingEngine(SlotEngineBase):
             self._expert_prefetch_per_tick = max(1, expert_prefetch_per_tick)
             self._prefetch_queue: List[Tuple[int, int]] = []
             self._expert_ready_s = 0.0  # link-resource cursor for transfers
-            self.expert_bytes_down = 0  # runtime slab prefetch traffic
+            self.expert_bytes_down = 0  # runtime slab prefetch traffic (cloud)
+            self.expert_bytes_peer = 0  # slab traffic served by peer lanes
             self.expert_bytes_up = 0  # (evictions are drops; cloud keeps all)
             self.n_expert_prefetches = 0
+            self.n_expert_peer_fetches = 0
             self.n_expert_evictions = 0
+            self.expert_routed_tokens = 0  # decoded tokens through the pool
+            self.expert_wire_s = 0.0  # slab wire time booked on own link
             self._expert_dirty = False
             self._applied_target = np.asarray(self.tiers.end_mask, bool)
+            if self.expert_registry is not None:
+                self._registry_lane = self.expert_registry.register_lane(
+                    self.expert_pool,
+                    link_gbps=lambda: self.bw.gbps,
+                    book_link=lambda ready_s, t: self.timeline.occupy(
+                        self._res_link, ready_s, t
+                    ),
+                )
             # initial residency ships with the deployment: filled instantly,
             # not metered — only *runtime* residency changes ride the link
             self._expert_sync(instant_lids=set(self._active_lids()))
@@ -438,7 +456,20 @@ class EndCloudServingEngine(SlotEngineBase):
         if self.cfg.moe is None:
             return None
         return group_priority_from_freq(
-            self._group_freq, self.cfg.moe.num_groups
+            self._group_freq, self.cfg.moe.num_groups,
+            group_cost=self._group_placement_cost(),
+        )
+
+    def _group_placement_cost(self):
+        """Per-group modeled fetch cost from the fleet expert registry
+        (None standalone / before registration): the eq. 4 greedy admit
+        then prefers groups whose experts are already fleet-resident or
+        cheap to fetch — routing sees the same map request placement
+        does."""
+        if self.expert_registry is None or self._registry_lane is None:
+            return None
+        return self.expert_registry.group_fetch_costs(
+            self._registry_lane, self._active_lids(), self.cfg.moe.num_groups
         )
 
     # -- paged expert weights (slab pool; see core.expertpool) ----------------
@@ -484,6 +515,17 @@ class EndCloudServingEngine(SlotEngineBase):
         R = self.cfg.block_repeat
         return lid // R, lid % R
 
+    def _plan_residency(self, active, target):
+        """Residency plan for this lane: through the fleet registry when
+        attached (pool policy plus the fleet de-dup rule — a duplicate of
+        a peer-resident expert is only fetched when this lane's measured
+        traffic justifies the slab), the isolated pool policy otherwise."""
+        if self.expert_registry is not None and self._registry_lane is not None:
+            return self.expert_registry.plan_lane(
+                self._registry_lane, active, target, self._route_freq
+            )
+        return self.expert_pool.plan(active, target, self._route_freq)
+
     def _expert_sync(self, instant_lids=()):
         """Reconcile pool residency with the current target mask / split /
         memory budget — called at replan safe points only, so the swapped
@@ -496,7 +538,7 @@ class EndCloudServingEngine(SlotEngineBase):
         target = self._target_mask_np()
         active = self._active_lids()
         pool.set_capacity(self._expert_capacity())
-        wanted, evictions = pool.plan(active, target, self._route_freq)
+        wanted, evictions = self._plan_residency(active, target)
         for lid, e in evictions:
             pool.evict(lid, e)
             self.n_expert_evictions += 1
@@ -563,11 +605,33 @@ class EndCloudServingEngine(SlotEngineBase):
             slab = pool.alloc(lid, e)
             pi, b = self._lid_to_pos_block(lid)
             writes.append((slab, pi, b, e))
-            t_wire = self.link.transfer_time(self._slab_bytes, self.bw.gbps)
+            # source pick happens at *transfer* time against the live fleet
+            # map: a peer lane holding the slab serves it over the modeled
+            # end<->end link when strictly cheaper than the cloud path (a
+            # peer that evicted since planning falls back to the cloud)
+            src = None
+            if self.expert_registry is not None and (
+                self._registry_lane is not None
+            ):
+                src, t_wire = self.expert_registry.pick_source(
+                    self._registry_lane, lid, e
+                )
+            if src is None:
+                t_wire = self.link.transfer_time(self._slab_bytes, self.bw.gbps)
+                self.expert_bytes_down += self._slab_bytes
+            else:
+                # both ends of the peer transfer ride the fleet timeline:
+                # this lane's link here, the source lane's via the registry
+                self.expert_registry.book_peer(
+                    src, self._registry_lane, self._expert_ready_s, t_wire
+                )
+                self.link.record_peer(self._slab_bytes, t_wire)
+                self.expert_bytes_peer += self._slab_bytes
+                self.n_expert_peer_fetches += 1
             self._expert_ready_s = self.timeline.occupy(
                 self._res_link, self._expert_ready_s, t_wire
             )
-            self.expert_bytes_down += self._slab_bytes
+            self.expert_wire_s += t_wire
             self.n_expert_prefetches += 1
             self._expert_dirty = True  # tables swap at the next safe point
             n += 1
@@ -1151,8 +1215,13 @@ class EndCloudServingEngine(SlotEngineBase):
         # slots' activations never cross the wire (matches the prefill
         # valid-rows metering and the active-only token downlink)
         per_row = int(z.size // z.shape[0] * z.dtype.itemsize)
-        nbytes = per_row * int(self._active[gs:ge].sum())
+        n_active = int(self._active[gs:ge].sum())
+        nbytes = per_row * n_active
         t_comm = self.link.record_up(nbytes, self.bw.gbps)
+        if self._expert_pooled:
+            # per-lane routed-token weight for the fleet's expert_hit_rate
+            # (tokens that actually exercised the pooled end tier)
+            self.expert_routed_tokens += n_active
 
         done_e = self.timeline.occupy(self._res_end, self._group_ready_s[g], te)
         done_l = self.timeline.occupy(self._res_link, done_e, t_comm)
@@ -1243,11 +1312,21 @@ class EndCloudServingEngine(SlotEngineBase):
         capability AND the hardware-aware expert mask (eq. 2-4), then
         re-check the plan.  Mask changes are applied at the same safe point
         as split changes."""
+        new_mask = self._derive_end_mask(end_state)
+        # same loud rejection as the construction-time boundary: a state so
+        # degraded that eq. 4 admits nothing must not silently become a
+        # uniform-renormalized gate (dense) or all-garbage routing (pooled).
+        # Validated before any engine state moves, so a rejected update
+        # leaves the running plan untouched.
+        validate_expert_mask(
+            new_mask,
+            self.cfg.moe.num_experts if self.cfg.moe is not None else None,
+            where="update_device_state(end_mask)",
+        )
         self.end_state = end_state
         self.tiers = dataclasses.replace(
             self.tiers, end_cap=capability(self.end_profile, end_state)
         )
-        new_mask = self._derive_end_mask(end_state)
         mask_changed = not _masks_equal(new_mask, self.tiers.end_mask)
         if mask_changed:
             self._pending_mask = new_mask
@@ -1268,9 +1347,7 @@ class EndCloudServingEngine(SlotEngineBase):
             target = np.asarray(
                 new_mask if mask_changed else self.tiers.end_mask, bool
             )
-            wanted, _ev = self.expert_pool.plan(
-                self._active_lids(), target, self._route_freq
-            )
+            wanted, _ev = self._plan_residency(self._active_lids(), target)
             self._prefetch_queue = list(wanted)
         # The state vector's B_bw component is a link observation only when
         # it reports a non-default value; a default-constructed 1.0 means
@@ -1475,12 +1552,15 @@ class EndCloudServingEngine(SlotEngineBase):
             "expert_slab_capacity": pool.capacity,
             "expert_hit_rate": self._expert_hit_rate(),
             "expert_bytes_down": self.expert_bytes_down,
+            "expert_bytes_peer": self.expert_bytes_peer,
             "expert_bytes_up": self.expert_bytes_up,
             "expert_bytes_resident": pool.slabs_in_use * sb,
             "expert_bytes_step_resident": n_res_active * sb,
             "expert_bytes_step_dense": len(active) * E * sb,
             "expert_prefetches": self.n_expert_prefetches,
+            "expert_peer_fetches": self.n_expert_peer_fetches,
             "expert_evictions": self.n_expert_evictions,
+            "expert_routed_tokens": self.expert_routed_tokens,
         }
 
     def kv_metrics(self) -> Dict[str, float]:
