@@ -48,7 +48,13 @@ claim: per-decode-step attention KV bytes scale with *mapped pages*
 (``attn_bytes_paged_step``), not slots x ring — the skewed batch must move
 < 1/2 of the dense-gather bytes (``attn_bytes_dense_step``), asserted.
 
-    PYTHONPATH=src python -m benchmarks.decode_pipeline [--out bench_decode_pipeline.json]
+A final quantization phase (``run_quant``) replays the workload with the
+int8 second-stage codecs on (KV pages, boundary payloads, expert slabs)
+and asserts each metered byte stream lands at <= 0.55x its f32-path
+counterpart, page/slab capacity >= 1.9x, and greedy decode matches the
+unquantized engine within the documented tolerance.
+
+    PYTHONPATH=src python -m benchmarks.decode_pipeline [--out BENCH_decode_pipeline.json]
 """
 
 from __future__ import annotations
@@ -376,9 +382,169 @@ def run_expert(
     return row
 
 
+def run_quant(
+    *,
+    arch: str = "tinyllama-1.1b",
+    moe_arch: str = "llama4-scout-17b-16e",
+    num_layers: int = 4,
+    n_requests: int = 8,
+    max_new_tokens: int = 8,
+    max_batch: int = 4,
+    seed: int = 0,
+) -> Dict:
+    """Quantized byte streams: the same workload through the f32-path
+    engine and the int8 engine (KV pages + boundary payloads + expert
+    slabs), asserting the ~2x reduction on each stream and the greedy
+    parity tolerance.  Dense baselines are priced at dense dtypes, so
+    quantizing the storage must not move any denominator."""
+    from repro.core.expertpool import expert_slab_bytes
+
+    cfg = smoke_config(get_config(arch)).replace(num_layers=num_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rank = max(cfg.d_model // 4, 1)
+    split = 2  # interior split: the boundary actually crosses the wire
+
+    def drive(compression_rank, **quant):
+        eng = EndCloudServingEngine(
+            model, params,
+            end_profile=END_SIM, cloud_profile=CLOUD_SIM,
+            max_batch=max_batch, max_len=128,
+            compression_rank=compression_rank, force_split=split, **quant,
+        )
+        for r in _requests(n_requests, max_new_tokens, seed):
+            eng.submit(r)
+        for _ in range(6):  # live sample point, identical tick in both runs
+            eng.step()
+        kv_mid = eng.kv_metrics()
+        done = eng.run()
+        toks = {r.request_id: list(r.generated) for r in done}
+        return eng.metrics(), kv_mid, toks
+
+    # parity pair: uncompressed boundary, so int8 quantization is the ONLY
+    # perturbation between the two runs (at smoke scale the rank-r codec
+    # itself leaves greedy logits near-tied, which would conflate codec
+    # loss with quantization noise in the match rate)
+    m_ref, kv_ref, tok_ref = drive(0)
+    m_q, kv_q, tok_q = drive(0, quantize_kv=True, quantize_boundary=True)
+
+    assert set(tok_q) == set(tok_ref)
+    total = sum(len(t) for t in tok_ref.values())
+    matched = sum(
+        int(a == b)
+        for rid in tok_ref
+        for a, b in zip(tok_ref[rid], tok_q[rid])
+    )
+    match_rate = matched / max(total, 1)
+    # boundary stream: int8 codes + one f16 scale per row after the rank-r
+    # encode -> (r + 2) / (2 r) of the f32-path payload
+    up_ratio = m_q["bytes_up"] / max(m_ref["bytes_up"], 1)
+    # attention stream at the same live tick: identical mapped pages, int8
+    # K/V plus the per-token f16 scale sidecar riding the page table
+    attn_ratio = (
+        kv_q["attn_bytes_paged_step"] / max(kv_ref["attn_bytes_paged_step"], 1)
+    )
+    assert 0 < up_ratio <= 0.55, f"boundary bytes ratio {up_ratio}"
+    assert 0 < attn_ratio <= 0.55, f"attention bytes ratio {attn_ratio}"
+    assert kv_q["kv_capacity_ratio"] >= 1.9, kv_q["kv_capacity_ratio"]
+    assert kv_ref["kv_capacity_ratio"] == 1.0, kv_ref["kv_capacity_ratio"]
+    assert kv_q["attn_bytes_dense_step"] == kv_ref["attn_bytes_dense_step"]
+    assert match_rate >= 0.85, (
+        f"quantized greedy decode matched only {matched}/{total} tokens"
+    )
+
+    # codec composition: the quantizer is a SECOND stage after the rank-r
+    # low-rank encode — int8 codes + f16 scale over r components lands at
+    # (r + 2) / (2 r) of the compressed f32-path payload
+    m_cref, _, _ = drive(rank)
+    m_cq, _, tok_cq = drive(
+        rank, quantize_kv=True, quantize_boundary=True)
+    comp_ratio = m_cq["bytes_up"] / max(m_cref["bytes_up"], 1)
+    assert 0 < comp_ratio <= 0.55, f"compressed boundary ratio {comp_ratio}"
+    assert sum(len(t) for t in tok_cq.values()) == total  # no stall/loss
+
+    # -- expert-weight stream (MoE): halve -> recover so the re-grown set
+    # -- is PREFETCHED and bytes_down meters real slab wire in both runs.
+    # -- The budget is sized in the engine's own STORED slab size so both
+    # -- runs hold the same slab count and the ratio isolates bytes/slab.
+    cfg_e = smoke_config(get_config(moe_arch)).replace(num_layers=4)
+    model_e = build_model(cfg_e)
+    params_e = model_e.init(jax.random.PRNGKey(seed))
+    n_moe = sum(1 for s in cfg_e.layer_pattern if s.moe)
+    cap_n = max(1, int(np.floor(
+        cfg_e.moe.local_selection_cap * cfg_e.moe.num_experts)))
+
+    def drive_expert(qe):
+        slab = expert_slab_bytes(cfg_e, quantized=qe)
+        prof = DeviceProfile(
+            "end-moe-sim", peak_gflops=END_SIM.peak_gflops,
+            mem_gb=2 * n_moe * cap_n * slab / 1e9,
+            mem_bw_gbs=END_SIM.mem_bw_gbs, net_gbps=END_SIM.net_gbps,
+        )
+        eng = EndCloudServingEngine(
+            model_e, params_e,
+            end_profile=prof, cloud_profile=CLOUD_SIM,
+            max_batch=max_batch, max_len=128, force_split=1,
+            quantize_experts=qe,
+        )
+        for r in _requests(n_requests, max_new_tokens, seed):
+            eng.submit(r)
+        for _ in range(4):
+            eng.step()
+        eng.update_device_state(DeviceState(mem_free=0.5))
+        for _ in range(4):
+            eng.step()
+        b0 = eng.expert_bytes_down
+        eng.update_device_state(DeviceState(mem_free=1.0))
+        eng.run()
+        return eng.metrics(), eng.expert_bytes_down - b0
+
+    me_ref, pf_ref = drive_expert(False)
+    me_q, pf_q = drive_expert(True)
+    assert pf_ref > 0 and pf_q > 0, (pf_ref, pf_q)
+    down_ratio = pf_q / pf_ref
+    assert down_ratio <= 0.55, f"expert slab wire ratio {down_ratio}"
+    assert me_q["expert_capacity_ratio"] >= 1.9, me_q["expert_capacity_ratio"]
+    assert me_ref["expert_capacity_ratio"] == 1.0
+    assert me_q["expert_bytes_step_dense"] == me_ref["expert_bytes_step_dense"]
+
+    row = {
+        "phase": "quantized_streams",
+        "arch": cfg.name,
+        "moe_arch": cfg_e.name,
+        "split": split,
+        "compression_rank": rank,
+        "greedy_match_rate": round(match_rate, 4),
+        "boundary_bytes_up": m_q["bytes_up"],
+        "boundary_bytes_up_f32path": m_ref["bytes_up"],
+        "boundary_bytes_ratio": round(up_ratio, 4),
+        "boundary_bytes_ratio_compressed": round(comp_ratio, 4),
+        "attn_bytes_paged_step": kv_q["attn_bytes_paged_step"],
+        "attn_bytes_paged_step_f32path": kv_ref["attn_bytes_paged_step"],
+        "attn_bytes_quant_ratio": round(attn_ratio, 4),
+        "kv_capacity_ratio": round(kv_q["kv_capacity_ratio"], 4),
+        "expert_prefetch_bytes_down": pf_q,
+        "expert_prefetch_bytes_down_f32path": pf_ref,
+        "expert_bytes_quant_ratio": round(down_ratio, 4),
+        "expert_capacity_ratio": round(me_q["expert_capacity_ratio"], 4),
+    }
+    print(
+        f"[decode_pipeline:quant] greedy match {matched}/{total} "
+        f"({row['greedy_match_rate']}); bytes ratios: "
+        f"boundary x{row['boundary_bytes_ratio']} "
+        f"(x{row['boundary_bytes_ratio_compressed']} after rank-{rank} encode), "
+        f"attention x{row['attn_bytes_quant_ratio']}, "
+        f"expert slabs x{row['expert_bytes_quant_ratio']}; "
+        f"capacity: kv x{row['kv_capacity_ratio']}, "
+        f"experts x{row['expert_capacity_ratio']}",
+        flush=True,
+    )
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="bench_decode_pipeline.json")
+    ap.add_argument("--out", default="BENCH_decode_pipeline.json")
     ap.add_argument("--rank", type=int, default=0)
     # tiny-shape knobs so CI can smoke the overlap / no-stall assertions
     ap.add_argument("--layers", type=int, default=4)
@@ -399,7 +565,15 @@ def main():
         max_new_tokens=args.new_tokens,
         max_batch=args.max_batch,
     ))
+    rows.append(run_quant(
+        num_layers=4,  # interior split 2 of R=4 puts the boundary on the wire
+        max_batch=min(args.max_batch, 4),
+    ))
     json.dump(rows, open(args.out, "w"), indent=1)
+    # stable machine-readable artifact name for CI collection, regardless
+    # of --out
+    if args.out != "BENCH_decode_pipeline.json":
+        json.dump(rows, open("BENCH_decode_pipeline.json", "w"), indent=1)
     return 0
 
 

@@ -217,6 +217,18 @@ def run(
         seed=seed,
     )
 
+    # -- phase 5: quantized byte streams at fleet scale — the same MoE
+    # -- trace with the int8 codecs off and on; boundary wire, KV pages,
+    # -- and re-admitted expert slabs must each shrink ~2x ------------------
+    quant_row = _run_quant_fleet(
+        n_requests=max(n_requests // 4, 8),
+        max_new_tokens=max_new_tokens,
+        max_batch=max_batch,
+        cloud_servers=cloud_servers,
+        max_spill=max_spill,
+        seed=seed,
+    )
+
     row = {
         "arch": cfg.name,
         "block_repeat": cfg.block_repeat,
@@ -225,6 +237,7 @@ def run(
         "scaling": scaling,
         "expert_memory_cut": expert_row,
         "fleet_expert_store": fleet_store_row,
+        "quantized_streams": quant_row,
         "bandwidth_cut": {
             "device": cut_dev,
             "gbps_cut": gbps_cut,
@@ -489,14 +502,139 @@ def _run_fleet_expert_store(
     return row
 
 
+def _run_quant_fleet(
+    *,
+    n_requests: int,
+    max_new_tokens: int,
+    max_batch: int,
+    cloud_servers: int,
+    max_spill: float,
+    seed: int,
+) -> Dict:
+    """Quantized byte streams at fleet scale: the same skewed-route MoE
+    trace with the int8 codecs off and on.  Boundary wire, KV page bytes,
+    and re-admitted expert slabs (priced by the fleet registry at the
+    STORED slab size) must each land at <= 0.55x the f32-path run; page
+    and slab capacity must be >= 1.9x at the same memory budget."""
+    from repro.core.expertpool import expert_slab_bytes
+    from repro.core.hardware import DeviceState
+
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    E, K = cfg.moe.num_experts, cfg.moe.num_groups
+    Mk = E // K
+    cap_n = max(1, int(cfg.moe.local_selection_cap * E))
+    n_pos = sum(1 for s in cfg.layer_pattern if s.moe)
+
+    def build(mems, force_splits=None, quant=False):
+        profiles = [
+            DeviceProfile(f"end-moe{i}", peak_gflops=p.peak_gflops,
+                          mem_gb=mems[i], mem_bw_gbs=p.mem_bw_gbs,
+                          net_gbps=p.net_gbps)
+            for i, p in enumerate(FLEET_PROFILES[:2])
+        ]
+        return FleetServingEngine(
+            model, params,
+            end_profiles=profiles, cloud_profile=CLOUD,
+            cloud_servers=cloud_servers,
+            max_batch=max_batch, max_len=128,
+            timing="modeled", max_spill=max_spill,
+            force_splits=force_splits, expert_fleet=True,
+            expert_prefetch_per_tick=4, preemption=False,
+            quantize_kv=quant, quantize_experts=quant,
+            quantize_boundary=quant,
+        )
+
+    # pin the planner's own optima (phase 3/4's pattern), probed with the
+    # codecs off: the quantized run must serve the identical tier layout,
+    # or the byte ratios would conflate codec gains with a split move
+    splits = [lane.split for lane in build([1.0, 1.0]).lanes]
+
+    # one drifted lane re-admits groups {2,3} mid-run: every re-admitted
+    # slab crosses the cloud downlink, metered at the stored slab size
+    def drive(quant):
+        # budget sized in the run's own stored slab size -> both runs hold
+        # the same slab COUNT and the wire ratio isolates bytes/slab
+        slab = expert_slab_bytes(cfg, quantized=quant)
+        mems = [2 * max(s, 1) * n_pos * cap_n * slab / 1e9 for s in splits]
+        eng = build(mems, force_splits=splits, quant=quant)
+        for r in _requests(n_requests, max_new_tokens, seed + 4):
+            eng.submit(r)
+        for _ in range(2):
+            eng.step()
+        gf = np.zeros(K)
+        gf[2], gf[3] = 0.8, 0.2
+        ef = np.zeros(E)
+        mask_e = [g * Mk + j for g in (2, 3) for j in range(Mk)]
+        ef[mask_e] = 1.0 / len(mask_e)
+        eng.lanes[0]._group_freq, eng.lanes[0]._route_freq = gf, ef
+        eng.update_device_state(0, DeviceState())
+        done = eng.run()
+        assert len(done) == n_requests, "quant fleet phase stalled"
+        return eng
+
+    ref = drive(quant=False)
+    q = drive(quant=True)
+    m_ref, m_q = ref.metrics(), q.metrics()
+
+    up_ref = sum(l.link.bytes_up for l in ref.lanes)
+    up_q = sum(l.link.bytes_up for l in q.lanes)
+    up_ratio = up_q / max(up_ref, 1)
+    assert 0 < up_ratio <= 0.55, f"fleet boundary bytes ratio {up_ratio}"
+    # expert slab wire (cloud downlink), priced by the registry at the
+    # stored slab size on the SAME re-admit trace
+    assert m_ref["expert_bytes_down"] > 0 and m_q["expert_bytes_down"] > 0
+    down_ratio = m_q["expert_bytes_down"] / m_ref["expert_bytes_down"]
+    assert down_ratio <= 0.55, f"fleet expert wire ratio {down_ratio}"
+    # per-lane paged-KV and slab capacity at the same memory budget
+    for lane in q.lanes:
+        kv = lane.kv_metrics()
+        assert kv["kv_capacity_ratio"] >= 1.9, kv["kv_capacity_ratio"]
+        em = lane.metrics()
+        assert em["expert_capacity_ratio"] >= 1.9, em["expert_capacity_ratio"]
+    for lane in ref.lanes:
+        assert lane.kv_metrics()["kv_capacity_ratio"] == 1.0
+
+    row = {
+        "splits": splits,
+        "boundary_bytes_up": up_q,
+        "boundary_bytes_up_f32path": up_ref,
+        "boundary_bytes_ratio": round(up_ratio, 4),
+        "expert_bytes_down": m_q["expert_bytes_down"],
+        "expert_bytes_down_f32path": m_ref["expert_bytes_down"],
+        "expert_bytes_ratio": round(down_ratio, 4),
+        "kv_capacity_ratio": round(
+            min(l.kv_metrics()["kv_capacity_ratio"] for l in q.lanes), 4
+        ),
+        "aggregate_tokens_per_s": round(m_q["aggregate_tokens_per_s"], 2),
+    }
+    print(
+        f"[fleet_throughput] quantized streams: boundary "
+        f"x{row['boundary_bytes_ratio']} "
+        f"({up_q/1024:.0f}KiB vs {up_ref/1024:.0f}KiB), expert wire "
+        f"x{row['expert_bytes_ratio']} "
+        f"({row['expert_bytes_down']/1024:.0f}KiB vs "
+        f"{row['expert_bytes_down_f32path']/1024:.0f}KiB), "
+        f"kv capacity x{row['kv_capacity_ratio']}, "
+        f"agg={row['aggregate_tokens_per_s']:.1f} tok/s (all requests done)",
+        flush=True,
+    )
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="bench_fleet.json")
+    ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--n-requests", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
     row = run(n_requests=args.n_requests, max_new_tokens=args.new_tokens)
     json.dump([row], open(args.out, "w"), indent=1)
+    # stable machine-readable artifact name for CI collection, regardless
+    # of --out
+    if args.out != "BENCH_fleet.json":
+        json.dump([row], open("BENCH_fleet.json", "w"), indent=1)
     return 0
 
 

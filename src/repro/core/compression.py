@@ -121,6 +121,32 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.A
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+# -- boundary payload quantization (second codec stage, after encode_1d) ----
+
+BOUNDARY_SCALE_DTYPE = jnp.float16  # f16 keeps the quantized row <= 0.55x
+
+
+def quantize_boundary(z: jax.Array):
+    """Composable second codec stage for a pipeline-boundary payload
+    ``[..., r]`` (already low-rank encoded, or raw when no codec is
+    configured): symmetric int8 per row with one *f16* scale, so a row
+    costs ``r + 2`` bytes on the wire instead of ``2r`` (bf16).  The scale
+    is rounded to f16 *before* quantizing, making dequantization with the
+    stored scale the exact inverse."""
+    xf = z.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8).astype(BOUNDARY_SCALE_DTYPE)
+    q = jnp.clip(
+        jnp.round(xf / scale.astype(jnp.float32)), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_boundary(q: jax.Array, scale: jax.Array,
+                        dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
 def compression_ratio(d: int, r: int, in_bits: int = 16, codec: str = "lowrank"):
     """Bytes-on-wire ratio used by the route-aware scheduler's comm model."""
     if codec == "lowrank":

@@ -43,19 +43,37 @@ import numpy as np
 from repro.core.pipeline import peer_comm_time
 
 
-def expert_slab_bytes(cfg) -> int:
+SLAB_SCALE_DTYPE = jnp.float32  # per-output-column scale sidecar
+SLAB_SCALE_FLOOR = 1e-8
+
+
+def expert_slab_bytes(cfg, *, quantized: bool = False) -> int:
     """Bytes one expert's ``wi``/``wg``/``wo`` rows occupy for one layer
     (the unit expert-pool budgets and ``expert_bytes_*`` metrics are
-    denominated in)."""
+    denominated in).  With ``quantized=True`` the weights are int8 plus one
+    fp32 scale per output column — the *stored* size, which is also what
+    crosses the wire on a prefetch or peer fetch."""
     mats = 3 if cfg.ffn_gated else 2
+    d, f = cfg.d_model, cfg.moe.d_ff_expert
+    if quantized:
+        scales = (2 * f if cfg.ffn_gated else f) + d
+        return mats * d * f + scales * jnp.dtype(SLAB_SCALE_DTYPE).itemsize
     itemsize = jnp.dtype(cfg.param_dtype).itemsize
-    return mats * cfg.d_model * cfg.moe.d_ff_expert * itemsize
+    return mats * d * f * itemsize
 
 
-def init_slab_store(cfg, num_slabs: int, dtype=None) -> Dict[str, jax.Array]:
+def init_slab_store(cfg, num_slabs: int, dtype=None, *,
+                    quantized: bool = False) -> Dict[str, jax.Array]:
     """Device-side slab storage: per weight matrix ``[num_slabs + 1, ...]``
-    with the last row the all-zeros garbage slab."""
-    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    with the last row the all-zeros garbage slab.
+
+    With ``quantized=True`` the weight leaves hold int8 codes and per
+    matrix a ``*_scale`` sidecar holds one fp32 scale per *output* column
+    (``wi_scale``/``wg_scale [N+1, f]`` over the d contraction,
+    ``wo_scale [N+1, d]`` over the f contraction) — folding the scale
+    after the matmul is then exact, which is what the fused consumers do.
+    """
+    dtype = jnp.int8 if quantized else (dtype or jnp.dtype(cfg.param_dtype))
     d, f = cfg.d_model, cfg.moe.d_ff_expert
     store = {
         "wi": jnp.zeros((num_slabs + 1, d, f), dtype),
@@ -63,7 +81,25 @@ def init_slab_store(cfg, num_slabs: int, dtype=None) -> Dict[str, jax.Array]:
     }
     if cfg.ffn_gated:
         store["wg"] = jnp.zeros((num_slabs + 1, d, f), dtype)
+    if quantized:
+        store["wi_scale"] = jnp.zeros((num_slabs + 1, f), SLAB_SCALE_DTYPE)
+        store["wo_scale"] = jnp.zeros((num_slabs + 1, d), SLAB_SCALE_DTYPE)
+        if cfg.ffn_gated:
+            store["wg_scale"] = jnp.zeros((num_slabs + 1, f), SLAB_SCALE_DTYPE)
     return store
+
+
+def quantize_slab(w: jax.Array):
+    """``[..., c, n] -> (q int8, scale fp32 [..., n])``: symmetric int8
+    with one scale per output column (axis ``n``), so
+    ``(x @ q) * scale == x @ w`` up to the int8 grid error."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2)
+    scale = jnp.maximum(amax / 127.0, SLAB_SCALE_FLOOR).astype(SLAB_SCALE_DTYPE)
+    q = jnp.clip(
+        jnp.round(wf / scale[..., None, :].astype(jnp.float32)), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
 
 
 def write_slabs(
@@ -72,16 +108,26 @@ def write_slabs(
     assignments: Sequence[Tuple[int, int, int]],  # (slab, block, expert)
 ) -> Dict[str, jax.Array]:
     """Copy expert weights ``(block, expert)`` from the full stacked params
-    into physical slab rows (one batched scatter per weight matrix)."""
+    into physical slab rows (one batched scatter per weight matrix).  A
+    quantized store (``wi_scale`` present) quantizes on write — the dense
+    params never hit the pool or the wire at full precision."""
     if not assignments:
         return store
     slabs = jnp.asarray([a[0] for a in assignments])
     bs = jnp.asarray([a[1] for a in assignments])
     es = jnp.asarray([a[2] for a in assignments])
     out = dict(store)
-    for k in store:
-        src = full_moe_params[k][bs, es].astype(store[k].dtype)
-        out[k] = store[k].at[slabs].set(src)
+    quantized = "wi_scale" in store
+    for k in ("wi", "wg", "wo"):
+        if k not in store:
+            continue
+        src = full_moe_params[k][bs, es]
+        if quantized:
+            q, s = quantize_slab(src)
+            out[k] = store[k].at[slabs].set(q)
+            out[f"{k}_scale"] = store[f"{k}_scale"].at[slabs].set(s)
+        else:
+            out[k] = store[k].at[slabs].set(src.astype(store[k].dtype))
     return out
 
 

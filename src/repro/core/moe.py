@@ -219,6 +219,14 @@ def moe_resident(params: Dict, x: jax.Array, cfg, expert_mask=None):
     wi = store["wi"][ids]  # [S+1, d, f]
     wg = store["wg"][ids] if "wg" in store else None
     wo = store["wo"][ids]  # [S+1, f, d]
+    if "wi_scale" in store:
+        # int8 slab store: the HBM gather reads int8 codes; dequantize just
+        # the S+1 gathered slabs (per-output-column fp32 scales, exact
+        # modulo the int8 grid) before the grouped GEMM
+        wi = wi.astype(jnp.float32) * store["wi_scale"][ids][:, None, :]
+        wo = wo.astype(jnp.float32) * store["wo_scale"][ids][:, None, :]
+        if wg is not None:
+            wg = wg.astype(jnp.float32) * store["wg_scale"][ids][:, None, :]
     order = jnp.argsort(slots)
     gs = jnp.bincount(slots, length=S + 1).astype(jnp.int32)
     y_sorted = _grouped_mlp(rows[order], gs, wi, wg, wo, cfg.act)

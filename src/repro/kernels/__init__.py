@@ -21,6 +21,10 @@ Kernels:
                     index maps, so attention reads mapped KV pages straight
                     from the pool — page lookup, ring-position masking, and
                     online softmax in one pass, no dense ring gather.
+  quant           — per-row int8 (and fp8-shaped, int8-storage) quantize/
+                    dequantize: the composable second codec stage for KV
+                    pages, expert slabs, and boundary payloads; consumers
+                    (paged_attention, expert_mlp) fuse the dequant in VMEM.
 """
 
 from typing import Optional

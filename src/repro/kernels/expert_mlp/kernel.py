@@ -40,7 +40,8 @@ from jax.experimental.pallas import tpu as pltpu
 ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 
 
-def _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str):
+def _body(x_ref, wi_ref, wis_ref, wg_ref, wgs_ref, wo_ref, wos_ref, o_ref,
+          *, act: str):
     j = pl.program_id(2)  # ff tile (minor-most: sequential accumulation)
 
     @pl.when(j == 0)
@@ -52,12 +53,18 @@ def _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str):
     h = jax.lax.dot_general(
         x, wi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
+    if wis_ref is not None:
+        # int8 slab tile: fold the per-output-column scale AFTER the dot —
+        # exact, and the MXU sees the raw int8-coded tile
+        h = h * wis_ref[0].astype(jnp.float32)[None, :]
     a = ACTS[act]
     if wg_ref is not None:
         wg = wg_ref[0].astype(jnp.float32)
         g = jax.lax.dot_general(
             x, wg, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
+        if wgs_ref is not None:
+            g = g * wgs_ref[0].astype(jnp.float32)[None, :]
         h = a(h) * g
     else:
         h = a(h)
@@ -65,7 +72,13 @@ def _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str):
     y = jax.lax.dot_general(
         h, wo, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
+    if wos_ref is not None:
+        y = y * wos_ref[0].astype(jnp.float32)[None, :]
     o_ref[0] += y.astype(o_ref.dtype)
+
+
+def _kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str):
+    _body(x_ref, wi_ref, None, wg_ref, None, wo_ref, None, o_ref, act=act)
 
 
 def expert_mlp_pallas(
@@ -116,6 +129,17 @@ def _kernel_resident_nogate(ids_ref, x_ref, wi_ref, wo_ref, o_ref, *, act):
     _kernel(x_ref, wi_ref, None, wo_ref, o_ref, act=act)
 
 
+def _kernel_resident_quant(ids_ref, x_ref, wi_ref, wis_ref, wg_ref, wgs_ref,
+                           wo_ref, wos_ref, o_ref, *, act):
+    _body(x_ref, wi_ref, wis_ref, wg_ref, wgs_ref, wo_ref, wos_ref, o_ref,
+          act=act)
+
+
+def _kernel_resident_quant_nogate(ids_ref, x_ref, wi_ref, wis_ref,
+                                  wo_ref, wos_ref, o_ref, *, act):
+    _body(x_ref, wi_ref, wis_ref, None, None, wo_ref, wos_ref, o_ref, act=act)
+
+
 def expert_mlp_resident_pallas(
     x,  # [S, C, d] one capacity buffer per resident slot
     wi,  # [N, d, f] slab store (N = num_slabs, possibly + garbage row)
@@ -123,6 +147,9 @@ def expert_mlp_resident_pallas(
     wo,  # [N, f, d]
     resident_ids,  # [S] int32: resident slot -> physical slab row
     *,
+    wi_scale=None,  # [N, f] fp32 per-output-column scales (int8 store)
+    wg_scale=None,  # [N, f] | None
+    wo_scale=None,  # [N, d]
     act="silu",
     block_c=256,
     block_f=512,
@@ -131,29 +158,53 @@ def expert_mlp_resident_pallas(
     """Resident-sub-table expert FFN: grid (resident-slot, token-block,
     ff-tile) with ``resident_ids`` scalar-prefetched so the weight
     BlockSpecs DMA tiles of exactly the slot's slab — HBM weight traffic
-    is S slabs, never the whole store."""
+    is S slabs, never the whole store.
+
+    With ``*_scale`` sidecars the store holds int8 codes: each weight tile
+    is DMA'd at int8 width (quarter the fp32 slab traffic) and its
+    per-output-column scale row is folded into the partial product in VMEM
+    right after the dot — the dequantized tile never exists in HBM."""
     S, C, d = x.shape
     f = wi.shape[2]
     bc = min(block_c, C)
     bf = min(block_f, f)
     assert C % bc == 0 and f % bf == 0, (C, bc, f, bf)
     grid = (S, C // bc, f // bf)
+    quantized = wi_scale is not None
 
     in_specs = [
         pl.BlockSpec((1, bc, d), lambda s, c, j, ids: (s, c, 0)),
         pl.BlockSpec((1, d, bf), lambda s, c, j, ids: (ids[s], 0, j)),
     ]
     args = [x, wi]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, bf), lambda s, c, j, ids: (ids[s], j)))
+        args.append(wi_scale)
     if wg is not None:
         in_specs.append(pl.BlockSpec((1, d, bf), lambda s, c, j, ids: (ids[s], 0, j)))
         args.append(wg)
+        if quantized:
+            in_specs.append(
+                pl.BlockSpec((1, bf), lambda s, c, j, ids: (ids[s], j))
+            )
+            args.append(wg_scale)
     in_specs.append(pl.BlockSpec((1, bf, d), lambda s, c, j, ids: (ids[s], j, 0)))
     args.append(wo)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, d), lambda s, c, j, ids: (ids[s], 0)))
+        args.append(wo_scale)
 
-    kernel = functools.partial(
-        _kernel_resident if wg is not None else _kernel_resident_nogate,
-        act=act,
-    )
+    if quantized:
+        kernel = functools.partial(
+            _kernel_resident_quant if wg is not None
+            else _kernel_resident_quant_nogate,
+            act=act,
+        )
+    else:
+        kernel = functools.partial(
+            _kernel_resident if wg is not None else _kernel_resident_nogate,
+            act=act,
+        )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,

@@ -45,6 +45,9 @@ def expert_mlp(
     wo: jax.Array,  # [E, f, d] — or [N, f, d]
     *,
     resident_ids: Optional[jax.Array] = None,  # [S] slot -> slab row
+    wi_scale: Optional[jax.Array] = None,  # [N, f] fp32 (int8 slab store)
+    wg_scale: Optional[jax.Array] = None,  # [N, f] | None
+    wo_scale: Optional[jax.Array] = None,  # [N, d]
     act: str = "silu",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -52,7 +55,9 @@ def expert_mlp(
     pool's execution shape) the leading axis of ``x`` is the *resident
     slot*, the weights are the slab store, and the scalar-prefetched ids
     drive the weight DMA — compute and weight HBM traffic scale with the
-    resident count, not the expert count."""
+    resident count, not the expert count.  ``*_scale`` sidecars mark an
+    int8 slab store: tiles are DMA'd at int8 width and dequantized in VMEM
+    right after each dot (resident variant only)."""
     interpret = resolve_interpret(interpret)
     E, C, d = x.shape
     f = wi.shape[2]
@@ -60,6 +65,7 @@ def expert_mlp(
     if resident_ids is not None:
         y = expert_mlp_resident_pallas(
             x, wi, wg, wo, resident_ids,
+            wi_scale=wi_scale, wg_scale=wg_scale, wo_scale=wo_scale,
             act=act, block_c=bc, block_f=bf, interpret=interpret,
         )
     else:

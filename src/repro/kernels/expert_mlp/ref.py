@@ -48,3 +48,26 @@ def expert_mlp_resident_ref(
         wo[resident_ids],
         act,
     )
+
+
+def expert_mlp_resident_quant_ref(
+    x: jax.Array,  # [S, C, d]
+    wi: jax.Array,  # [N, d, f] int8 slab store
+    wg,  # [N, d, f] int8 or None
+    wo: jax.Array,  # [N, f, d] int8
+    wi_scale: jax.Array,  # [N, f] fp32 per-output-column scales
+    wg_scale,  # [N, f] or None
+    wo_scale: jax.Array,  # [N, d]
+    resident_ids: jax.Array,  # [S] slot -> physical slab row
+    act: str = "silu",
+) -> jax.Array:
+    """Oracle for the int8-store resident variant: dequantize the gathered
+    slabs (per-output-column scales — exact modulo the int8 grid) and run
+    the dense batched FFN."""
+    ids = resident_ids
+    wi_d = wi[ids].astype(jnp.float32) * wi_scale[ids][:, None, :]
+    wo_d = wo[ids].astype(jnp.float32) * wo_scale[ids][:, None, :]
+    wg_d = None
+    if wg is not None:
+        wg_d = wg[ids].astype(jnp.float32) * wg_scale[ids][:, None, :]
+    return expert_mlp_ref(x, wi_d, wg_d, wo_d, act)

@@ -32,6 +32,13 @@ visible iff ``0 <= kp <= qpos`` (and ``kp > qpos - window``).  Per-slot
 ``ln`` and per-query ``qpos`` arrive as one int32 operand
 ``posinfo[B, 1+C, 1]`` (column 0 = ln, rest = qpos) so the trace depends
 only on shapes.
+
+Quantized pools: with ``pool_ks``/``pool_vs`` sidecars the k/v pools hold
+int8 codes and each fetched page is dequantized *in VMEM* inside the
+online-softmax sweep — the per-token f16 scale row rides the same
+``tab[b, j]`` scalar-prefetched indirection as the page itself, so HBM
+traffic per page is the int8 bytes plus a [ps] f16 row (~0.52x the bf16
+page) and no dequantized copy ever exists outside VMEM.
 """
 
 from __future__ import annotations
@@ -46,11 +53,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _pa_kernel(
+def _pa_body(
     table_ref,  # [B, pps] int32 (scalar prefetch, SMEM)
     q_ref,  # [1, 1, rows, hd]
     k_ref,  # [1, ps, 1, hd] one physical page, one kv head
     v_ref,  # [1, ps, 1, hd]
+    ks_ref,  # [1, ps] f16 per-token scale sidecar | None (dense pool)
+    vs_ref,  # [1, ps] | None
     pos_ref,  # [1, 1+C, 1] int32 (ln, then C query positions)
     o_ref,  # [1, 1, rows, hd]
     m_scr,  # [rows, 1] fp32
@@ -91,6 +100,12 @@ def _pa_kernel(
         q = q_ref[0, 0]  # [rows, hd]
         k = k_ref[0, :, 0, :]  # [ps, hd]
         v = v_ref[0, :, 0, :]
+        if ks_ref is not None:
+            # quantized pool: dequantize the fetched page in VMEM — the
+            # per-token f16 sidecar broadcasts over the head dim
+            q = q.astype(jnp.float32)
+            k = k.astype(jnp.float32) * ks_ref[0].astype(jnp.float32)[:, None]
+            v = v.astype(jnp.float32) * vs_ref[0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # [rows, ps]
@@ -115,6 +130,18 @@ def _pa_kernel(
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _pa_kernel(table_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+               m_scr, l_scr, acc_scr, **kw):
+    _pa_body(table_ref, q_ref, k_ref, v_ref, None, None, pos_ref, o_ref,
+             m_scr, l_scr, acc_scr, **kw)
+
+
+def _pa_kernel_quant(table_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     pos_ref, o_ref, m_scr, l_scr, acc_scr, **kw):
+    _pa_body(table_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, o_ref,
+             m_scr, l_scr, acc_scr, **kw)
+
+
 def paged_attention_pallas(
     q_r,  # [B, KV, rows, hd] with rows = C*G, row = c*G + g
     pool_k,  # [P+1, ps, KV, hd] (row P = garbage page)
@@ -122,6 +149,8 @@ def paged_attention_pallas(
     table,  # [B, pps] int32
     posinfo,  # [B, 1+C, 1] int32
     *,
+    pool_ks=None,  # [P+1, ps] f16 per-token scale sidecar (quantized pool)
+    pool_vs=None,
     window=None,
     interpret=False,
 ):
@@ -132,20 +161,31 @@ def paged_attention_pallas(
     G = rows // C
     garbage = pool_k.shape[0] - 1
     scale = 1.0 / (hd ** 0.5)
+    quantized = pool_ks is not None
 
     kernel = functools.partial(
-        _pa_kernel, scale=scale, ps=ps, pps=pps, C=C, G=G,
+        _pa_kernel_quant if quantized else _pa_kernel,
+        scale=scale, ps=ps, pps=pps, C=C, G=G,
         window=window, garbage=garbage,
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd), lambda b, h, j, tab: (b, h, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+    ]
+    args = [q_r, pool_k, pool_v]
+    if quantized:
+        # the sidecars ride the same scalar-prefetched page indirection as
+        # the pools: one [ps] f16 row per fetched page
+        in_specs.append(pl.BlockSpec((1, ps), lambda b, h, j, tab: (tab[b, j], 0)))
+        in_specs.append(pl.BlockSpec((1, ps), lambda b, h, j, tab: (tab[b, j], 0)))
+        args += [pool_ks, pool_vs]
+    in_specs.append(pl.BlockSpec((1, C + 1, 1), lambda b, h, j, tab: (b, 0, 0)))
+    args.append(posinfo)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KV, pps),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd), lambda b, h, j, tab: (b, h, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
-            pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
-            pl.BlockSpec((1, C + 1, 1), lambda b, h, j, tab: (b, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rows, hd), lambda b, h, j, tab: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((rows, 1), jnp.float32),
@@ -158,4 +198,4 @@ def paged_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, rows, hd), q_r.dtype),
         interpret=interpret,
-    )(table.astype(jnp.int32), q_r, pool_k, pool_v, posinfo)
+    )(table.astype(jnp.int32), *args)

@@ -34,6 +34,8 @@ def paged_attention(
     lengths: jax.Array,  # [B] int32 ring anchor (last written position)
     *,
     window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [P+1, ps] f16 (quantized pool)
+    v_scale: Optional[jax.Array] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     interpret = resolve_interpret(interpret)
@@ -51,6 +53,7 @@ def paged_attention(
     )[..., None]
     o = paged_attention_pallas(
         q_r, pool_k, pool_v, table, posinfo,
+        pool_ks=k_scale, pool_vs=v_scale,
         window=window, interpret=interpret,
     )
     return (

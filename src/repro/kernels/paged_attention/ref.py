@@ -23,6 +23,11 @@ Masking matches ``models.attention.chunk_attention`` bit for bit: ring
 entry ``e`` holds positions ``lengths - ((lengths - (e*ps + i)) mod W)``
 (``kvcache.ring_key_positions``), a key is visible iff ``0 <= kp <= qpos``
 and, with a sliding window, ``kp > qpos - window``.
+
+Quantized pools (``k_scale``/``v_scale`` given): the k/v leaves hold int8
+codes and each gathered page is dequantized in registers — one f16 scale
+per token row (``kvcache.quantize_kv_tokens``) — before the score and
+value einsums, mirroring exactly the fused in-VMEM dequant of the kernel.
 """
 
 from __future__ import annotations
@@ -44,6 +49,8 @@ def paged_attention_ref(
     lengths: jax.Array,  # [B] int32 ring anchor (position of the last write)
     *,
     window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [P+1, ps] f16 per-token sidecar
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     B, C, H, hd = q.shape
     ps, KV = pool_k.shape[1], pool_k.shape[2]
@@ -61,6 +68,15 @@ def paged_attention_ref(
         phys = table[:, e]  # [B]
         k_page = pool_k[phys]  # [B, ps, KV, hd]
         v_page = pool_v[phys]
+        if k_scale is not None:
+            # quantized pool: dequantize the gathered page in registers —
+            # one f16 scale per token row, shared across heads and head dim
+            k_page = k_page.astype(jnp.float32) * (
+                k_scale[phys].astype(jnp.float32)[:, :, None, None]
+            )
+            v_page = v_page.astype(jnp.float32) * (
+                v_scale[phys].astype(jnp.float32)[:, :, None, None]
+            )
         slot = e * ps + jnp.arange(ps, dtype=jnp.int32)[None, :]  # [1, ps]
         kp = ln - jnp.mod(ln - slot, W)  # [B, ps]
         valid = kp[:, None, :] <= qpos[:, :, None]  # [B, C, ps]

@@ -1,0 +1,9 @@
+from repro.kernels.quant.ops import dequantize_rows, quantize_rows
+from repro.kernels.quant.ref import dequantize_rows_ref, quantize_rows_ref
+
+__all__ = [
+    "quantize_rows",
+    "dequantize_rows",
+    "quantize_rows_ref",
+    "dequantize_rows_ref",
+]

@@ -1,0 +1,93 @@
+"""Per-row int8 quantize/dequantize Pallas kernels.
+
+Both kernels block over rows only (the full row stays in VMEM — the
+reduction axis of the scale is the minor axis, so one block sees one
+row's maxabs whole).  Grid: ``(rows / block_rows,)``.
+
+The quantizer emits the int8 codes *and* the fp32 per-row scale in one
+pass; the dequantizer is the fused-consumer building block (multiply the
+int8 tile by its broadcast scale in VMEM) packaged standalone so parity
+tests can pin the exact dequant arithmetic the paged-attention and
+expert-MLP kernels inline.
+
+fp8 mode has no kernel: its bitcast snapping is a storage trick, not a
+compute shape worth a Pallas body — ``ops.py`` routes it to the ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SCALE_FLOOR = 1e-8
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # [br, n]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax / 127.0, SCALE_FLOOR)
+    q_ref[...] = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    s_ref[...] = s.astype(s_ref.dtype)
+
+
+def _dequantize_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # [br, n]
+    s = s_ref[...].astype(jnp.float32)  # [br, 1]
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+def _row_block(rows: int, block_rows: int) -> int:
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    return max(br, 1)
+
+
+def quantize_rows_pallas(
+    x: jax.Array,  # [rows, n]
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    rows, n = x.shape
+    br = _row_block(rows, block_rows)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, n), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((br, n), lambda r: (r, 0)),
+            pl.BlockSpec((br, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, n), jnp.int8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_rows_pallas(
+    q: jax.Array,  # [rows, n] int8
+    scale: jax.Array,  # [rows, 1]
+    *,
+    dtype=jnp.bfloat16,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    rows, n = q.shape
+    br = _row_block(rows, block_rows)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, n), lambda r: (r, 0)),
+            pl.BlockSpec((br, 1), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), dtype),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,65 @@
+"""Public wrappers for the per-row quantize/dequantize primitives.
+
+``interpret=None`` (the default) resolves per backend: compiled on TPU,
+interpreted elsewhere (CPU validation) — an explicit bool forces it.
+``int8`` runs the Pallas kernel; ``fp8`` (fp8-shaped, int8-storage) is a
+bitcast trick with no kernel body and routes to the jnp ref.
+
+Inputs of any rank are accepted; rows are all leading axes flattened, the
+scale comes back ``[..., 1]``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import resolve_interpret
+from repro.kernels.quant.kernel import (
+    dequantize_rows_pallas,
+    quantize_rows_pallas,
+)
+from repro.kernels.quant.ref import dequantize_rows_ref, quantize_rows_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def quantize_rows(
+    x: jax.Array,  # [..., n]
+    *,
+    mode: str = "int8",
+    interpret: Optional[bool] = None,
+):
+    """Per-row quantization: ``(q int8 [..., n], scale fp32 [..., 1])``."""
+    interpret = resolve_interpret(interpret)
+    shape = x.shape
+    if mode != "int8":
+        return quantize_rows_ref(x, mode=mode)
+    q, s = quantize_rows_pallas(
+        x.reshape(-1, shape[-1]), interpret=interpret
+    )
+    return q.reshape(shape), s.reshape(shape[:-1] + (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "dtype", "interpret"))
+def dequantize_rows(
+    q: jax.Array,  # [..., n] int8
+    scale: jax.Array,  # [..., 1]
+    *,
+    mode: str = "int8",
+    dtype=jnp.bfloat16,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    shape = q.shape
+    if mode != "int8":
+        return dequantize_rows_ref(q, scale, mode=mode, dtype=dtype)
+    out = dequantize_rows_pallas(
+        q.reshape(-1, shape[-1]),
+        scale.astype(jnp.float32).reshape(-1, 1),
+        dtype=dtype,
+        interpret=interpret,
+    )
+    return out.reshape(shape)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for the per-row quantize/dequantize primitives.
+
+Two storage modes, both int8 on the wire / in HBM:
+
+  * ``int8`` — symmetric range quantization: ``scale = maxabs / 127`` per
+    row, ``q = clip(round(x / scale), -127, 127)``.  The mode the engines
+    and the Pallas kernels use.
+  * ``fp8``  — fp8-shaped, int8-storage: values are snapped to the
+    ``float8_e4m3fn`` grid (``scale = maxabs / 448`` so the row spans the
+    fp8 dynamic range) and the fp8 bit pattern is stored via an int8
+    bitcast.  Same bytes as ``int8`` but a relative-precision ladder
+    instead of a uniform grid — reference/ops only (no Pallas path).
+
+The scale is computed in fp32 and *rounded to the requested storage dtype
+before quantizing*, so dequantization with the stored scale is exactly the
+inverse the quantizer saw — whatever sidecar dtype a consumer picks (the
+KV pool and the boundary codec store ``float16`` sidecars; the kernel
+family default is ``float32``).
+
+Error contract (property-tested): for ``scale_dtype=float32`` the
+per-element int8 error is at most ``scale / 2`` (round-to-nearest), rows
+of zeros roundtrip to exact zeros, and scaling a row by ``c > 0`` scales
+its quantization scale by exactly ``c`` modulo fp32 rounding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FP8_MAX = 448.0  # float8_e4m3fn finite max
+SCALE_FLOOR = 1e-8  # all-zero rows: keep the divide finite, q stays 0
+
+
+def quantize_rows_ref(
+    x: jax.Array,  # [..., n]
+    *,
+    mode: str = "int8",
+    scale_dtype=jnp.float32,
+):
+    """Per-row quantization over the last axis.
+
+    Returns ``(q int8 [..., n], scale scale_dtype [..., 1])`` such that
+    ``dequantize_rows_ref(q, scale, mode=mode)`` reconstructs ``x`` within
+    the mode's grid error.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    div = 127.0 if mode == "int8" else FP8_MAX
+    scale = jnp.maximum(amax / div, SCALE_FLOOR).astype(scale_dtype)
+    s = scale.astype(jnp.float32)
+    if mode == "int8":
+        q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    elif mode == "fp8":
+        f8 = (xf / s).astype(jnp.float8_e4m3fn)
+        q = jax.lax.bitcast_convert_type(f8, jnp.int8)
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    return q, scale
+
+
+def dequantize_rows_ref(
+    q: jax.Array,  # [..., n] int8
+    scale: jax.Array,  # [..., 1]
+    *,
+    mode: str = "int8",
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    if mode == "int8":
+        xf = q.astype(jnp.float32)
+    elif mode == "fp8":
+        xf = jax.lax.bitcast_convert_type(q, jnp.float8_e4m3fn).astype(
+            jnp.float32
+        )
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    return (xf * scale.astype(jnp.float32)).astype(dtype)

@@ -427,6 +427,8 @@ def paged_chunk_attention(
     lengths: jax.Array,  # [B] int32 ring anchor (last written position)
     *,
     window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [P+1, ps] f16 sidecar (int8 pool)
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Attention straight off the page pool: page-table lookup, ring-position
     masking (``kvcache.ring_key_positions`` semantics), and online-softmax
@@ -434,7 +436,9 @@ def paged_chunk_attention(
     ``paged_gather`` ring view is ever materialized.  Numerically the masked
     softmax of :func:`chunk_attention` over the gathered ring (exact in the
     score set; online-softmax reassociation only), which survives as the
-    test oracle."""
+    test oracle.  With ``k_scale``/``v_scale`` the pools hold int8 codes and
+    both implementations dequantize the fetched pages in place (VMEM /
+    registers) — no dense-dtype copy of the pool is ever materialized."""
     impl = _PAGED_ATTN_IMPL or (
         "kernel" if jax.default_backend() == "tpu" else "ref"
     )
@@ -442,12 +446,14 @@ def paged_chunk_attention(
         from repro.kernels.paged_attention.ops import paged_attention
 
         return paged_attention(
-            q, pool_k, pool_v, table, q_positions, lengths, window=window
+            q, pool_k, pool_v, table, q_positions, lengths, window=window,
+            k_scale=k_scale, v_scale=v_scale,
         )
     from repro.kernels.paged_attention.ref import paged_attention_ref
 
     return paged_attention_ref(
-        q, pool_k, pool_v, table, q_positions, lengths, window=window
+        q, pool_k, pool_v, table, q_positions, lengths, window=window,
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -459,12 +465,15 @@ def paged_decode_attention(
     lengths: jax.Array,  # [B] int32 position of the current (just-written) token
     *,
     window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Single-token decode against the page pool: the C=1 special case of
     :func:`paged_chunk_attention` (the query sits at ``lengths``, which is
     also the ring anchor)."""
     return paged_chunk_attention(
-        q, pool_k, pool_v, table, lengths[:, None], lengths, window=window
+        q, pool_k, pool_v, table, lengths[:, None], lengths, window=window,
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 

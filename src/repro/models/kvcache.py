@@ -419,31 +419,93 @@ class PagePool:
         return perm
 
 
+KV_SCALE_DTYPE = jnp.float16  # per-token sidecar: f16 keeps the page <= 0.55x
+KV_SCALE_FLOOR = 1e-8  # all-zero tokens: finite divide, q stays 0
+
+
 def init_paged_blocks(cfg, n_blocks: int, num_pages: int, page_size: int,
-                      dtype=jnp.bfloat16) -> Dict:
+                      dtype=jnp.bfloat16, *, quantized: bool = False) -> Dict:
     """Paged KV storage for ``n_blocks`` stacked block repeats of an
     attention-only pattern: per position, ``k``/``v`` leaves shaped
     ``[n_blocks, num_pages + 1, page_size, KV, hd]`` (last row = garbage
-    page)."""
+    page).
+
+    With ``quantized=True`` the k/v leaves store int8 codes and each
+    position additionally carries ``k_scale``/``v_scale`` sidecar leaves
+    ``[n_blocks, num_pages + 1, page_size]`` (float16) — one scale per
+    written token, shared across KV heads and head dim.  The sidecars ride
+    the same pytree as the pools, so spill/restore, defrag, and tier
+    re-splits move them with their pages for free.
+    """
     assert pattern_is_pageable(cfg), "paged storage needs an attn-only pattern"
     KV, hd = cfg.num_kv_heads, cfg.head_dim
+    if quantized:
+        dtype = jnp.int8
     blocks: Dict[str, Dict] = {}
     for i, _spec in enumerate(cfg.layer_pattern):
-        blocks[f"pos{i}"] = {
+        entry = {
             "k": jnp.zeros((n_blocks, num_pages + 1, page_size, KV, hd), dtype),
             "v": jnp.zeros((n_blocks, num_pages + 1, page_size, KV, hd), dtype),
         }
+        if quantized:
+            entry["k_scale"] = jnp.zeros(
+                (n_blocks, num_pages + 1, page_size), KV_SCALE_DTYPE
+            )
+            entry["v_scale"] = jnp.zeros(
+                (n_blocks, num_pages + 1, page_size), KV_SCALE_DTYPE
+            )
+        blocks[f"pos{i}"] = entry
     return blocks
 
 
 def paged_block_bytes(blocks: Dict) -> int:
     """Bytes one physical page occupies across all of a tier's block leaves
-    (the unit ``kv_bytes_*`` metrics are denominated in)."""
+    (the unit ``kv_bytes_*`` metrics are denominated in).  Scale sidecars
+    count toward their page, so quantized pools meter honestly."""
     total = 0
     for leaf in jax.tree.leaves(blocks):
         if leaf.ndim >= 2 and leaf.shape[0] > 0:
             total += leaf[:, 0].nbytes
     return total
+
+
+def dense_page_bytes(cfg, n_blocks: int, page_size: int, dtype=None) -> int:
+    """Bytes one physical page would occupy at the *dense* activation dtype
+    (``cfg.dtype`` unless overridden), across every pattern position — the
+    exact dense counterpart of ``paged_block_bytes`` and the denominator of
+    the ``kv_bytes_dense_equiv`` / ``attn_bytes_dense_step`` baselines,
+    which must not shrink when the stored pool is quantized."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else jnp.dtype(dtype)
+    return (
+        2 * len(cfg.layer_pattern) * n_blocks * page_size
+        * cfg.num_kv_heads * cfg.head_dim * dtype.itemsize
+    )
+
+
+# -- per-token KV quantization (pool storage codec) --------------------------
+
+
+def quantize_kv_tokens(x: jax.Array):
+    """``[..., KV, hd] -> (q int8 same shape, scale f16 [...])``: one scale
+    per token, shared across KV heads and head dim (the sidecar layout).
+    The scale is rounded to the f16 sidecar dtype *before* quantizing, so
+    dequantization with the stored sidecar is the exact inverse."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-1, -2))
+    scale = jnp.maximum(amax / 127.0, KV_SCALE_FLOOR).astype(KV_SCALE_DTYPE)
+    s = scale.astype(jnp.float32)[..., None, None]
+    q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv_pool(pool: jax.Array, scale: jax.Array,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """``pool [..., ps, KV, hd] int8 + scale [..., ps] -> dense-equivalent
+    pool`` (test oracle; the serving consumers dequantize in VMEM)."""
+    return (
+        pool.astype(jnp.float32)
+        * scale.astype(jnp.float32)[..., None, None]
+    ).astype(dtype)
 
 
 # -- device-side paged reads/writes (pure; used inside jitted stage fns) -----
@@ -478,6 +540,26 @@ def paged_ring_write(pool_k: jax.Array, pool_v: jax.Array, k, v,
     return pool_k, pool_v
 
 
+def paged_ring_write_quant(pool_k, pool_v, pool_ks, pool_vs, k, v,
+                           table: jax.Array, lengths: jax.Array,
+                           page_size: int):
+    """Quantize-on-write variant of :func:`paged_ring_write`: the token's
+    k/v are int8-quantized with one per-token scale each (shared across KV
+    heads and head dim) and both the codes and the f16 scale sidecars are
+    scattered through the page table."""
+    pps = table.shape[1]
+    entry = jnp.mod(lengths // page_size, pps)
+    phys = jnp.take_along_axis(table, entry[:, None], axis=1)[:, 0]
+    off = jnp.mod(lengths, page_size)
+    qk, sk = quantize_kv_tokens(k[:, 0])
+    qv, sv = quantize_kv_tokens(v[:, 0])
+    pool_k = pool_k.at[phys, off].set(qk)
+    pool_v = pool_v.at[phys, off].set(qv)
+    pool_ks = pool_ks.at[phys, off].set(sk)
+    pool_vs = pool_vs.at[phys, off].set(sv)
+    return pool_k, pool_v, pool_ks, pool_vs
+
+
 def paged_write_tokens(pool_k: jax.Array, pool_v: jax.Array, k, v,
                        table: jax.Array, positions: jax.Array,
                        valid: jax.Array, page_size: int):
@@ -493,6 +575,27 @@ def paged_write_tokens(pool_k: jax.Array, pool_v: jax.Array, k, v,
     pool_k = pool_k.at[phys, off].set(k.astype(pool_k.dtype))
     pool_v = pool_v.at[phys, off].set(v.astype(pool_v.dtype))
     return pool_k, pool_v
+
+
+def paged_write_tokens_quant(pool_k, pool_v, pool_ks, pool_vs, k, v,
+                             table: jax.Array, positions: jax.Array,
+                             valid: jax.Array, page_size: int):
+    """Quantize-on-write variant of :func:`paged_write_tokens` (chunked
+    prefill): per-token int8 codes plus f16 scale sidecars, padding rows
+    routed to the garbage page exactly like the dense-dtype path."""
+    pps = table.shape[1]
+    garbage = pool_k.shape[0] - 1
+    entry = jnp.mod(positions // page_size, pps)
+    phys = jnp.take_along_axis(table, entry, axis=1)
+    phys = jnp.where(valid, phys, garbage)
+    off = jnp.mod(positions, page_size)
+    qk, sk = quantize_kv_tokens(k)
+    qv, sv = quantize_kv_tokens(v)
+    pool_k = pool_k.at[phys, off].set(qk)
+    pool_v = pool_v.at[phys, off].set(qv)
+    pool_ks = pool_ks.at[phys, off].set(sk)
+    pool_vs = pool_vs.at[phys, off].set(sv)
+    return pool_k, pool_v, pool_ks, pool_vs
 
 
 # -- tier re-splits over pages ----------------------------------------------

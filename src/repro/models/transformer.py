@@ -317,7 +317,20 @@ def apply_layer_decode(
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == "attn":
         q, k, v = attn.project_qkv(p["attn"], h, cfg, angles)
-        if page_table is not None:
+        if page_table is not None and "k_scale" in cache_entry:
+            # int8 page pool: quantize-on-write, fused dequant in attention
+            kc, vc, ksc, vsc = kvcache.paged_ring_write_quant(
+                cache_entry["k"], cache_entry["v"],
+                cache_entry["k_scale"], cache_entry["v_scale"], k, v,
+                page_table, lengths, page_size,
+            )
+            new_entry["k"], new_entry["v"] = kc, vc
+            new_entry["k_scale"], new_entry["v_scale"] = ksc, vsc
+            o = attn.paged_decode_attention(
+                q, kc, vc, page_table, lengths, window=cfg.sliding_window,
+                k_scale=ksc, v_scale=vsc,
+            )
+        elif page_table is not None:
             kc, vc = kvcache.paged_ring_write(
                 cache_entry["k"], cache_entry["v"], k, v,
                 page_table, lengths, page_size,
@@ -529,13 +542,27 @@ def apply_stack_prefill_chunk(
             ce = cache_entry[f"pos{i}"]
             h = rms_norm(bx, p["norm1"], cfg.norm_eps)
             q, k, v = attn.project_qkv(p["attn"], h, cfg, angles)
-            kc, vc = kvcache.paged_write_tokens(
-                ce["k"], ce["v"], k, v, page_table, positions, valid, page_size
-            )
-            o = attn.paged_chunk_attention(
-                q, kc, vc, page_table, positions, last_pos,
-                window=cfg.sliding_window,
-            )
+            if "k_scale" in ce:
+                # int8 page pool: quantize-on-write + fused dequant
+                kc, vc, ksc, vsc = kvcache.paged_write_tokens_quant(
+                    ce["k"], ce["v"], ce["k_scale"], ce["v_scale"], k, v,
+                    page_table, positions, valid, page_size,
+                )
+                o = attn.paged_chunk_attention(
+                    q, kc, vc, page_table, positions, last_pos,
+                    window=cfg.sliding_window, k_scale=ksc, v_scale=vsc,
+                )
+                entry_out = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+            else:
+                kc, vc = kvcache.paged_write_tokens(
+                    ce["k"], ce["v"], k, v, page_table, positions, valid,
+                    page_size,
+                )
+                o = attn.paged_chunk_attention(
+                    q, kc, vc, page_table, positions, last_pos,
+                    window=cfg.sliding_window,
+                )
+                entry_out = {"k": kc, "v": vc}
             bx = bx + attn.output_proj(p["attn"], o)
             if _has_ffn(spec, cfg):
                 h = rms_norm(bx, p["norm2"], cfg.norm_eps)
@@ -550,7 +577,7 @@ def apply_stack_prefill_chunk(
                 else:
                     y = apply_mlp(p["ffn"], h, cfg.act)
                 bx = bx + y
-            new_entries[f"pos{i}"] = {"k": kc, "v": vc}
+            new_entries[f"pos{i}"] = entry_out
         return bx, new_entries
 
     x, new_blocks = jax.lax.scan(block_fn, x, xs)

@@ -14,7 +14,31 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def element_bytes(dtype) -> int:
+    """Bytes per element of ``dtype`` (a jnp/np dtype, dtype class, or
+    string such as ``"bfloat16"``).  The ONE place serving byte metering
+    resolves element widths — no hardcoded ``* 4`` anywhere — so a stream
+    carrying bf16 / int8 payloads meters half / a quarter of the f32
+    bytes."""
+    return jnp.dtype(dtype).itemsize
+
+
+def payload_nbytes(z) -> int:
+    """Total bytes of a boundary payload: a single array or a tuple of
+    arrays (the quantized boundary codec ships ``(codes, scales)``)."""
+    if isinstance(z, (tuple, list)):
+        return sum(int(p.size) * element_bytes(p.dtype) for p in z)
+    return int(z.size) * element_bytes(z.dtype)
+
+
+def payload_block_until_ready(z):
+    """``block_until_ready`` on a payload that may be a tuple of arrays."""
+    for p in z if isinstance(z, (tuple, list)) else (z,):
+        p.block_until_ready()
 
 
 @dataclass

@@ -120,18 +120,24 @@ def strip_expert_weights(tier_params: Dict, cfg) -> Dict:
 
 
 def init_tier_pages(
-    cfg, split: int, end_pages: int, cloud_pages: int, page_size: int, dtype
+    cfg, split: int, end_pages: int, cloud_pages: int, page_size: int, dtype,
+    *, quantized: bool = False,
 ) -> Tuple[Dict, Dict]:
     """Paged KV storage for the two tiers of a block split: the end pool
     backs blocks ``[0, split)``, the cloud pool ``[split, R)``.  The pools
     may have different capacities (a fleet-shared cloud pool is sized for
     every lane's slots); a replan later moves block rows between the two
-    storages via ``kvcache.resplit_paged_blocks``."""
+    storages via ``kvcache.resplit_paged_blocks``.  ``quantized`` makes
+    both tiers int8 pools with f16 scale sidecars
+    (``kvcache.init_paged_blocks``)."""
     from repro.models import kvcache
 
-    end = kvcache.init_paged_blocks(cfg, split, end_pages, page_size, dtype)
+    end = kvcache.init_paged_blocks(
+        cfg, split, end_pages, page_size, dtype, quantized=quantized
+    )
     cloud = kvcache.init_paged_blocks(
-        cfg, cfg.block_repeat - split, cloud_pages, page_size, dtype
+        cfg, cfg.block_repeat - split, cloud_pages, page_size, dtype,
+        quantized=quantized,
     )
     return end, cloud
 

@@ -127,6 +127,9 @@ class FleetServingEngine:
         expert_dedup_min_freq: Optional[float] = None,  # default 1/E
         admission: str = "priority",  # "priority" | "fifo" (frontend + lanes)
         preemption: bool = True,  # lanes spill low-priority slots under load
+        quantize_kv: bool = False,  # int8 KV pages on every lane
+        quantize_experts: bool = False,  # int8 slab stores + quantized wire
+        quantize_boundary: bool = False,  # int8 boundary payloads
     ):
         n = len(end_profiles)
         if n < 1:
@@ -184,10 +187,15 @@ class FleetServingEngine:
         self.expert_registry: Optional[expertpool.FleetExpertRegistry] = None
         if expert_fleet and pooled:
             n_moe = sum(1 for spec in model.cfg.layer_pattern if spec.moe)
+            # the registry prices peer/cloud wire costs at the *stored* slab
+            # size: a quantized fleet ships int8 slabs, so fetch-vs-dedup
+            # decisions and placement surcharges see the cheaper wire
             self.expert_registry = expertpool.FleetExpertRegistry(
                 n_moe * model.cfg.block_repeat,
                 model.cfg.moe.num_experts,
-                expertpool.expert_slab_bytes(model.cfg),
+                expertpool.expert_slab_bytes(
+                    model.cfg, quantized=quantize_experts
+                ),
                 lan_gbps=expert_peer_gbps,
                 dedup_min_freq=expert_dedup_min_freq,
             )
@@ -228,6 +236,9 @@ class FleetServingEngine:
                     expert_registry=self.expert_registry,
                     admission=admission,
                     preemption=preemption,
+                    quantize_kv=quantize_kv,
+                    quantize_experts=quantize_experts,
+                    quantize_boundary=quantize_boundary,
                 )
             )
 

@@ -123,6 +123,8 @@ from repro.serving.common import (
     StageTimeline,
     TraceCounter,
     VirtualClock,
+    element_bytes,
+    payload_block_until_ready,
 )
 from repro.serving.endcloud import (
     TierPlan,
@@ -216,6 +218,9 @@ class EndCloudServingEngine(SlotEngineBase):
         expert_registry=None,  # fleet-shared expertpool.FleetExpertRegistry
         admission: str = "priority",  # "priority" | "fifo" (see SlotEngineBase)
         preemption: bool = True,  # spill lower-priority slots for a blocked head
+        quantize_kv: bool = False,  # int8 KV pages + f16 per-token scale sidecars
+        quantize_experts: bool = False,  # int8 slab store + per-column scales
+        quantize_boundary: bool = False,  # int8 boundary payload + f16 row scales
     ):
         if not kvcache.pattern_is_pageable(model.cfg):
             raise NotImplementedError(
@@ -250,6 +255,12 @@ class EndCloudServingEngine(SlotEngineBase):
         self.end_state = end_state or DeviceState()
         self.selection_eps = selection_eps
         self.replan_threshold = replan_threshold
+        # int8 second-stage codecs (all off by default: the dense path stays
+        # the exact oracle; each flag quantizes one byte stream — KV pages,
+        # the expert slab store, the pipeline-boundary payload)
+        self.quantize_kv = bool(quantize_kv)
+        self.quantize_experts = bool(quantize_experts)
+        self.quantize_boundary = bool(quantize_boundary)
 
         # paged expert weights: pooled by default for MoE models — the mask
         # derivation below already reads the measured-frequency group
@@ -353,7 +364,7 @@ class EndCloudServingEngine(SlotEngineBase):
         self._end_pages, self._cloud_pages = init_tier_pages(
             self.cfg, self.split,
             self.end_pool.num_pages, self.cloud_pool.num_pages,
-            page_size, dtype,
+            page_size, dtype, quantized=self.quantize_kv,
         )
         self._slot_len = np.zeros((padded_batch,), np.int64)
         self._jobs: Dict[int, _PrefillJob] = {}  # slot -> in-flight prefill
@@ -387,13 +398,22 @@ class EndCloudServingEngine(SlotEngineBase):
             )
             self._s_cap = min(s_cap, E)
             n_layers = len(self._moe_pos) * self.cfg.block_repeat
-            self._slab_bytes = expertpool.expert_slab_bytes(self.cfg)
+            # wire costs, capacity, and metering are all priced at the
+            # *stored* slab size — int8 slabs are cheaper to fetch and more
+            # of them fit the same memory budget; the dense size survives
+            # only as the `_dense` metric baselines
+            self._slab_bytes = expertpool.expert_slab_bytes(
+                self.cfg, quantized=self.quantize_experts
+            )
+            self._slab_bytes_dense = expertpool.expert_slab_bytes(self.cfg)
             self._expert_mem_frac = expert_mem_frac
             n_slabs = expert_slabs or n_layers * self._s_cap
             self.expert_pool = expertpool.ExpertSlabPool(
                 n_slabs, n_layers, E, self._s_cap
             )
-            self._slab_store = expertpool.init_slab_store(self.cfg, n_slabs)
+            self._slab_store = expertpool.init_slab_store(
+                self.cfg, n_slabs, quantized=self.quantize_experts
+            )
             self._expert_prefetch_per_tick = max(1, expert_prefetch_per_tick)
             self._prefetch_queue: List[Tuple[int, int]] = []
             self._expert_ready_s = 0.0  # link-resource cursor for transfers
@@ -676,6 +696,17 @@ class EndCloudServingEngine(SlotEngineBase):
         act = jnp.dtype(cfg.dtype)
         ps = self.page_size
         pooled = self._expert_pooled
+        qb = self.quantize_boundary
+
+        def wire_encode(z):
+            """Second codec stage: int8-quantize the boundary payload (after
+            the low-rank encode when one is configured).  The payload
+            becomes an ``(codes int8, scale f16)`` tuple — the tuple-aware
+            metering/blocking helpers in ``serving.common`` handle it."""
+            return comp.quantize_boundary(z) if qb else z
+
+        def wire_decode(z):
+            return comp.dequantize_boundary(*z, dtype=act) if qb else z
 
         def decode_angles(lengths, B):
             pos = lengths[:, None]
@@ -701,7 +732,7 @@ class EndCloudServingEngine(SlotEngineBase):
                 end_params, x, cfg, topo, angles, pages, lengths,
                 expert_mask=end_mask, page_table=table, page_size=ps,
             )
-            z = comp.encode_1d(codec, x) if compress else x
+            z = wire_encode(comp.encode_1d(codec, x) if compress else x)
             if self._route_stats_enabled:
                 # dense-mask MoE engines measure routing too: the eq. 4
                 # group priority must come from traffic, not natural order
@@ -724,7 +755,7 @@ class EndCloudServingEngine(SlotEngineBase):
                 expert_mask=emask, page_table=table, page_size=ps,
                 expert_resident=eres,
             )
-            z = comp.encode_1d(codec, x) if compress else x
+            z = wire_encode(comp.encode_1d(codec, x) if compress else x)
             stats = {
                 "expert_frac": aux["expert_frac"],
                 "group_frac": aux["group_frac"],
@@ -732,6 +763,7 @@ class EndCloudServingEngine(SlotEngineBase):
             return z, new_pages, stats
 
         def cloud_step(cloud_params, z, pages, table, lengths):
+            z = wire_decode(z)
             angles = decode_angles(lengths, z.shape[0])
             x = comp.decode_1d(codec, z) if compress else z
             x = x.astype(act)
@@ -751,7 +783,7 @@ class EndCloudServingEngine(SlotEngineBase):
                 end_params, x, cfg, topo, angles, pages, table,
                 positions, n_valid, ps, expert_mask=end_mask,
             )
-            z = comp.encode_1d(codec, x) if compress else x
+            z = wire_encode(comp.encode_1d(codec, x) if compress else x)
             return z, new_pages
 
         def end_prefill_chunk_pooled(end_params, tokens, pages, table, start,
@@ -765,10 +797,11 @@ class EndCloudServingEngine(SlotEngineBase):
                 positions, n_valid, ps, expert_mask=emask,
                 expert_resident=eres,
             )
-            z = comp.encode_1d(codec, x) if compress else x
+            z = wire_encode(comp.encode_1d(codec, x) if compress else x)
             return z, new_pages
 
         def cloud_prefill_chunk(cloud_params, z, pages, table, start, n_valid):
+            z = wire_decode(z)
             B, C = z.shape[:2]
             positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
             angles = chunk_angles(positions)
@@ -1076,13 +1109,17 @@ class EndCloudServingEngine(SlotEngineBase):
             self.end_params, tokens, self._end_pages,
             self.end_pool.device_rows([slot]), start, valid, *eargs,
         )
-        z.block_until_ready()
+        payload_block_until_ready(z)
         te = self._stage_seconds("end", v)
         if te is None:
             te = time.perf_counter() - t0
 
-        # meter only the valid rows: padding never crosses the wire
-        nbytes = int(z.dtype.itemsize * int(np.prod(z.shape[2:]))) * v
+        # meter only the valid rows: padding never crosses the wire.  A
+        # quantized boundary is a (codes, scale) tuple — both cross the wire
+        nbytes = sum(
+            int(l.dtype.itemsize * int(np.prod(l.shape[2:]))) * v
+            for l in (z if isinstance(z, tuple) else (z,))
+        )
         t_comm = self.link.record_up(nbytes, self.bw.gbps)
 
         t1 = time.perf_counter()
@@ -1107,7 +1144,8 @@ class EndCloudServingEngine(SlotEngineBase):
         job.pos += v
         if job.pos >= S:
             job.first_tok = int(jnp.argmax(logits[0]))
-            self.link.record_down(4)  # first token back to the end tier
+            # first token id back to the end tier
+            self.link.record_down(element_bytes(jnp.int32))
 
     def _activate_ready_jobs(self):
         """Finished prefill jobs claim their slot at the group's next
@@ -1204,7 +1242,7 @@ class EndCloudServingEngine(SlotEngineBase):
                 self.end_params, tokens, self._end_pages, table, lengths
             )
             stats = None
-        z.block_until_ready()
+        payload_block_until_ready(z)
         te = self._stage_seconds("end", ge - gs)
         if te is None:
             te = time.perf_counter() - t0
@@ -1214,7 +1252,10 @@ class EndCloudServingEngine(SlotEngineBase):
         # meter only active slots' boundary rows: inactive and padding
         # slots' activations never cross the wire (matches the prefill
         # valid-rows metering and the active-only token downlink)
-        per_row = int(z.size // z.shape[0] * z.dtype.itemsize)
+        per_row = sum(
+            int(l.size // l.shape[0] * l.dtype.itemsize)
+            for l in (z if isinstance(z, tuple) else (z,))
+        )
         n_active = int(self._active[gs:ge].sum())
         nbytes = per_row * n_active
         t_comm = self.link.record_up(nbytes, self.bw.gbps)
@@ -1261,7 +1302,7 @@ class EndCloudServingEngine(SlotEngineBase):
         n_active = int(self._active[gs:ge].sum())
         # token ids back to the end tier — only slots that actually decoded
         # (inactive slots send nothing; metering them overcharged the link)
-        self.link.record_down(n_active * 4)
+        self.link.record_down(n_active * element_bytes(jnp.int32))
 
         self._boundary[g] = None
         self._phase[g] = "ready"
@@ -1499,19 +1540,33 @@ class EndCloudServingEngine(SlotEngineBase):
         every step (counted as one sweep read — the gather's extra HBM
         write of the same bytes is not charged, so the comparison is
         conservative; the dense baseline uses the user-visible slot count,
-        matching ``kv_bytes_dense_equiv``)."""
+        matching ``kv_bytes_dense_equiv``).  The dense baseline is priced at
+        the dense page size (``kvcache.dense_page_bytes``) regardless of the
+        stored pool's dtype — quantizing the pool must shrink the numerator,
+        never the denominator."""
         own_cloud = range(self._cloud_base, self._cloud_base + self.max_batch)
         end_pb = kvcache.paged_block_bytes(self._end_pages)
         cloud_pb = kvcache.paged_block_bytes(self._cloud_pages)
+        dense_pb = self._dense_page_bytes()
         return {
             "attn_bytes_paged_step": (
                 self.end_pool.pages_in_use * end_pb
                 + self.cloud_pool.mapped_for(own_cloud) * cloud_pb
             ),
             "attn_bytes_dense_step": (
-                self.request_capacity * self.pages_per_slot * (end_pb + cloud_pb)
+                self.request_capacity * self.pages_per_slot * dense_pb
             ),
         }
+
+    def _dense_page_bytes(self) -> int:
+        """Per-page bytes across both tiers at the dense KV dtype (the
+        stable denominator for the quantized pools' capacity ratio)."""
+        R = self.cfg.block_repeat
+        return kvcache.dense_page_bytes(
+            self.cfg, self.split, self.page_size
+        ) + kvcache.dense_page_bytes(
+            self.cfg, R - self.split, self.page_size
+        )
 
     def _expert_hit_rate(self) -> float:
         """Route-frequency-weighted residency coverage of the current
@@ -1545,6 +1600,7 @@ class EndCloudServingEngine(SlotEngineBase):
         pool = self.expert_pool
         active = self._active_lids()
         sb = self._slab_bytes
+        sbd = self._slab_bytes_dense
         E = self.cfg.moe.num_experts
         n_res_active = sum(pool.resident_count(lid) for lid in active)
         return {
@@ -1556,7 +1612,14 @@ class EndCloudServingEngine(SlotEngineBase):
             "expert_bytes_up": self.expert_bytes_up,
             "expert_bytes_resident": pool.slabs_in_use * sb,
             "expert_bytes_step_resident": n_res_active * sb,
-            "expert_bytes_step_dense": len(active) * E * sb,
+            # the dense sweep baseline holds full-precision weights — it
+            # must not shrink when the slab store is quantized
+            "expert_bytes_step_dense": len(active) * E * sbd,
+            "expert_slab_bytes": sb,
+            "expert_slab_bytes_dense": sbd,
+            # effective capacity: how many stored slabs fit per dense slab
+            "expert_capacity_ratio": sbd / sb,
+            "expert_quantized": float(self.quantize_experts),
             "expert_prefetches": self.n_expert_prefetches,
             "expert_peer_fetches": self.n_expert_peer_fetches,
             "expert_evictions": self.n_expert_evictions,
@@ -1571,6 +1634,7 @@ class EndCloudServingEngine(SlotEngineBase):
         own_cloud = range(self._cloud_base, self._cloud_base + self.max_batch)
         end_pb = kvcache.paged_block_bytes(self._end_pages)
         cloud_pb = kvcache.paged_block_bytes(self._cloud_pages)
+        dense_pb = self._dense_page_bytes()
         in_use = self.end_pool.pages_in_use + self.cloud_pool.mapped_for(own_cloud)
         cap = self.end_pool.num_pages + self.cloud_pool.num_pages
         return {
@@ -1582,11 +1646,17 @@ class EndCloudServingEngine(SlotEngineBase):
                 self.end_pool.peak_in_use * end_pb
                 + self.cloud_pool.peak_in_use * cloud_pb
             ),
-            # the honest pre-refactor baseline: dense rings for the
-            # user-visible slot count (padding slots are this PR's artifact)
+            # the honest pre-refactor baseline: dense rings at the dense
+            # dtype for the user-visible slot count (padding slots and the
+            # quantized pool layout are this repo's artifacts)
             "kv_bytes_dense_equiv": (
-                self.request_capacity * self.pages_per_slot * (end_pb + cloud_pb)
+                self.request_capacity * self.pages_per_slot * dense_pb
             ),
+            "kv_page_bytes": end_pb + cloud_pb,
+            "kv_page_bytes_dense": dense_pb,
+            # effective capacity: how many stored pages fit per dense page
+            "kv_capacity_ratio": dense_pb / (end_pb + cloud_pb),
+            "kv_quantized": float(self.quantize_kv),
         }
 
     def metrics(self) -> Dict[str, float]:
@@ -1601,6 +1671,7 @@ class EndCloudServingEngine(SlotEngineBase):
         return {
             "split": self.split,
             "compressed": self.tiers.compress,
+            "boundary_quantized": float(self.quantize_boundary),
             "n_groups": self.n_groups,
             "bytes_up": self.link.bytes_up,
             "transfers": self.link.transfers,
