@@ -23,7 +23,9 @@ deterministic: identical seeds reproduce identical arrival traces and
 identical percentile metrics.
 
 Report keys per mode/class: ``ttft_p50/p90/p99``, ``tpot_p50/p90/p99``,
-``sustained_tok_s``, ``preemptions``, ``dropped``.
+``sustained_tok_s``, ``preemptions``, ``dropped``; plus the fleet fault
+counters (all zero here — see ``benchmarks.serve_chaos`` for the run
+that exercises them).
 
     PYTHONPATH=src python -m benchmarks.serve_load [--n-requests 1000]
         [--rate-rps R] [--arrival poisson|bursty] [--lanes N]
@@ -54,6 +56,7 @@ from repro.serving.loadgen import (
 )
 
 from benchmarks.fleet_throughput import CLOUD, FLEET_PROFILES
+from benchmarks.serve_chaos import FAULT_KEYS
 
 
 def _build_engine(model, params, *, n_lanes: int, max_batch: int,
@@ -135,6 +138,10 @@ def run(
             "engine_preemptions": m["preemptions"],
             "engine_preempt_restores": m["preempt_restores"],
             "preempt_spill_bytes": m["preempt_spill_bytes"],
+            # fault counters (serve_chaos.FAULT_KEYS): all zero on this
+            # fault-free harness — their presence keeps the two load
+            # benchmarks' report schemas aligned
+            **{k: m[k] for k in FAULT_KEYS},
         }
         assert row["all"]["dropped"] == 0, (
             f"{mode}: dropped requests: {row['all']}"

@@ -424,10 +424,14 @@ class FleetExpertRegistry:
         self._link_gbps: List[Callable[[], float]] = []
         self._book_link: List[Callable[[float, float], float]] = []
         self._freq: List[Optional[np.ndarray]] = []
+        self._alive: List[bool] = []
         self.peer_fetches = 0
         self.peer_bytes = 0
         # (src_lane, dst_lane, wire_seconds) per peer transfer booked
         self.peer_bookings: List[Tuple[int, int, float]] = []
+        # chaos injection: pending peer-fetch failures + fallback counter
+        self._peer_faults = 0
+        self.peer_fault_fallbacks = 0
 
     # -- lanes ----------------------------------------------------------------
 
@@ -458,7 +462,41 @@ class FleetExpertRegistry:
         self._link_gbps.append(link_gbps)
         self._book_link.append(book_link)
         self._freq.append(None)
+        self._alive.append(True)
         return len(self._pools) - 1
+
+    def set_lane_alive(self, lane: int, alive: bool):
+        """Liveness gate for the fleet map: a dead lane's residency is
+        invisible to ``holders``/``pick_source``/``fleet_map``/the load
+        and dedup views, so no in-flight or future slab fetch can name it
+        as a source — transfers picking a source at wire time fall back to
+        a surviving peer or the cloud automatically."""
+        self._alive[lane] = bool(alive)
+
+    def lane_alive(self, lane: int) -> bool:
+        return self._alive[lane]
+
+    def _live_pools(self):
+        return (
+            (i, p) for i, p in enumerate(self._pools) if self._alive[i]
+        )
+
+    def inject_peer_faults(self, count: int):
+        """Chaos hook: the next ``count`` peer slab fetches fail."""
+        if count < 1:
+            raise ValueError(f"count={count} must be >= 1")
+        self._peer_faults += count
+
+    def take_peer_fault(self) -> bool:
+        """Consume one injected peer-fetch failure (called by the lane at
+        transfer time when a peer source was picked): True means this
+        fetch fails and the caller must re-source to the cloud — the copy
+        that is always authoritative and always reachable."""
+        if self._peer_faults > 0:
+            self._peer_faults -= 1
+            self.peer_fault_fallbacks += 1
+            return True
+        return False
 
     def note_freq(self, lane: int, freq: Optional[np.ndarray]):
         """Record a lane's measured route-frequency EMA (the fleet ticks
@@ -470,9 +508,11 @@ class FleetExpertRegistry:
 
     def holders(self, lid: int, e: int, *, exclude: Optional[int] = None
                 ) -> List[int]:
-        """Lanes whose pool currently holds ``(layer, expert)``."""
+        """*Live* lanes whose pool currently holds ``(layer, expert)`` —
+        a crashed lane's residency never appears (see ``set_lane_alive``),
+        so a transfer can never pick a dead holder as its source."""
         return [
-            i for i, p in enumerate(self._pools)
+            i for i, p in self._live_pools()
             if i != exclude and p.table[lid, e] >= 0
         ]
 
@@ -481,7 +521,7 @@ class FleetExpertRegistry:
         with its holders' physical slabs, the max measured frequency across
         holders, and the freshest LRU stamp (introspection / tests)."""
         out: Dict[Tuple[int, int], Dict] = {}
-        for i, p in enumerate(self._pools):
+        for i, p in self._live_pools():
             for lid, e in zip(*np.nonzero(p.table >= 0)):
                 lid, e = int(lid), int(e)
                 ent = out.setdefault(
@@ -501,12 +541,12 @@ class FleetExpertRegistry:
         if not self._pools:
             return 0
         held = np.zeros((self.n_layers, self.num_experts), bool)
-        for p in self._pools:
+        for _i, p in self._live_pools():
             held |= p.table >= 0
         return int(held.sum())
 
     def total_residents(self) -> int:
-        return sum(p.slabs_in_use for p in self._pools)
+        return sum(p.slabs_in_use for _i, p in self._live_pools())
 
     def dedup_ratio(self) -> float:
         """Fleet resident slabs over unique resident (layer, expert)
@@ -660,7 +700,7 @@ class FleetExpertRegistry:
         fleet-aware expert sharding balances across cloud servers."""
         E = self.num_experts
         load = np.zeros((E,))
-        for i, p in enumerate(self._pools):
+        for i, p in self._live_pools():
             any_resident = (p.table >= 0).any(axis=0)  # [E]
             load += self._f_eff(i) * (~any_resident)
         return load

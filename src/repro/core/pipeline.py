@@ -413,6 +413,15 @@ class BandwidthEstimator:
             self._estimate = (1 - self.ewma) * self._estimate + self.ewma * gbps
         return self.gbps
 
+    def set_rate(self, gbps: float) -> float:
+        """Hard rate assignment, bypassing the EWMA.  A *declared* link
+        event (a blackout beginning or ending, chaos injection) is a fact,
+        not a noisy sample — one EWMA observation would move the estimate
+        only ``ewma`` of the way there and leave the replanner chasing the
+        tail of the old rate for many ticks."""
+        self._estimate = gbps
+        return self.gbps
+
     @property
     def gbps(self) -> float:
         return self._estimate if self._estimate is not None else self.nominal_gbps

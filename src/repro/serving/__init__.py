@@ -1,6 +1,13 @@
 from repro.serving.common import LinkStats, Request, StageTimeline, VirtualClock
 from repro.serving.endcloud import EndCloudPipeline
 from repro.serving.engine import ServingEngine
+from repro.serving.faults import (
+    ChaosInjector,
+    FaultEvent,
+    FaultSchedule,
+    HealthMonitor,
+    StallGuard,
+)
 from repro.serving.fleet import FleetServingEngine
 from repro.serving.loadgen import (
     WorkloadClass,
@@ -21,6 +28,11 @@ __all__ = [
     "EndCloudPipeline",
     "EndCloudServingEngine",
     "FleetServingEngine",
+    "FaultEvent",
+    "FaultSchedule",
+    "ChaosInjector",
+    "HealthMonitor",
+    "StallGuard",
     "WorkloadClass",
     "poisson_arrivals",
     "bursty_arrivals",

@@ -60,6 +60,7 @@ class Request:
     finish_time: Optional[float] = None
     seq: int = -1  # submission order stamp (ties within a priority class)
     n_preemptions: int = 0
+    n_migrations: int = 0  # lane-death migrations this request survived
 
     @property
     def done(self) -> bool:
@@ -197,6 +198,25 @@ class StageTimeline:
             self._servers[name] = [[] for _ in range(max(capacity, 1))]
             self.busy_s[name] = 0.0
 
+    def n_servers(self, name: str) -> int:
+        return len(self._servers[name])
+
+    def remove_server(self, name: str):
+        """Drop one server from a multi-server resource (fault injection:
+        a shared cloud server dies).  Work already booked on it stays in
+        ``busy_s``/``makespan_s`` — it happened — but its interval list
+        vanishes, so every future booking queues on the survivors.  The
+        last server cannot be removed: a resource with no servers makes
+        every dependent stage unserveable, which callers must handle as a
+        total outage, not a capacity change."""
+        servers = self._servers[name]
+        if len(servers) <= 1:
+            raise ValueError(
+                f"resource {name!r} has a single server; removing it is a "
+                "total outage, not a capacity reduction"
+            )
+        servers.pop()
+
     @staticmethod
     def _earliest_start(
         intervals: List[Tuple[float, float]], ready_s: float, service_s: float
@@ -327,6 +347,10 @@ class SlotEngineBase:
         self._next_token = np.zeros((max_batch, 1), np.int32)
         self._active = np.zeros((max_batch,), bool)
         self._submit_seq = 0
+        # livelock guard: busy ticks tolerated with no progress before the
+        # run loop raises (see faults.StallGuard; attribute, not ctor arg,
+        # so subclasses/tests tune it without threading a kwarg through)
+        self.stall_limit = 256
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -480,10 +504,45 @@ class SlotEngineBase:
     def step(self) -> int:
         raise NotImplementedError
 
+    def _progress_sig(self) -> tuple:
+        """Progress signature for the livelock guard: admission, decode,
+        and completion all move it.  Subclasses extend with their own
+        monotone counters (prefill chunks, transfers, retries) so slow but
+        real work — a prefetch crawling over a degraded link — never reads
+        as a stall."""
+        gen = sum(
+            len(r.generated) for r in self.slots if r is not None
+        )
+        return (
+            len(self.finished), len(self.waiting),
+            int(self._active.sum()), gen,
+        )
+
+    def stall_diagnostic(self) -> str:
+        """Queue/slot snapshot for the livelock guard's error message
+        (``.`` free, ``i`` installed-inactive, ``A`` actively decoding)."""
+        slots = "".join(
+            "." if r is None else ("A" if self._active[i] else "i")
+            for i, r in enumerate(self.slots)
+        )
+        return (
+            f"waiting={len(self.waiting)} finished={len(self.finished)} "
+            f"slots=[{slots}]"
+        )
+
     def run(self, max_steps: int = 10_000):
-        """Run until all submitted requests finish."""
+        """Run until all submitted requests finish.  A livelock guard
+        watches the progress signature: ``stall_limit`` consecutive busy
+        ticks in which nothing was admitted, decoded, transferred, or
+        retried raise loudly with a queue/slot diagnostic instead of
+        silently spinning to ``max_steps`` and returning partial results
+        that look like success."""
+        from repro.serving.faults import StallGuard
+
+        guard = StallGuard(self.stall_limit)
         for _ in range(max_steps):
             if not self.busy():
                 break
             self.step()
+            guard.note(self._progress_sig(), self.stall_diagnostic)
         return self.finished

@@ -1,0 +1,375 @@
+"""Deterministic serving-side fault injection and the recovery policy knobs.
+
+The training side has had a failure model since the distributed PRs
+(``distributed/fault.py``: step-indexed ``FailureInjector``, ``StepGuard``
+timeouts, elastic re-layout).  This module is the *serving* counterpart,
+built around the serving stack's own notion of time: every fault is an
+event on the engines' ``VirtualClock``/``StageTimeline`` axis, fired by a
+:class:`ChaosInjector` the fleet engine ticks, so a chaos run is exactly
+as deterministic and replayable as a fault-free one — same seed, same
+trace, bit-identical schedule and tokens.
+
+Pieces:
+
+  * :class:`FaultEvent` / :class:`FaultSchedule` — a validated, sorted
+    list of timed events (lane crash/recovery, link blackout / severe
+    degradation / recovery, cloud-server loss, peer-fetch failures,
+    flaky boundary transfers), with a seeded :meth:`FaultSchedule.random`
+    generator for property tests.
+  * :class:`ChaosInjector` — binds a schedule to a fleet engine and fires
+    every event whose time has passed at each engine tick, translating
+    event kinds into the engine's recovery entry points (``fail_lane``,
+    ``recover_lane``, ``set_link_rate``, ``fail_cloud_server``, ...).
+    Keeps a fire log for determinism assertions.
+  * :class:`HealthMonitor` — heartbeat bookkeeping, transfer timeouts,
+    and the bounded exponential backoff policy retries follow
+    (``backoff_s(attempt) = min(base * 2**attempt, cap)``).
+  * :class:`StallGuard` — the livelock guard the run loops use: N
+    consecutive busy ticks with an unchanged progress signature raise
+    loudly with a queue/slot diagnostic instead of silently spinning.
+
+This module is dependency-free (numpy only): the engines import it, never
+the other way around.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultSchedule",
+    "ChaosInjector",
+    "HealthMonitor",
+    "StallGuard",
+]
+
+# The serving fault taxonomy (see docs/architecture.md, "Failure model"):
+#   lane_crash        an end device dies: in-flight work must migrate
+#   lane_recover      a crashed device rejoins, empty and cold
+#   link_blackout     a lane's uplink collapses below the usable floor
+#   link_degrade      a lane's uplink drops severely but stays usable
+#   link_recover      a lane's uplink returns to the given rate
+#   cloud_server_loss one shared cloud server dies (capacity shrinks)
+#   peer_fetch_fail   the next N peer slab fetches fail (re-source to cloud)
+#   transfer_flaky    the next N boundary transfers on a lane need resends
+FAULT_KINDS = (
+    "lane_crash",
+    "lane_recover",
+    "link_blackout",
+    "link_degrade",
+    "link_recover",
+    "cloud_server_loss",
+    "peer_fetch_fail",
+    "transfer_flaky",
+)
+
+_LANE_KINDS = (
+    "lane_crash", "lane_recover",
+    "link_blackout", "link_degrade", "link_recover",
+    "transfer_flaky",
+)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One timed fault.  Frozen and totally ordered so schedules sort
+    deterministically (ties broken by kind, then device)."""
+
+    t_s: float  # fire time on the engines' modeled clock
+    kind: str
+    device: int = -1  # lane id for lane/link events; -1 = not applicable
+    gbps: float = 0.0  # link events: the declared post-event rate
+    count: int = 1  # peer_fetch_fail / transfer_flaky: injected failures
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}"
+            )
+        if self.kind in _LANE_KINDS and self.device < 0:
+            raise ValueError(f"{self.kind} event needs a device id")
+        if self.kind in ("link_degrade", "link_recover") and self.gbps <= 0:
+            raise ValueError(f"{self.kind} event needs a positive gbps")
+        if self.count < 1:
+            raise ValueError(f"count={self.count} must be >= 1")
+
+
+class FaultSchedule:
+    """A validated, time-sorted fault schedule.
+
+    Build one explicitly from events, or draw a seeded random schedule
+    with :meth:`random` (the property tests' generator).  Iterating
+    yields events in fire order.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent]):
+        self.events: List[FaultEvent] = sorted(events)
+        crashed: set = set()
+        for ev in self.events:
+            # a schedule that crashes a crashed lane (or recovers a live
+            # one) is almost always a generator bug; the injector would
+            # no-op it, hiding the mistake — reject it here instead
+            if ev.kind == "lane_crash":
+                if ev.device in crashed:
+                    raise ValueError(
+                        f"lane {ev.device} crashed twice without recovery"
+                    )
+                crashed.add(ev.device)
+            elif ev.kind == "lane_recover":
+                if ev.device not in crashed:
+                    raise ValueError(
+                        f"lane {ev.device} recovered while alive"
+                    )
+                crashed.discard(ev.device)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @classmethod
+    def random(
+        cls,
+        seed: int,
+        *,
+        horizon_s: float,
+        n_lanes: int,
+        nominal_gbps: float = 1.0,
+        n_crashes: int = 1,
+        n_blackouts: int = 1,
+        n_degrades: int = 0,
+        n_peer_faults: int = 0,
+        n_transfer_faults: int = 0,
+        cloud_losses: int = 0,
+        recover_frac: Union[float, Sequence[float]] = (0.1, 0.3),
+    ) -> "FaultSchedule":
+        """Seeded random schedule over ``[0, horizon_s)``.
+
+        Crashes land in the first 60% of the horizon and always recover
+        ``recover_frac`` of the horizon later; blackouts drop a lane's
+        link to ``nominal/1000`` (below any sane blackout floor) and
+        recover to nominal; degrades drop to 30% of nominal and recover.
+        ``n_lanes >= 2`` is required when crashes are drawn — a fleet
+        whose only lane is down cannot advance the virtual clock to the
+        recovery time (the livelock guard would fire, by design).
+        """
+        if n_crashes > 0 and n_lanes < 2:
+            raise ValueError(
+                "crash schedules need >= 2 lanes: with the only lane down "
+                "nothing advances the clock to the recovery event"
+            )
+        rng = np.random.default_rng(seed)
+        lo, hi = (
+            (recover_frac, recover_frac)
+            if np.isscalar(recover_frac) else tuple(recover_frac)
+        )
+        events: List[FaultEvent] = []
+
+        def _window(kind_down: str, kind_up: str, lane: int, **kw):
+            t0 = float(rng.uniform(0.05, 0.6)) * horizon_s
+            dt = float(rng.uniform(lo, hi)) * horizon_s
+            events.append(FaultEvent(t0, kind_down, device=lane, **kw))
+            up_kw = {"gbps": nominal_gbps} if kind_up == "link_recover" else {}
+            events.append(FaultEvent(t0 + dt, kind_up, device=lane, **up_kw))
+
+        for _ in range(n_crashes):
+            _window("lane_crash", "lane_recover", int(rng.integers(n_lanes)))
+        for _ in range(n_blackouts):
+            _window(
+                "link_blackout", "link_recover", int(rng.integers(n_lanes)),
+                gbps=nominal_gbps / 1000.0,
+            )
+        for _ in range(n_degrades):
+            _window(
+                "link_degrade", "link_recover", int(rng.integers(n_lanes)),
+                gbps=0.3 * nominal_gbps,
+            )
+        for _ in range(n_peer_faults):
+            events.append(FaultEvent(
+                float(rng.uniform(0.05, 0.8)) * horizon_s, "peer_fetch_fail",
+                count=int(rng.integers(1, 4)),
+            ))
+        for _ in range(n_transfer_faults):
+            events.append(FaultEvent(
+                float(rng.uniform(0.05, 0.8)) * horizon_s, "transfer_flaky",
+                device=int(rng.integers(n_lanes)),
+                count=int(rng.integers(1, 3)),
+            ))
+        for _ in range(cloud_losses):
+            events.append(FaultEvent(
+                float(rng.uniform(0.05, 0.8)) * horizon_s,
+                "cloud_server_loss",
+            ))
+        return cls(events)
+
+
+class ChaosInjector:
+    """Fires a :class:`FaultSchedule` against a fleet engine on its clock.
+
+    ``bind(engine)`` attaches the injector (the engine ticks it at the top
+    of every ``step``); ``tick`` fires, in order, every not-yet-fired
+    event whose ``t_s`` has passed on ``engine.clock``.  Events whose
+    lane is already in the requested state no-op (the engine's recovery
+    entry points are idempotent), but still land in the fire log — the
+    log is the determinism witness chaos benchmarks compare across runs.
+    """
+
+    def __init__(self, schedule: FaultSchedule, engine=None):
+        self.schedule = schedule
+        self.engine = None
+        self._next = 0
+        self.fired: List[Dict] = []
+        if engine is not None:
+            self.bind(engine)
+
+    def bind(self, engine) -> "ChaosInjector":
+        self.engine = engine
+        engine.chaos = self
+        return self
+
+    @property
+    def pending(self) -> int:
+        return len(self.schedule.events) - self._next
+
+    def tick(self):
+        if self.engine is None:
+            raise RuntimeError("ChaosInjector.tick before bind(engine)")
+        now = self.engine.clock()
+        while self._next < len(self.schedule.events):
+            ev = self.schedule.events[self._next]
+            if ev.t_s > now:
+                break
+            self._next += 1
+            self._fire(ev, now)
+
+    def _fire(self, ev: FaultEvent, now: float):
+        eng = self.engine
+        if ev.kind == "lane_crash":
+            eng.fail_lane(ev.device)
+        elif ev.kind == "lane_recover":
+            eng.recover_lane(ev.device)
+        elif ev.kind in ("link_blackout", "link_degrade", "link_recover"):
+            # a blackout with no declared rate collapses to ~zero (the
+            # floor keeps modeled wire times finite)
+            gbps = ev.gbps if ev.gbps > 0 else 1e-4
+            eng.set_link_rate(ev.device, gbps)
+        elif ev.kind == "cloud_server_loss":
+            eng.fail_cloud_server()
+        elif ev.kind == "peer_fetch_fail":
+            eng.inject_peer_faults(ev.count)
+        elif ev.kind == "transfer_flaky":
+            eng.inject_transfer_faults(ev.device, ev.count)
+        self.fired.append({
+            "t_s": ev.t_s,
+            "t_fired_s": now,
+            "kind": ev.kind,
+            "device": ev.device,
+            "gbps": ev.gbps,
+            "count": ev.count,
+        })
+
+    def fire_log(self) -> List[Dict]:
+        """The fired events in fire order (copy) — compare across repeat
+        runs to assert per-seed determinism."""
+        return [dict(d) for d in self.fired]
+
+
+class HealthMonitor:
+    """Fleet health bookkeeping and the shared retry/backoff policy.
+
+    Heartbeats: the fleet beats every live lane each tick (on the modeled
+    clock); ``suspect`` flags a lane whose last beat is older than
+    ``heartbeat_timeout_s`` — the detection primitive a deployment's
+    failure detector would drive ``fail_lane`` from (the chaos injector
+    declares crashes directly, so tests can compare declared vs detected).
+
+    Backoff: every retried transfer (flaky boundary payloads, failed peer
+    slab fetches) idles ``backoff_s(attempt)`` before resending — bounded
+    exponential, capped at ``backoff_cap_s`` so a long fault window can
+    never push a single retry's delay unbounded.  ``max_transfer_attempts``
+    bounds the attempts themselves; exhausting them raises (a link that
+    flaky is a blackout, and blackouts have their own ladder).
+    """
+
+    def __init__(
+        self,
+        *,
+        heartbeat_timeout_s: float = 1.0,
+        transfer_timeout_s: float = 0.5,
+        backoff_base_s: float = 0.01,
+        backoff_cap_s: float = 0.25,
+        max_transfer_attempts: int = 5,
+    ):
+        if max_transfer_attempts < 1:
+            raise ValueError("max_transfer_attempts must be >= 1")
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.transfer_timeout_s = transfer_timeout_s
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.max_transfer_attempts = max_transfer_attempts
+        self._last_beat: Dict[str, float] = {}
+
+    def beat(self, name: str, now: float):
+        self._last_beat[name] = now
+
+    def last_beat(self, name: str) -> Optional[float]:
+        return self._last_beat.get(name)
+
+    def suspect(self, name: str, now: float) -> bool:
+        """True when ``name`` has been seen but is past its heartbeat
+        timeout (an unseen name is unknown, not suspect)."""
+        last = self._last_beat.get(name)
+        return last is not None and now - last > self.heartbeat_timeout_s
+
+    def suspects(self, now: float) -> List[str]:
+        return [n for n in self._last_beat if self.suspect(n, now)]
+
+    def backoff_s(self, attempt: int) -> float:
+        """Delay before retry ``attempt`` (0-based): bounded exponential."""
+        return min(
+            self.backoff_base_s * (2.0 ** max(attempt, 0)),
+            self.backoff_cap_s,
+        )
+
+
+class StallGuard:
+    """Livelock guard for engine run loops.
+
+    Feed it a hashable progress signature once per busy tick; ``limit``
+    consecutive identical signatures raise ``RuntimeError`` with the
+    engine's diagnostic.  Signatures are built from monotone counters
+    (tokens, chunks, transfers, retries, placements), so "no change"
+    really means the engine did nothing — an engine spinning its wheels
+    fails loudly instead of burning ``max_steps`` and returning an
+    incomplete result that looks like success.
+    """
+
+    def __init__(self, limit: int = 256):
+        if limit < 1:
+            raise ValueError("stall limit must be >= 1")
+        self.limit = limit
+        self._last = None
+        self.stalled_ticks = 0
+
+    def reset(self):
+        self._last = None
+        self.stalled_ticks = 0
+
+    def note(self, sig, diagnostic: Union[str, Callable[[], str]] = ""):
+        if sig == self._last:
+            self.stalled_ticks += 1
+            if self.stalled_ticks >= self.limit:
+                detail = diagnostic() if callable(diagnostic) else diagnostic
+                raise RuntimeError(
+                    f"no progress for {self.stalled_ticks} consecutive busy "
+                    f"ticks (livelock): {detail}"
+                )
+        else:
+            self._last = sig
+            self.stalled_ticks = 0

@@ -58,7 +58,8 @@ from repro.models import kvcache
 from repro.models.kvcache import PagePool
 from repro.models.model import Model
 from repro.serving.common import Request, StageTimeline
-from repro.serving.stream import EndCloudServingEngine
+from repro.serving.faults import HealthMonitor, StallGuard
+from repro.serving.stream import EndCloudServingEngine, _SpillState
 
 __all__ = ["FleetLane", "FleetServingEngine"]
 
@@ -152,6 +153,20 @@ class FleetServingEngine:
         self.waiting: List[Request] = []  # fleet frontend queue (pre-placement)
         self.placed: List[Dict] = []  # placement log: request -> device
         self._submit_seq = 0
+        # fault machinery: one health monitor shared by every lane, chaos
+        # injector bound by ChaosInjector.bind, per-lane liveness, and the
+        # migration park — spill states evacuated off dead lanes waiting to
+        # be handed to whichever surviving lane the request lands on
+        self.health = HealthMonitor()
+        self.chaos = None  # ChaosInjector, when bound
+        self.stall_limit = 256
+        self.lane_alive: List[bool] = [True] * n
+        self._migrating: Dict[str, _SpillState] = {}
+        self.lane_failures = 0
+        self.lane_recoveries = 0
+        self.migrations = 0
+        self.migration_spill_bytes = 0
+        self.cloud_server_failures = 0
 
         # One fleet-wide occupancy clock: per-device end/link resources, one
         # shared multi-server cloud resource every lane's boundaries drain to.
@@ -236,6 +251,7 @@ class FleetServingEngine:
                     expert_registry=self.expert_registry,
                     admission=admission,
                     preemption=preemption,
+                    health=self.health,
                     quantize_kv=quantize_kv,
                     quantize_experts=quantize_experts,
                     quantize_boundary=quantize_boundary,
@@ -281,13 +297,13 @@ class FleetServingEngine:
         # request at the frontend behind running batch work.
         p_best = min(r.priority for r in self.waiting)
         capacity = [
-            max(
+            0 if not self.lane_alive[i] else max(
                 0,
                 lane.free_slots()
                 + lane.preemptible_slots(p_best)
                 - len(lane.waiting),
             )
-            for lane in self.lanes
+            for i, lane in enumerate(self.lanes)
         ]
         if not any(capacity):
             return
@@ -309,11 +325,20 @@ class FleetServingEngine:
             )
         else:
             order = list(range(len(self.waiting)))
+        # A dead lane is priced at infinite load, not just zero capacity:
+        # place_fleet's max_spill baseline compares the cheapest *open*
+        # device against the fleet-wide best, and a corpse with a healthy
+        # link and no load would anchor that baseline forever — every
+        # survivor looks "too poor", nothing places, and a frozen modeled
+        # clock never reaches the corpse's recovery event (livelock).
         assignment, _ = place_fleet(
             tasks,
             [lane.tiers.end_cap for lane in self.lanes],
             self.scheduler,
-            loads=[self._lane_load(lane) for lane in self.lanes],
+            loads=[
+                self._lane_load(lane) if self.lane_alive[i] else float("inf")
+                for i, lane in enumerate(self.lanes)
+            ],
             measured_gbps=[lane.bw.gbps for lane in self.lanes],
             capacity=capacity,
             max_spill=self.max_spill,
@@ -328,6 +353,14 @@ class FleetServingEngine:
                 continue
             # direct dispatch (already validated + stamped at fleet submit;
             # lane.submit would re-stamp submit_time and hide frontend wait)
+            if req.request_id in self._migrating:
+                # migrated off a dead lane: hand its parked spill state to
+                # the destination, which restores it through the ordinary
+                # preemption path (page blocks re-split at *its* split)
+                self.lanes[d]._spilled[req.request_id] = self._migrating.pop(
+                    req.request_id
+                )
+                self.migrations += 1
             self.lanes[d].waiting.append(req)
             self.placed.append(
                 {"request_id": req.request_id, "device": d,
@@ -364,25 +397,65 @@ class FleetServingEngine:
         is ticked first: every lane's measured route-frequency EMA is pushed
         into the fleet map, so de-dup decisions and placement costs this
         tick see fleet-wide measurements."""
+        if self.chaos is not None:
+            self.chaos.tick()
+        now = self.clock()
+        for i, lane in enumerate(self.lanes):
+            if self.lane_alive[i]:
+                self.health.beat(f"lane{i}", now)
         if self.expert_registry is not None:
             for i, lane in enumerate(self.lanes):
-                self.expert_registry.note_freq(i, lane._route_freq)
+                if self.lane_alive[i]:
+                    self.expert_registry.note_freq(i, lane._route_freq)
         self._place()
         emitted = 0
-        for lane in self.lanes:
-            emitted += lane.step()
+        for i, lane in enumerate(self.lanes):
+            if self.lane_alive[i]:
+                emitted += lane.step()
         return emitted
 
     def busy(self) -> bool:
         """Anything left to do anywhere in the fleet?  (Frontend queue,
-        lane queues, in-flight prefill, or active decode.)"""
-        return bool(self.waiting) or any(lane.busy() for lane in self.lanes)
+        parked migrations, lane queues, in-flight prefill, or active
+        decode.)"""
+        return (
+            bool(self.waiting)
+            or bool(self._migrating)
+            or any(lane.busy() for lane in self.lanes)
+        )
+
+    def _progress_sig(self) -> tuple:
+        # every lane contributes (dead ones too, for a stable tuple shape);
+        # placement, migration handoff and fault transitions also count
+        sig = (
+            len(self.placed),
+            len(self.waiting),
+            len(self._migrating),
+            self.lane_failures,
+            self.lane_recoveries,
+        )
+        for lane in self.lanes:
+            sig += lane._progress_sig()
+        return sig
+
+    def stall_diagnostic(self) -> str:
+        lanes = "; ".join(
+            f"lane{i}[{'up' if self.lane_alive[i] else 'DOWN'}] "
+            + lane.stall_diagnostic()
+            for i, lane in enumerate(self.lanes)
+        )
+        return (
+            f"frontend={len(self.waiting)} migrating={len(self._migrating)} "
+            f"cloud_servers={self.cloud_servers} :: {lanes}"
+        )
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        guard = StallGuard(self.stall_limit)
         for _ in range(max_steps):
             if not self.busy():
                 break
             self.step()
+            guard.note(self._progress_sig(), self.stall_diagnostic)
         return self.finished
 
     # -- dynamic conditions (per-device: only that lane replans) --------------
@@ -396,6 +469,98 @@ class FleetServingEngine:
         """Feed one device's state vector (eq. 2); re-derives that lane's
         fleet expert mask and replan-checks it alone."""
         self.lanes[device].update_device_state(state)
+
+    # -- fault injection & recovery -------------------------------------------
+
+    def fail_lane(self, device: int):
+        """Kill one end device: evacuate its in-flight work (decode slots
+        spill through the PR 6 preemption path, prefill jobs restart from
+        scratch), park the spill states for migration, hand every request
+        back to the frontend for re-placement, mark the lane dead so
+        ``_place`` never assigns to it, and invalidate its expert residency
+        in the registry — an in-flight peer fetch naming this lane re-prices
+        against the live map and falls back to the cloud, never a corpse.
+        Idempotent: killing a dead lane is a no-op."""
+        if not self.lane_alive[device]:
+            return
+        lane = self.lanes[device]
+        reqs, spilled, nbytes = lane.evacuate()
+        self._migrating.update(spilled)
+        self.migration_spill_bytes += nbytes
+        self.waiting.extend(reqs)
+        self.waiting.sort(key=lambda r: r.seq)
+        self.lane_alive[device] = False
+        self.lane_failures += 1
+        if self.expert_registry is not None:
+            self.expert_registry.set_lane_alive(device, False)
+        if lane._expert_pooled:
+            # drop the dead device's slab residency: its weights are gone
+            # with the device, and a recovered lane re-fetches cold
+            for lid in range(lane.expert_pool.table.shape[0]):
+                lane.expert_pool.free_layer(lid)
+            lane._prefetch_queue = []
+            lane._expert_dirty = True
+
+    def recover_lane(self, device: int):
+        """Bring a dead end device back: mark it placeable again, restore
+        its registry membership, and cold-restart its expert pool (residency
+        was dropped at death; the first safe point re-plans and re-fetches).
+        Its timeline cursors jump to "now" — a rebooted device cannot have
+        been doing work while dead.  Idempotent on a live lane."""
+        if self.lane_alive[device]:
+            return
+        lane = self.lanes[device]
+        now = self.clock()
+        self.lane_alive[device] = True
+        self.lane_recoveries += 1
+        self.health.beat(f"lane{device}", now)
+        if self.expert_registry is not None:
+            self.expert_registry.set_lane_alive(device, True)
+        if lane._virtual_time:
+            for g in range(lane.n_groups):
+                lane._group_ready_s[g] = max(lane._group_ready_s[g], now)
+        if lane._expert_pooled:
+            lane._expert_ready_s = max(lane._expert_ready_s, now)
+            lane._expert_sync()
+
+    def set_link_rate(self, device: int, gbps: float):
+        """Declare one device's link rate (chaos event or recovery): a hard
+        estimator assignment, entering/leaving the lane's blackout ladder at
+        its next safe point."""
+        self.lanes[device].observe_bandwidth(gbps, hard=True)
+
+    def inject_peer_faults(self, count: int):
+        """Arm ``count`` peer-slab-fetch failures fleet-wide (consumed by
+        whichever lanes fetch from peers next; each falls back to cloud
+        after one backoff)."""
+        if self.expert_registry is None:
+            raise RuntimeError("peer faults need the fleet expert registry")
+        self.expert_registry.inject_peer_faults(count)
+
+    def inject_transfer_faults(self, device: int, count: int):
+        """Arm ``count`` boundary-transfer failures on one device's link."""
+        self.lanes[device].inject_transfer_faults(count)
+
+    def fail_cloud_server(self):
+        """Lose one cloud server: shrink the shared multi-server resource,
+        re-scale every lane's share of the aggregate cloud budget (splits
+        may move at each lane's next safe point), and return the re-sharded
+        expert layout for the survivors (``cloud_expert_shards``; None for
+        dense fleets).  Losing the *last* server is a total outage — raised,
+        not degraded: no lane can serve [split, R) without a cloud tier."""
+        if self.cloud_servers <= 1:
+            raise RuntimeError(
+                "cannot fail the last cloud server: the cloud tier hosts "
+                "[split, R) + LM head for every lane — total outage, not "
+                "graceful degradation"
+            )
+        self.cloud_servers -= 1
+        self.cloud_server_failures += 1
+        self.timeline.remove_server("cloud")
+        share = self.cloud_servers / self.n_devices
+        for lane in self.lanes:
+            lane.set_cloud_share(share)
+        return self.cloud_expert_shards()
 
     # -- introspection --------------------------------------------------------
 
@@ -461,6 +626,23 @@ class FleetServingEngine:
             "preempt_spill_bytes": sum(
                 lane.preempt_spill_bytes for lane in self.lanes
             ),
+            # fault counters (satellite: summed across lanes + fleet-level
+            # migration accounting; zero everywhere on a fault-free run)
+            "lane_failures": self.lane_failures,
+            "lane_recoveries": self.lane_recoveries,
+            "migrations": self.migrations,
+            "migration_restores": sum(
+                lane.n_migration_restores for lane in self.lanes
+            ),
+            "migration_spill_bytes": self.migration_spill_bytes,
+            "transfer_retries": sum(
+                lane.transfer_retries for lane in self.lanes
+            ),
+            "degraded_ticks": sum(lane.degraded_ticks for lane in self.lanes),
+            "link_blackout_s": sum(
+                lane.blackout_seconds() for lane in self.lanes
+            ),
+            "cloud_server_failures": self.cloud_server_failures,
             # fleet-wide paged-KV accounting: per-lane end pools plus the
             # one shared cloud pool (admission anywhere gates on the latter)
             "kv_pages_in_use": kv_in_use,

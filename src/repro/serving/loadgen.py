@@ -178,7 +178,15 @@ def drive(engine, schedule: Sequence[Tuple[float, Request]],
     then move the clock to the timeline makespan.  When the engine drains
     before the next arrival, the clock jumps straight to it (idle modeled
     time costs nothing to simulate).  Returns the schedule's requests.
+
+    A stall guard (``serving.faults.StallGuard``) watches the engine's
+    progress signature *and* the clock: modeled time advancing counts as
+    progress (a slowly-draining degraded lane is not a livelock), but a
+    frozen clock with a wedged engine raises loudly with the engine's
+    queue/slot diagnostic instead of spinning to ``max_ticks``.
     """
+    from repro.serving.faults import StallGuard
+
     clock = engine.clock
     if not isinstance(clock, VirtualClock):
         raise ValueError(
@@ -186,6 +194,7 @@ def drive(engine, schedule: Sequence[Tuple[float, Request]],
             "wall-clock request stamps cannot meet a modeled schedule"
         )
     schedule = sorted(schedule, key=lambda p: p[0])
+    guard = StallGuard(getattr(engine, "stall_limit", 500))
     i = 0
     for _tick in range(max_ticks):
         if i >= len(schedule) and not engine.busy():
@@ -199,6 +208,9 @@ def drive(engine, schedule: Sequence[Tuple[float, Request]],
             i += 1
         engine.step()
         clock.advance_to(engine.timeline.makespan_s)
+        guard.note(
+            (i, clock.now) + engine._progress_sig(), engine.stall_diagnostic
+        )
     else:
         raise RuntimeError(f"drive() hit max_ticks={max_ticks}")
     return [req for _, req in schedule]
@@ -222,7 +234,8 @@ def summarize(requests: Sequence[Request], warmup_s: float = 0.0,
     ``priority`` restricts the report to one SLO class.  Keys:
     ``ttft_p50/p90/p99``, ``tpot_p50/p90/p99`` (seconds),
     ``sustained_tok_s`` (finished tokens over the measured span),
-    ``preemptions``, ``dropped`` (submitted but never finished), ``n``,
+    ``preemptions``, ``migrations``, ``dropped`` (submitted but never
+    finished), ``n``,
     and SLO violation counts against each request's own targets."""
     sel = [
         r for r in requests
@@ -243,6 +256,7 @@ def summarize(requests: Sequence[Request], warmup_s: float = 0.0,
         "finished": len(done),
         "dropped": len(sel) - len(done),
         "preemptions": sum(r.n_preemptions for r in sel),
+        "migrations": sum(r.n_migrations for r in sel),
         "ttft_p50": _pct(ttft, 50), "ttft_p90": _pct(ttft, 90),
         "ttft_p99": _pct(ttft, 99),
         "tpot_p50": _pct(tpot, 50), "tpot_p90": _pct(tpot, 90),

@@ -110,7 +110,12 @@ import numpy as np
 from repro.core import compression as comp
 from repro.core import expertpool
 from repro.core.hardware import DeviceProfile, DeviceState, capability
-from repro.core.pipeline import BandwidthEstimator, PipelinePlan, replan_pipeline
+from repro.core.pipeline import (
+    BandwidthEstimator,
+    PipelinePlan,
+    plan_pipeline_split,
+    replan_pipeline,
+)
 from repro.core.selection import group_priority_from_freq, validate_expert_mask
 from repro.models import attention as attn_mod
 from repro.models import kvcache, transformer
@@ -134,6 +139,7 @@ from repro.serving.endcloud import (
     split_block_params,
     strip_expert_weights,
 )
+from repro.serving.faults import HealthMonitor
 
 __all__ = ["EndCloudServingEngine"]
 
@@ -172,7 +178,9 @@ class _SpillState:
     stream — ring-entry indices are placement-invariant, and attention
     reads pages through the rebuilt table in entry order."""
 
-    __slots__ = ("entries", "blocks", "length", "next_token", "n_pages")
+    __slots__ = (
+        "entries", "blocks", "length", "next_token", "n_pages", "migrated",
+    )
 
     def __init__(self, entries: np.ndarray, blocks: Dict, length: int,
                  next_token: int, n_pages: int):
@@ -181,6 +189,15 @@ class _SpillState:
         self.length = length  # _slot_len at the safe point
         self.next_token = next_token  # pending token (KV not yet written)
         self.n_pages = n_pages  # original worst-case reservation
+        self.migrated = False  # lane-death migration vs in-lane preemption
+
+    @property
+    def nbytes(self) -> int:
+        """Spill payload size at the *stored* representation: a quantized
+        pool's leaves are the int8 codes plus their scale sidecars, so
+        spill/migration byte metering sees the quantized size — spilling
+        never silently re-inflates to the dense equivalent."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.blocks))
 
 
 class EndCloudServingEngine(SlotEngineBase):
@@ -221,6 +238,8 @@ class EndCloudServingEngine(SlotEngineBase):
         quantize_kv: bool = False,  # int8 KV pages + f16 per-token scale sidecars
         quantize_experts: bool = False,  # int8 slab store + per-column scales
         quantize_boundary: bool = False,  # int8 boundary payload + f16 row scales
+        health: Optional[HealthMonitor] = None,  # shared retry/backoff policy
+        blackout_gbps: Optional[float] = None,  # None = 5% of nominal uplink
     ):
         if not kvcache.pattern_is_pageable(model.cfg):
             raise NotImplementedError(
@@ -305,6 +324,24 @@ class EndCloudServingEngine(SlotEngineBase):
 
         self.link = LinkStats()
         self.bw = BandwidthEstimator(self.tiers.end_cap.net_gbps)
+        # -- fault tolerance: transfer retries, link-blackout degradation --
+        # (the fleet shares one HealthMonitor across lanes; standalone
+        # engines get their own with the default policy)
+        self.health = health or HealthMonitor()
+        # below this measured rate the link is *blacked out*: the planner's
+        # comm estimates stop being meaningful and the lane degrades to a
+        # cloud-only plan at the next safe point (see _update_link_health)
+        self.blackout_gbps = (
+            blackout_gbps if blackout_gbps is not None
+            else 0.05 * self.tiers.end_cap.net_gbps
+        )
+        self.link_degraded = False
+        self._blackout_since = 0.0
+        self.link_blackout_s = 0.0  # closed windows; see blackout_seconds()
+        self.degraded_ticks = 0
+        self.transfer_retries = 0
+        self._transfer_faults = 0  # injected boundary-transfer failures
+        self.n_migration_restores = 0
         # ``timeline``/``resources`` let a fleet share one occupancy clock:
         # each device brings its own end/link resources while every device's
         # cloud stage queues on one shared (possibly multi-server) resource.
@@ -636,6 +673,13 @@ class EndCloudServingEngine(SlotEngineBase):
                 src, t_wire = self.expert_registry.pick_source(
                     self._registry_lane, lid, e
                 )
+            if src is not None and self.expert_registry.take_peer_fault():
+                # injected peer-fetch failure: back off once, then re-source
+                # from the cloud — the authoritative store, never the flaky
+                # peer again for this slab
+                self.transfer_retries += 1
+                self._expert_ready_s += self.health.backoff_s(0)
+                src = None
             if src is None:
                 t_wire = self.link.transfer_time(self._slab_bytes, self.bw.gbps)
                 self.expert_bytes_down += self._slab_bytes
@@ -1010,15 +1054,15 @@ class EndCloudServingEngine(SlotEngineBase):
         self._preempt_slot(victim)
         return True
 
-    def _preempt_slot(self, slot: int):
-        """Spill a decoding slot: copy its mapped page rows off both tier
-        storages (merged across tiers in block order — see ``_SpillState``),
-        free the slot and both reservations, and re-queue the request with
-        its spilled KV parked under its request id.  Only called with the
-        slot's group drained, so ``_slot_len``/``_next_token`` are at a
-        token boundary: the pending token's KV is not yet written, exactly
-        the state a fresh activation leaves behind."""
-        req = self.slots[slot]
+    def _spill_slot_state(self, slot: int) -> _SpillState:
+        """Spill mechanics shared by in-lane preemption and lane-death
+        migration: copy the slot's mapped page rows off both tier storages
+        (merged across tiers in block order — see ``_SpillState``), free
+        the slot and both reservations.  Only called with the slot's group
+        drained, so ``_slot_len``/``_next_token`` are at a token boundary:
+        the pending token's KV is not yet written, exactly the state a
+        fresh activation leaves behind.  The caller owns the request's
+        re-queue and the counter bookkeeping."""
         entries_e, phys_e, n_pages = self.end_pool.spill_slot(slot)
         entries_c, phys_c, _ = self.cloud_pool.spill_slot(self._cslot(slot))
         if not np.array_equal(entries_e, entries_c):
@@ -1035,18 +1079,24 @@ class EndCloudServingEngine(SlotEngineBase):
         blocks = jax.tree.map(
             lambda a, b: np.concatenate([a, b], axis=0), end_part, cloud_part
         )
-        self._spilled[req.request_id] = _SpillState(
+        st = _SpillState(
             entries_e, blocks, int(self._slot_len[slot]),
             int(self._next_token[slot, 0]), n_pages,
         )
-        self.preempt_spill_bytes += sum(
-            l.nbytes for l in jax.tree.leaves(blocks)
-        )
-        req.n_preemptions += 1
-        self.n_preemptions += 1
         self.slots[slot] = None
         self._active[slot] = False
         self._slot_len[slot] = 0
+        return st
+
+    def _preempt_slot(self, slot: int):
+        """Spill a decoding slot and re-queue its request with the spilled
+        KV parked under its request id for in-lane restoration."""
+        req = self.slots[slot]
+        st = self._spill_slot_state(slot)
+        self._spilled[req.request_id] = st
+        self.preempt_spill_bytes += st.nbytes
+        req.n_preemptions += 1
+        self.n_preemptions += 1
         self.waiting.append(req)
 
     def _restore_into_slot(self, slot: int, req: Request):
@@ -1076,13 +1126,57 @@ class EndCloudServingEngine(SlotEngineBase):
         self.slots[slot] = req
         self._next_token[slot, 0] = st.next_token
         self._active[slot] = True
-        self.n_preempt_restores += 1
+        if st.migrated:
+            self.n_migration_restores += 1
+            req.n_migrations += 1
+        else:
+            self.n_preempt_restores += 1
         if self._virtual_time:
             # the resumed stream cannot decode before "now"
             g = self._group_of(slot)
             self._group_ready_s[g] = max(
                 self._group_ready_s[g], self.clock.now
             )
+
+    def evacuate(self) -> Tuple[List[Request], Dict[str, _SpillState], int]:
+        """Lane death: spill every in-flight decode slot through the
+        preemption path (KV page blocks are placement-invariant, so a
+        surviving lane with a *different* split restores them bit-exactly),
+        restart in-flight prefill jobs from scratch (their first token is
+        never in ``generated`` before activation, so a re-run is
+        exactly-once clean), and hand everything back to the fleet for
+        re-placement.  In-flight boundaries are dropped — the slot state is
+        still at the pre-step token boundary until the cloud stage lands,
+        so the migrated lane simply recomputes the lost step.  Returns
+        ``(requests in submission order, request_id -> spill state,
+        spilled bytes at stored size)``."""
+        for g in range(len(self._phase)):
+            self._boundary[g] = None
+            self._phase[g] = "ready"
+        spilled: Dict[str, _SpillState] = {}
+        nbytes = 0
+        for slot in range(self.max_batch):
+            req = self.slots[slot]
+            if req is None:
+                continue
+            st = self._spill_slot_state(slot)
+            st.migrated = True
+            spilled[req.request_id] = st
+            nbytes += st.nbytes
+            self.waiting.append(req)
+        for slot in sorted(self._jobs):
+            job = self._jobs.pop(slot)
+            self._release_slot(slot)
+            self.waiting.append(job.req)
+        for rid, st in self._spilled.items():
+            # previously preempted on this lane: its parked KV migrates too
+            st.migrated = True
+            spilled[rid] = st
+            nbytes += st.nbytes
+        self._spilled = {}
+        reqs = sorted(self.waiting, key=lambda r: r.seq)
+        self.waiting = []
+        return reqs, spilled, nbytes
 
     def _advance_prefill(self, job: _PrefillJob):
         """Stream one prompt chunk through end -> link -> cloud, booking the
@@ -1120,7 +1214,7 @@ class EndCloudServingEngine(SlotEngineBase):
             int(l.dtype.itemsize * int(np.prod(l.shape[2:]))) * v
             for l in (z if isinstance(z, tuple) else (z,))
         )
-        t_comm = self.link.record_up(nbytes, self.bw.gbps)
+        t_comm = self._link_transfer(nbytes)
 
         t1 = time.perf_counter()
         logits, self._cloud_pages = self._cloud_prefill_chunk(
@@ -1188,6 +1282,30 @@ class EndCloudServingEngine(SlotEngineBase):
     def busy(self) -> bool:
         return super().busy() or bool(self._jobs)
 
+    def _progress_sig(self) -> tuple:
+        # pipeline stages, prefill chunks, spill/restore churn and retries
+        # all count as forward progress — only a tick that moves *none* of
+        # these is a livelock candidate
+        return super()._progress_sig() + (
+            self.n_stage_steps,
+            self.n_prefill_chunks,
+            self.n_preemptions,
+            self.n_preempt_restores,
+            self.n_migration_restores,
+            self.transfer_retries,
+            self.n_expert_prefetches if self._expert_pooled else 0,
+        )
+
+    def stall_diagnostic(self) -> str:
+        return (
+            super().stall_diagnostic()
+            + f" jobs={sorted(self._jobs)} spilled={len(self._spilled)}"
+            + f" phases={list(self._phase)}"
+            + f" pages_end={self.end_pool.pages_available}"
+            + f" pages_cloud={self.cloud_pool.pages_available}"
+            + f" link_degraded={self.link_degraded}"
+        )
+
     # -- pipelined stepping ---------------------------------------------------
 
     def _group_active(self, g: int) -> bool:
@@ -1215,6 +1333,37 @@ class EndCloudServingEngine(SlotEngineBase):
                 * 1e3
             )
         return gflops / max(rate, 1e-9)
+
+    def _link_transfer(self, nbytes: int) -> float:
+        """Meter one boundary upload, retrying injected transfer failures
+        under the health monitor's bounded exponential backoff.  Every
+        resend crosses the wire again, so the failed attempts' bytes are
+        metered honestly rather than vanishing from the traffic report.
+        Raises after ``max_transfer_attempts`` — a link that eats every
+        retry is a blackout, and wedging silently here is exactly the
+        failure mode the stall guard exists to catch."""
+        total = self.link.record_up(nbytes, self.bw.gbps)
+        attempt = 0
+        while self._transfer_faults > 0:
+            self._transfer_faults -= 1
+            if attempt + 1 >= self.health.max_transfer_attempts:
+                raise RuntimeError(
+                    f"boundary transfer failed {attempt + 1} times "
+                    f"(max_transfer_attempts="
+                    f"{self.health.max_transfer_attempts}); link presumed dead"
+                )
+            total += self.health.backoff_s(attempt)
+            total += self.link.record_up(nbytes, self.bw.gbps)
+            self.transfer_retries += 1
+            attempt += 1
+        return total
+
+    def inject_transfer_faults(self, count: int):
+        """Arm ``count`` boundary-transfer failures: each upcoming upload
+        consumes pending faults one per attempt, retrying with backoff."""
+        if count < 1:
+            raise ValueError(f"count must be >= 1, got {count}")
+        self._transfer_faults += count
 
     def _run_end_stage(self, g: int):
         gs, ge = self._group_slices[g]
@@ -1258,7 +1407,7 @@ class EndCloudServingEngine(SlotEngineBase):
         )
         n_active = int(self._active[gs:ge].sum())
         nbytes = per_row * n_active
-        t_comm = self.link.record_up(nbytes, self.bw.gbps)
+        t_comm = self._link_transfer(nbytes)
         if self._expert_pooled:
             # per-lane routed-token weight for the fleet's expert_hit_rate
             # (tokens that actually exercised the pooled end tier)
@@ -1324,6 +1473,8 @@ class EndCloudServingEngine(SlotEngineBase):
         end-step and a long prompt's prefill never stalls other groups'
         decode."""
         emitted = 0
+        if self.link_degraded:
+            self.degraded_ticks += 1
         for g in range(self.n_groups):
             if self._phase[g] == "boundary":
                 emitted += self._run_cloud_stage(g)
@@ -1342,11 +1493,83 @@ class EndCloudServingEngine(SlotEngineBase):
 
     # -- dynamic replanning ---------------------------------------------------
 
-    def observe_bandwidth(self, gbps: float):
+    def observe_bandwidth(self, gbps: float, *, hard: bool = False):
         """Feed a link measurement (e.g. from a probe or the paper's TC
-        setup); triggers a replan check against measured conditions."""
-        self.bw.observe_rate(gbps)
-        self._check_replan()
+        setup); triggers a replan check against measured conditions.
+        ``hard=True`` bypasses the EWMA — a *declared* link event (chaos
+        injection, a blackout beginning or ending) is a fact, not a noisy
+        sample, and must take effect at the next safe point rather than
+        after the estimator converges."""
+        if hard:
+            self.bw.set_rate(gbps)
+            # the blackout ladder keys on DECLARED rates only: a soft EWMA
+            # observation — however low — is a measurement the ordinary
+            # replanner answers (e.g. by moving to a compressed interior
+            # split; see benchmarks.fleet_throughput phase 2), not a
+            # declared wire-down event
+            self._update_link_health()
+        else:
+            self.bw.observe_rate(gbps)
+        if not self.link_degraded:
+            self._check_replan()
+
+    def _update_link_health(self):
+        """Degradation ladder, bottom rung: when the estimated link rate
+        falls below ``blackout_gbps``, pin the plan to split 0 (cloud-only;
+        the boundary payload collapses to token ids) instead of letting the
+        planner keep an interior split that would wedge every boundary
+        behind a dead wire.  The planner itself would not choose this —
+        boundary bytes are split-independent, so it sees no gain — which is
+        why the rung is explicit policy, not planning.  On recovery the
+        normal replan path resumes and unwinds the pin at the next safe
+        point."""
+        blacked = self.bw.gbps < self.blackout_gbps
+        if blacked and not self.link_degraded:
+            self.link_degraded = True
+            self._blackout_since = self.clock()
+            plan = plan_pipeline_split(
+                self.tiers.layer_gflops,
+                self.tiers.boundary_bytes,
+                dataclasses.replace(self.tiers.end_cap, net_gbps=self.bw.gbps),
+                self.tiers.cloud_cap,
+                compression_ratio=self.tiers.compression_ratio,
+                alpha=self.tiers.alpha,
+                edge_boundary=True,
+                pin_split=0,
+            )
+            self._pending_plan = plan
+        elif not blacked and self.link_degraded:
+            self.link_degraded = False
+            self.link_blackout_s += max(0.0, self.clock() - self._blackout_since)
+            self._check_replan(force=True)
+
+    def blackout_seconds(self) -> float:
+        """Total wall-clock spent under a blacked-out link, including a
+        still-open window."""
+        open_s = (
+            max(0.0, self.clock() - self._blackout_since)
+            if self.link_degraded
+            else 0.0
+        )
+        return self.link_blackout_s + open_s
+
+    def set_cloud_share(self, share: float):
+        """Re-scale this lane's slice of the total cloud budget (a cloud
+        server died or rejoined).  Per-server service time in
+        ``_stage_seconds`` is unchanged — budget and share scale together —
+        but the planner's view of aggregate cloud capacity shrinks, so the
+        split may move at the next safe point."""
+        old = max(self._cloud_share, 1e-12)
+        self.tiers = dataclasses.replace(
+            self.tiers,
+            cloud_cap=dataclasses.replace(
+                self.tiers.cloud_cap,
+                gflop_budget=self.tiers.cloud_cap.gflop_budget * share / old,
+            ),
+        )
+        self._cloud_share = share
+        if not self.link_degraded:
+            self._check_replan()
 
     def update_device_state(self, end_state: DeviceState):
         """Feed a new end-device state vector (eq. 2): re-derive the end
@@ -1399,6 +1622,12 @@ class EndCloudServingEngine(SlotEngineBase):
         self._check_replan(force=mask_changed)
 
     def _check_replan(self, force: bool = False):
+        if self.link_degraded:
+            # the degradation ladder owns the plan while the link is dark:
+            # the pinned split-0 plan must not be displaced by a replan
+            # computed from a near-zero rate (mask changes still flow
+            # through _pending_mask and the safe point as usual)
+            return
         # planning inputs come from TierPlan so replanning uses exactly the
         # cost model the initial plan was computed with
         plan, changed = replan_pipeline(
@@ -1690,6 +1919,10 @@ class EndCloudServingEngine(SlotEngineBase):
             "preemptions": self.n_preemptions,
             "preempt_restores": self.n_preempt_restores,
             "preempt_spill_bytes": self.preempt_spill_bytes,
+            "migration_restores": self.n_migration_restores,
+            "transfer_retries": self.transfer_retries,
+            "degraded_ticks": self.degraded_ticks,
+            "link_blackout_s": self.blackout_seconds(),
             "replan_events": len(self.replan_events),
             "measured_gbps": self.bw.gbps,
             **self.kv_metrics(),
