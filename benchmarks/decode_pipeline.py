@@ -542,6 +542,139 @@ def run_quant(
     return row
 
 
+def run_spec(
+    *,
+    arch: str = "tinyllama-1.1b",
+    num_layers: int = 4,
+    n_requests: int = 6,
+    max_new_tokens: int = 16,
+    max_batch: int = 4,
+    link_rtt_ms: float = 60.0,
+    spec_k: int = 8,
+    seed: int = 0,
+) -> Dict:
+    """Speculative multi-token decode across a link-bound boundary.
+
+    In the RTT-dominated regime every non-speculative decode round pays
+    one link round trip for one token; the end tier drafting k tokens and
+    the cloud verifying them in one C=k chunk amortizes that round trip
+    over the accepted prefix.  Asserted:
+
+      * greedy tokens bit-identical to the non-speculative engine at
+        splits 0 / mid / R (the rollback-and-correct rule makes parity
+        structural, not statistical — f32 config so argmax ties are
+        deterministic across the chunked and decode paths);
+      * >= 1.4x tokens per boundary round trip at acceptance >= 0.6, and
+        a shorter modeled decode span, in the link-bound scenario;
+      * with the RTT override at 0 (compute-bound), the planner
+        auto-disables speculation (k=1): zero spec rounds, and the step
+        count matches the plain engine exactly — no overhead.
+    """
+    from repro.serving.common import VirtualClock
+
+    cfg = smoke_config(get_config(arch)).replace(
+        num_layers=num_layers, dtype="float32"
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    R = cfg.block_repeat
+    rtt_s = link_rtt_ms * 1e-3
+
+    def drive(split, k, rtt):
+        eng = EndCloudServingEngine(
+            model, params,
+            end_profile=END_SIM, cloud_profile=CLOUD_SIM,
+            max_batch=max_batch, max_len=64, force_split=split,
+            timing="modeled", clock=VirtualClock(),
+            spec_k=k, link_rtt_s=rtt,
+        )
+        reqs = _requests(n_requests, max_new_tokens, seed)
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        m = eng.metrics()
+        toks = {r.request_id: list(r.generated) for r in done}
+        return toks, m
+
+    # -- exact-greedy-parity contract at splits 0 / mid / R ------------------
+    for split in (0, R // 2, R):
+        tok_ref, _ = drive(split, 1, rtt_s)
+        tok_spec, m_s = drive(split, spec_k, rtt_s)
+        assert tok_spec == tok_ref, (
+            f"speculative greedy tokens diverged at split {split}"
+        )
+        assert m_s["spec_rounds"] > 0, (
+            f"link-bound run at split {split} never speculated: {m_s}"
+        )
+
+    # -- link-bound speedup: tokens per boundary round trip ------------------
+    split = R // 2
+    tok_base, m_base = drive(split, 1, rtt_s)
+    tok_spec, m_spec = drive(split, spec_k, rtt_s)
+    tokens = sum(len(t) for t in tok_base.values())
+    base_tpr = tokens / max(m_base["n_stage_steps"], 1)
+    spec_tpr = tokens / max(m_spec["n_stage_steps"], 1)
+    speedup = spec_tpr / max(base_tpr, 1e-12)
+    acceptance = m_spec["spec_acceptance_rate"]
+    assert acceptance >= 0.6, (
+        f"acceptance {acceptance} < 0.6 — the dense draft should be exact"
+    )
+    assert speedup >= 1.4, (
+        f"tokens per boundary round trip improved only x{speedup:.2f} "
+        f"({base_tpr:.2f} -> {spec_tpr:.2f}) at acceptance {acceptance}"
+    )
+    # and the modeled decode span (RTT rides every link occupancy) shrinks
+    assert m_spec["pipelined_total_s"] < m_base["pipelined_total_s"], (
+        m_spec["pipelined_total_s"], m_base["pipelined_total_s"],
+    )
+
+    # -- compute-bound regime: speculation must auto-disable, zero overhead --
+    tok_cb_ref, m_cb_ref = drive(split, 1, 0.0)
+    tok_cb, m_cb = drive(split, spec_k, 0.0)
+    assert m_cb["spec_plan_k"] == 1, m_cb["spec_plan_k"]
+    assert m_cb["spec_rounds"] == 0
+    assert tok_cb == tok_cb_ref
+    assert m_cb["n_stage_steps"] == m_cb_ref["n_stage_steps"], (
+        m_cb["n_stage_steps"], m_cb_ref["n_stage_steps"],
+    )
+
+    row = {
+        "phase": "speculative_decode",
+        "arch": cfg.name,
+        "split": split,
+        "link_rtt_ms": link_rtt_ms,
+        "spec_k_budget": spec_k,
+        "spec_plan_k": m_spec["spec_plan_k"],
+        "spec_k_eff": m_spec["spec_k_eff"],
+        "spec_rounds": m_spec["spec_rounds"],
+        "spec_drafted": m_spec["spec_drafted"],
+        "spec_accepted": m_spec["spec_accepted"],
+        "spec_acceptance_rate": acceptance,
+        "spec_rollbacks": m_spec["spec_rollbacks"],
+        "tokens": tokens,
+        "base_tokens_per_round": round(base_tpr, 4),
+        "spec_tokens_per_round": round(spec_tpr, 4),
+        "spec_speedup": round(speedup, 3),
+        "base_decode_span_s": round(m_base["pipelined_total_s"], 4),
+        "spec_decode_span_s": round(m_spec["pipelined_total_s"], 4),
+        "computebound_plan_k": m_cb["spec_plan_k"],
+        "greedy_parity": 1.0,
+        "n_host_syncs": m_spec["n_host_syncs"],
+        "n_host_syncs_base": m_base["n_host_syncs"],
+    }
+    print(
+        f"[decode_pipeline:spec] rtt={link_rtt_ms}ms k={row['spec_plan_k']} "
+        f"(eff {row['spec_k_eff']}): {row['base_tokens_per_round']} -> "
+        f"{row['spec_tokens_per_round']} tokens/round (x{row['spec_speedup']}) "
+        f"at acceptance {acceptance}, decode span "
+        f"{row['base_decode_span_s']}s -> {row['spec_decode_span_s']}s; "
+        f"compute-bound plan k={row['computebound_plan_k']} (auto-disabled), "
+        f"greedy parity exact at splits 0/{R // 2}/{R}",
+        flush=True,
+    )
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_decode_pipeline.json")
@@ -551,6 +684,10 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=8)
+    # link-bound speculative-decode scenario (bandwidth-constrained round
+    # trips; 0 disables the scenario's RTT and exercises only auto-disable)
+    ap.add_argument("--link-rtt-ms", type=float, default=60.0)
+    ap.add_argument("--spec-k", type=int, default=8)
     args = ap.parse_args()
     rows = [run(
         compression_rank=args.rank,
@@ -568,6 +705,12 @@ def main():
     rows.append(run_quant(
         num_layers=4,  # interior split 2 of R=4 puts the boundary on the wire
         max_batch=min(args.max_batch, 4),
+    ))
+    rows.append(run_spec(
+        num_layers=args.layers,
+        max_batch=min(args.max_batch, 4),
+        link_rtt_ms=args.link_rtt_ms,
+        spec_k=args.spec_k,
     ))
     json.dump(rows, open(args.out, "w"), indent=1)
     # stable machine-readable artifact name for CI collection, regardless

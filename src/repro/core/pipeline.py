@@ -496,3 +496,79 @@ def replan_pipeline(
     if should_replan(refreshed, proposed, rel_threshold=rel_threshold):
         return proposed, True
     return refreshed, False
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode planning (draft-k choice from measured link conditions)
+# ---------------------------------------------------------------------------
+
+
+def plan_spec_k(
+    layer_gflops: Sequence[float],
+    boundary_bytes: float,
+    end_cap: Capability,
+    cloud_cap: Capability,
+    *,
+    split: int,
+    link_rtt_s: float = 0.0,
+    measured_gbps: Optional[float] = None,
+    compression_ratio: float = 1.0,
+    acceptance: float = 0.7,
+    k_max: int = 8,
+    min_gain: float = 1.1,
+) -> int:
+    """Choose the speculative draft length k for the current plan, or 1 to
+    disable speculation entirely.
+
+    A non-speculative decode round pays end-chunk + RTT + boundary transfer
+    + cloud-chunk for ONE token.  A speculative round additionally pays k
+    full-model draft steps on the end tier (the end device re-runs every
+    block under its resident-expert mask, so a draft token costs the whole
+    stack at end-tier rate), then amortizes the round trip over the
+    expected ``1 + acceptance * (k - 1)`` committed tokens.  Speculation
+    only wins when the per-round fixed cost (RTT + launch) dominates the
+    per-token compute — i.e. the link-bound regime.  When compute-bound
+    (drafting k tokens costs more than the round trip it saves) every k > 1
+    rate falls below ``min_gain`` times the k=1 rate and we return 1, which
+    callers treat as "no speculative machinery at all" — zero overhead.
+
+    Candidate k are powers of two up to ``k_max`` (matching the chunked
+    verify step's jit shapes).  ``acceptance`` is the expected draft
+    acceptance probability per position (the runtime feeds back an EMA).
+    """
+    n = len(layer_gflops)
+    if not 0 <= split <= n:
+        raise ValueError(f"split={split} outside [0, {n}]")
+    gbps = measured_gbps if measured_gbps is not None else end_cap.net_gbps
+    end_rate = max(end_cap.gflop_budget * 1e3, 1e-9)
+    cloud_rate = max(cloud_cap.gflop_budget * 1e3, 1e-9)
+    draft_s = sum(layer_gflops) / end_rate
+    end_tok_s = sum(layer_gflops[:split]) / end_rate
+    cloud_tok_s = sum(layer_gflops[split:]) / cloud_rate
+    wire_s_per_tok = (
+        boundary_bytes * compression_ratio * 8.0 / max(gbps * 1e9, 1e-9)
+    )
+
+    def round_s(k: int) -> float:
+        # k=1 is the plain decode round: no draft pass at all.
+        draft = k * draft_s if k > 1 else 0.0
+        return (
+            draft
+            + k * end_tok_s
+            + link_rtt_s
+            + k * wire_s_per_tok
+            + k * cloud_tok_s
+        )
+
+    base_rate = 1.0 / max(round_s(1), 1e-12)
+    best_k, best_rate = 1, base_rate
+    k = 2
+    while k <= k_max:
+        tokens = 1.0 + acceptance * (k - 1)
+        rate = tokens / max(round_s(k), 1e-12)
+        if rate > best_rate:
+            best_k, best_rate = k, rate
+        k *= 2
+    if best_k > 1 and best_rate < min_gain * base_rate:
+        return 1
+    return best_k

@@ -329,6 +329,40 @@ class PagePool:
         """Ensure the entry for position ``pos`` is mapped (decode write)."""
         self._map_entry(slot, (pos // self.page_size) % self.pages_per_slot)
 
+    # -- speculative decode: provisional maps / rollback ----------------------
+
+    def map_tokens(self, slot: int, start_pos: int, end_pos: int) -> List[int]:
+        """Map every ring entry positions ``[start_pos, end_pos)`` touch and
+        return the entries that were *newly* mapped by this call.
+
+        Speculative decode maps a draft chunk's pages provisionally through
+        here; on a mid-chunk rejection the caller hands the returned entries
+        (minus any the accepted prefix still needs) to :meth:`rollback`.
+        Ring-reused entries — already mapped from an earlier wrap — are not
+        returned: they were never provisional and must survive a rollback."""
+        new_entries: List[int] = []
+        if end_pos > start_pos:
+            for pi in range(start_pos // self.page_size,
+                            (end_pos - 1) // self.page_size + 1):
+                entry = pi % self.pages_per_slot
+                if self.table[slot, entry] < 0:
+                    self._map_entry(slot, entry)
+                    new_entries.append(entry)
+        return new_entries
+
+    def rollback(self, slot: int, entries) -> None:
+        """Unmap provisionally-mapped ``entries`` (from :meth:`map_tokens`),
+        returning their physical pages to the free list.  No data moves —
+        rejected draft tokens only ever lived in lazily-mapped pages, so
+        rollback is pure table surgery (the inverse of ``_map_entry``)."""
+        for e in entries:
+            e = int(e)
+            if self.table[slot, e] < 0:
+                raise ValueError(f"slot {slot}: rollback of unmapped entry {e}")
+            self._free.append(int(self.table[slot, e]))
+            self.table[slot, e] = -1
+            self._mapped[slot] -= 1
+
     def free(self, slot: int):
         if not self._reserved[slot]:
             raise ValueError(f"double free of slot {slot}")

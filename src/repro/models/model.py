@@ -171,6 +171,35 @@ class Model:
         logits = transformer.lm_logits(params, cfg, x_last)[:, 0]
         return logits, new_blocks
 
+    def verify_chunk_step(
+        self, params, tokens: jax.Array, page_blocks: Dict,
+        page_table: jax.Array, start: jax.Array, n_valid: jax.Array, *,
+        page_size: int, expert_mask=None, expert_resident=None,
+    ) -> Tuple[jax.Array, Dict]:
+        """Speculative-verify chunk: same chunked forward as
+        :meth:`prefill_chunk_step` (tokens [B, C] written at ``start + i``,
+        rows past ``n_valid`` are padding) but returns the logits of EVERY
+        position -> (logits [B, C, V], new page blocks).  Position i's
+        logits predict the token at ``start + i + 1``, so the caller can
+        compare each drafted token against the model's own next-token
+        choice and find the first rejection.  Padding rows carry garbage
+        logits — callers mask by ``n_valid``."""
+        cfg = self.cfg
+        B, C = tokens.shape
+        positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        pos = positions
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, C))
+        angles = self._angles(pos)
+        x = transformer.embed_inputs(params, cfg, tokens)
+        x, new_blocks = transformer.apply_stack_prefill_chunk(
+            params, x, cfg, self.topo, angles, page_blocks, page_table,
+            positions, n_valid, page_size, expert_mask=expert_mask,
+            expert_resident=expert_resident,
+        )
+        logits = transformer.lm_logits(params, cfg, x)
+        return logits, new_blocks
+
 
 def build_model(cfg: ModelConfig, topo: Optional[Topology] = None) -> Model:
     return Model(cfg, topo or single_device_topology())

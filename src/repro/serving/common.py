@@ -499,6 +499,31 @@ class SlotEngineBase:
                 self._release_slot(slot)
         return n_emitted
 
+    def _harvest_tokens(self, slot: int, tokens) -> int:
+        """Multi-token variant of :meth:`_harvest` for one slot: commit a
+        speculative round's accepted tokens in order.  EOS or the
+        ``max_new_tokens`` budget can land mid-commit — the remaining
+        accepted tokens are discarded (non-speculative decode would never
+        have produced them) and the slot retires exactly as in
+        :meth:`_harvest`."""
+        req = self.slots[slot]
+        if req is None or not tokens:
+            return 0
+        n_emitted = 0
+        for tok in tokens:
+            tok = int(tok)
+            req.generated.append(tok)
+            n_emitted += 1
+            self._next_token[slot, 0] = tok
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.finish_time = self.clock()
+                self.finished.append(req)
+                self.slots[slot] = None
+                self._active[slot] = False
+                self._release_slot(slot)
+                break
+        return n_emitted
+
     # -- stepping ------------------------------------------------------------
 
     def step(self) -> int:

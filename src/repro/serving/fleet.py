@@ -131,6 +131,8 @@ class FleetServingEngine:
         quantize_kv: bool = False,  # int8 KV pages on every lane
         quantize_experts: bool = False,  # int8 slab stores + quantized wire
         quantize_boundary: bool = False,  # int8 boundary payloads
+        spec_k: int = 1,  # speculative draft-length budget per lane (1 = off)
+        link_rtt_s: float = 0.0,  # per-transfer round trip on every lane link
     ):
         n = len(end_profiles)
         if n < 1:
@@ -255,6 +257,8 @@ class FleetServingEngine:
                     quantize_kv=quantize_kv,
                     quantize_experts=quantize_experts,
                     quantize_boundary=quantize_boundary,
+                    spec_k=spec_k,
+                    link_rtt_s=link_rtt_s,
                 )
             )
 
@@ -643,6 +647,18 @@ class FleetServingEngine:
                 lane.blackout_seconds() for lane in self.lanes
             ),
             "cloud_server_failures": self.cloud_server_failures,
+            # speculative decode, summed across lanes (acceptance is the
+            # drafted-weighted rate — exactly accepted/drafted fleet-wide)
+            "spec_rounds": sum(m["spec_rounds"] for m in per_device),
+            "spec_drafted": sum(m["spec_drafted"] for m in per_device),
+            "spec_accepted": sum(m["spec_accepted"] for m in per_device),
+            "spec_acceptance_rate": round(
+                sum(m["spec_accepted"] for m in per_device)
+                / max(sum(m["spec_drafted"] for m in per_device), 1),
+                4,
+            ),
+            "spec_rollbacks": sum(m["spec_rollbacks"] for m in per_device),
+            "n_host_syncs": sum(m["n_host_syncs"] for m in per_device),
             # fleet-wide paged-KV accounting: per-lane end pools plus the
             # one shared cloud pool (admission anywhere gates on the latter)
             "kv_pages_in_use": kv_in_use,

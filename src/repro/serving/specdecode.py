@@ -1,0 +1,213 @@
+"""Speculative multi-token decode across the end-cloud link.
+
+Every non-speculative decode round ships one boundary activation up the
+link and gets one token back — in the link-bound regime (high RTT or thin
+uplink) that round trip, not either tier's compute, caps per-request
+latency.  Speculative decode amortizes it: the end tier drafts ``k``
+tokens with its own cheap forward (the full stack under the resident
+expert mask, against a dense per-slot draft cache), ships ONE boundary
+chunk of k positions, and the cloud verifies all k in a single C=k
+chunked step off the paged KV pool.  The accepted prefix commits its
+lazily-mapped pages; the first rejection rolls the page tables back
+(``PagePool.rollback`` — pure table surgery, no data ever moves) and the
+verify logits at the rejection point emit the corrected token, so greedy
+output is bit-identical to non-speculative decode by construction.
+
+This module holds the engine-independent pieces: the greedy accept rule
+(:func:`accept_greedy`), and the runtime acceptance feedback loop
+(:class:`SpecState`) that tracks a per-engine acceptance EMA and adapts
+the effective draft length within the planner's budget.  The plan-time
+choice of k itself lives in ``core.pipeline.plan_spec_k`` (it is a
+planning decision, made from the same measured bandwidth/stage times the
+split search uses); the scheduling integration lives in
+``serving.stream``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def accept_greedy(drafts: Sequence[int], verify_ids: Sequence[int]) -> Tuple[List[int], int]:
+    """Greedy accept rule for one slot's speculative round.
+
+    A C-position verify chunk consumed the inputs ``[x_0, y_1..y_{C-1}]``
+    (the pending token plus C-1 draft tokens) at context positions
+    ``L..L+C-1``, and row i's argmax ``v_i`` is the model's true next
+    token after consuming the row-i input.
+
+    ``drafts``     — the C-1 draft tokens y_1..y_{C-1} (``drafts[i]`` is
+                     the input the verify chunk saw at row i+1).
+    ``verify_ids`` — the C verify argmaxes v_0..v_{C-1}.
+
+    Returns ``(committed, n_rejected_drafts)`` where ``committed`` is the
+    token sequence the round emits: v_0..v_a for the longest prefix with
+    ``drafts[i] == verify_ids[i]`` for all i < a.  Row 0's verify id is
+    ALWAYS committed (it is the model's real next token after the
+    previously-committed context — exactly what non-speculative decode
+    would have produced), so every round makes progress even at zero
+    acceptance.  At a rejection, v_a itself is the corrected token — the
+    model's choice at the first position where the draft diverged — which
+    is why greedy parity with non-speculative decode is structural, not
+    statistical.
+    """
+    C = len(verify_ids)
+    if len(drafts) != C - 1:
+        raise ValueError(
+            f"drafts/verify length mismatch: {len(drafts)} vs {C} - 1"
+        )
+    if C == 0:
+        return [], 0
+    a = 0
+    while a < C - 1 and int(drafts[a]) == int(verify_ids[a]):
+        a += 1
+    committed = [int(v) for v in verify_ids[: a + 1]]
+    # drafts y_1..y_{C-1}: the first a matched; the rest were wasted
+    # (rejected at position a+1, or discarded past the first rejection).
+    return committed, C - 1 - a
+
+
+@dataclass
+class SpecState:
+    """Acceptance feedback for one engine's speculative decode.
+
+    The planner (``plan_spec_k``) fixes the BUDGET ``k_plan`` from
+    modeled stage/link times; this state adapts the effective draft
+    length ``k_eff`` within it from the measured acceptance EMA —
+    halving below ``lo`` (wasted drafts cost end-tier compute), doubling
+    back above ``hi``.  ``k_eff`` never falls below 2 while the plan
+    allows speculation: dropping to 1 would stop producing acceptance
+    observations and freeze the EMA, so full disable (k=1, zero spec
+    machinery) is exclusively the planner's decision.
+    """
+
+    k_plan: int
+    ema: float = 0.3  # weight of the newest sample
+    lo: float = 0.5
+    hi: float = 0.8
+    acceptance: Optional[float] = None
+    k_eff: int = field(init=False)
+    # cumulative counters (metrics surface)
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    rollbacks: int = 0
+
+    def __post_init__(self) -> None:
+        self.k_eff = max(2, min_pow2_le(self.k_plan)) if self.k_plan > 1 else 1
+
+    def observe_round(self, n_drafted: int, n_accepted: int, *, rolled_back: bool) -> None:
+        """Record one speculative round: ``n_drafted`` draft positions
+        offered beyond the guaranteed first token, ``n_accepted`` of them
+        accepted, ``rolled_back`` when the round unmapped provisional
+        pages (any rejection, or an abort)."""
+        self.rounds += 1
+        self.drafted += n_drafted
+        self.accepted += n_accepted
+        if rolled_back:
+            self.rollbacks += 1
+        if n_drafted > 0:
+            obs = n_accepted / n_drafted
+            if self.acceptance is None:
+                self.acceptance = obs
+            else:
+                self.acceptance = (1 - self.ema) * self.acceptance + self.ema * obs
+            self._adapt()
+
+    def _adapt(self) -> None:
+        if self.k_plan <= 1:
+            return
+        assert self.acceptance is not None
+        if self.acceptance < self.lo and self.k_eff > 2:
+            self.k_eff //= 2
+        elif self.acceptance > self.hi and self.k_eff * 2 <= min_pow2_le(self.k_plan):
+            self.k_eff *= 2
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Lifetime acceptance over drafted positions (0.0 before any)."""
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+    def metrics(self) -> dict:
+        return {
+            "spec_rounds": self.rounds,
+            "spec_drafted": self.drafted,
+            "spec_accepted": self.accepted,
+            "spec_acceptance_rate": round(self.acceptance_rate, 4),
+            "spec_rollbacks": self.rollbacks,
+        }
+
+
+def min_pow2_le(k: int) -> int:
+    """Largest power of two <= k (k >= 1)."""
+    if k < 1:
+        raise ValueError(f"k={k} < 1")
+    p = 1
+    while p * 2 <= k:
+        p *= 2
+    return p
+
+
+def rollback_entries(
+    new_entries: Sequence[int],
+    *,
+    base_len: int,
+    n_commit: int,
+    page_size: int,
+    pages_per_slot: int,
+) -> List[int]:
+    """Which of a round's provisionally-mapped page entries to roll back.
+
+    ``new_entries`` came from ``PagePool.map_tokens(slot, base_len,
+    base_len + n_valid)`` before the verify; after ``n_commit`` tokens
+    committed (1 <= n_commit <= n_valid) the entries covering positions
+    ``[base_len, base_len + n_commit)`` must SURVIVE — they hold accepted
+    KV — and the rest unmap.  Ring arithmetic mirrors ``map_tokens``."""
+    if n_commit <= 0:
+        keep: set = set()
+    else:
+        keep = {
+            (pi % pages_per_slot)
+            for pi in range(
+                base_len // page_size,
+                (base_len + n_commit - 1) // page_size + 1,
+            )
+        }
+    return [e for e in new_entries if e not in keep]
+
+
+def batched_accept(
+    drafts: np.ndarray, verify_ids: np.ndarray, n_valid: np.ndarray
+) -> Tuple[List[List[int]], np.ndarray]:
+    """Vector form of :func:`accept_greedy` over a group.
+
+    ``drafts``     [B, >=k-1] — row b's draft tokens y_1.. (row b's chunk
+                   inputs were ``[x_0, drafts[b, :k-1]]``; a draft scan
+                   may produce extra trailing drafts — only the first
+                   ``n_valid[b] - 1`` participate).
+    ``verify_ids`` [B, k] — per-position verify argmaxes.
+    ``n_valid``    [B]    — rows only verified their first ``n_valid[b]``
+                   positions (per-row cap near max_new_tokens, or 1 for
+                   rows whose draft cache was stale).
+
+    Returns ``(committed_per_row, n_rejected_per_row)``; inactive rows
+    (``n_valid`` 0) commit nothing.
+    """
+    B = verify_ids.shape[0]
+    committed: List[List[int]] = []
+    n_rejected = np.zeros((B,), np.int64)
+    for b in range(B):
+        nv = int(n_valid[b])
+        if nv <= 0:
+            committed.append([])
+            continue
+        toks, rej = accept_greedy(
+            [int(t) for t in drafts[b, : nv - 1]],
+            [int(t) for t in verify_ids[b, :nv]],
+        )
+        committed.append(toks)
+        n_rejected[b] = rej
+    return committed, n_rejected

@@ -114,6 +114,7 @@ from repro.core.pipeline import (
     BandwidthEstimator,
     PipelinePlan,
     plan_pipeline_split,
+    plan_spec_k,
     replan_pipeline,
 )
 from repro.core.selection import group_priority_from_freq, validate_expert_mask
@@ -140,6 +141,12 @@ from repro.serving.endcloud import (
     strip_expert_weights,
 )
 from repro.serving.faults import HealthMonitor
+from repro.serving.specdecode import (
+    SpecState,
+    batched_accept,
+    min_pow2_le,
+    rollback_entries,
+)
 
 __all__ = ["EndCloudServingEngine"]
 
@@ -157,7 +164,9 @@ class _PrefillJob:
     chunks.  The slot is reserved (pages and all) but not active until the
     final chunk lands and the group reaches a drained tick."""
 
-    __slots__ = ("req", "slot", "group", "pos", "first_tok", "ready_s")
+    __slots__ = (
+        "req", "slot", "group", "pos", "first_tok", "first_tok_dev", "ready_s",
+    )
 
     def __init__(self, req: Request, slot: int, group: int):
         self.req = req
@@ -165,6 +174,7 @@ class _PrefillJob:
         self.group = group
         self.pos = 0  # prompt tokens prefilled so far
         self.first_tok: Optional[int] = None  # set by the final chunk
+        self.first_tok_dev = None  # device scalar, resolved per-tick batched
         self.ready_s = 0.0  # modeled completion time of the last chunk
 
 
@@ -240,6 +250,8 @@ class EndCloudServingEngine(SlotEngineBase):
         quantize_boundary: bool = False,  # int8 boundary payload + f16 row scales
         health: Optional[HealthMonitor] = None,  # shared retry/backoff policy
         blackout_gbps: Optional[float] = None,  # None = 5% of nominal uplink
+        spec_k: int = 1,  # speculative draft-length budget (1 = off)
+        link_rtt_s: float = 0.0,  # per-transfer round-trip latency (modeled)
     ):
         if not kvcache.pattern_is_pageable(model.cfg):
             raise NotImplementedError(
@@ -475,6 +487,30 @@ class EndCloudServingEngine(SlotEngineBase):
             # initial residency ships with the deployment: filled instantly,
             # not metered — only *runtime* residency changes ride the link
             self._expert_sync(instant_lids=set(self._active_lids()))
+
+        # -- speculative decode: draft caches, acceptance state, plan-k -----
+        # ``spec_k`` is the draft-length BUDGET; the planner (plan_spec_k)
+        # picks the effective k from measured bandwidth/RTT/stage times and
+        # returns 1 in the compute-bound regime — k=1 means no speculative
+        # machinery runs at all (no draft cache, no draft prefill, the
+        # plain decode path is byte-for-byte the non-speculative engine).
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.spec_k_max = min(int(spec_k), self.prefill_chunk)
+        self.link_rtt_s = float(link_rtt_s)
+        self._spec_state: Optional[SpecState] = None
+        self._spec_plan_k = 1
+        self._spec_fns: Dict[int, Tuple] = {}  # k -> (draft, end, cloud) fns
+        self._spec_prefill = None  # jitted draft-cache prefill ([1, max_len])
+        # per-group dense draft caches (blocks pytree, leaves
+        # [R, gsz, W, KV, hd]); per-slot host lengths + readiness
+        self._draft_cache: List[Optional[Dict]] = [None] * self.n_groups
+        self._draft_len = np.zeros((padded_batch,), np.int64)
+        self._draft_ready = np.zeros((padded_batch,), bool)
+        # in-flight speculative round per group (set by the spec end stage,
+        # consumed at the cloud drain; aborts roll provisional pages back)
+        self._spec_pending: List[Optional[Dict]] = [None] * self.n_groups
+        self.n_host_syncs = 0  # device->host transfers (batched per tick)
 
         self.n_stage_steps = 0  # decode end-steps (== drained cloud-steps)
         self.n_prefill_chunks = 0
@@ -816,7 +852,9 @@ class EndCloudServingEngine(SlotEngineBase):
                 expert_mask=None, page_table=table, page_size=ps,
             )
             logits = transformer.lm_logits(cloud_params, cfg, x)[:, 0]
-            return logits, new_pages
+            # greedy ids resolved in-trace: one int32 per row crosses to the
+            # host (batched per tick) instead of a [B, V] logits row
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_pages
 
         def end_prefill_chunk(end_params, tokens, pages, table, start, n_valid):
             B, C = tokens.shape
@@ -857,7 +895,7 @@ class EndCloudServingEngine(SlotEngineBase):
             )
             x_last = x[jnp.arange(B), jnp.maximum(n_valid - 1, 0)][:, None]
             logits = transformer.lm_logits(cloud_params, cfg, x_last)[:, 0]
-            return logits, new_pages
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_pages
 
         self._build_gen += 1
         gen = self._build_gen
@@ -878,6 +916,11 @@ class EndCloudServingEngine(SlotEngineBase):
         self._cloud_prefill_chunk = counted(
             "cloud_prefill_chunk", cloud_prefill_chunk
         )
+        # speculative stage fns close over the same codec/mask/split state:
+        # drop the per-k cache so they rebuild lazily against the new plan
+        self._spec_fns = {}
+        self._spec_prefill = None
+        self._recompute_spec_plan()
         self._warmup_stage_fns()
 
     def _warmup_stage_fns(self):
@@ -899,10 +942,10 @@ class EndCloudServingEngine(SlotEngineBase):
         z, _, *_ = self._end_step(
             self.end_params, tokens, self._end_pages, te, lengths, *eargs
         )
-        logits, _ = self._cloud_step(
+        ids, _ = self._cloud_step(
             self.cloud_params, z, self._cloud_pages, tc, lengths
         )
-        logits.block_until_ready()
+        ids.block_until_ready()
 
         C = self.prefill_chunk
         ctok = jnp.zeros((1, C), jnp.int32)
@@ -915,10 +958,542 @@ class EndCloudServingEngine(SlotEngineBase):
         z, _ = self._end_prefill_chunk(
             self.end_params, ctok, self._end_pages, te1, start, valid, *eargs
         )
-        logits, _ = self._cloud_prefill_chunk(
+        ids, _ = self._cloud_prefill_chunk(
             self.cloud_params, z, self._cloud_pages, tc1, start, valid
         )
-        logits.block_until_ready()
+        ids.block_until_ready()
+
+    # -- speculative decode: draft on the end tier, verify in one C=k chunk ---
+    #
+    # A speculative round replaces one single-token pipeline round for a
+    # group: the end tier drafts k-1 tokens with a cheap full-stack forward
+    # under its expert mask (against a private dense "draft cache"), runs
+    # its block range over the k-position chunk [pending, y_1..y_{k-1}],
+    # ships ONE boundary payload, and the cloud verifies all k positions in
+    # a single chunked step off the paged pool.  The accepted prefix
+    # commits; provisional pages past the first rejection are unmapped
+    # (pure table surgery — rejected tokens only ever lived in
+    # lazily-mapped pages) and the verify argmax at the rejection point is
+    # the corrected token, so greedy output matches non-speculative decode
+    # by construction.
+
+    def _recompute_spec_plan(self):
+        """Re-run the plan-time draft-length choice against measured link
+        conditions (safe points and bandwidth observations).  k=1 disables
+        every piece of speculative machinery — the engine is then
+        byte-for-byte the plain pipeline."""
+        if self.spec_k_max <= 1:
+            self._spec_plan_k = 1
+            return
+        acc = 0.7
+        if self._spec_state is not None and self._spec_state.acceptance is not None:
+            acc = self._spec_state.acceptance
+        ratio = self.tiers.compression_ratio if self.tiers.compress else 1.0
+        k = plan_spec_k(
+            self.tiers.layer_gflops,
+            self.tiers.boundary_bytes,
+            self.tiers.end_cap,
+            self.tiers.cloud_cap,
+            split=self.split,
+            link_rtt_s=self.link_rtt_s,
+            measured_gbps=self.bw.gbps,
+            compression_ratio=ratio,
+            acceptance=acc,
+            k_max=self.spec_k_max,
+        )
+        self._spec_plan_k = k
+        if k > 1:
+            if self._spec_state is None:
+                self._spec_state = SpecState(k)
+            else:
+                st = self._spec_state
+                st.k_plan = k
+                st.k_eff = max(2, min(st.k_eff, min_pow2_le(k)))
+
+    def _spec_emask(self):
+        """The draft model's expert mask: the plan's target set.  The
+        draft forward runs the FULL stack from ``self.params`` (all blocks
+        plus embedding and head) restricted to end-resident experts — the
+        cheap self-speculation draft; dense models draft exactly."""
+        if self.tiers.end_mask is None:
+            return None
+        return jnp.asarray(self.tiers.end_mask)
+
+    def _init_draft_cache(self) -> Dict:
+        return kvcache.init_cache(
+            self.cfg, self._group_size, self.max_len, jnp.dtype(self.cfg.dtype)
+        )["blocks"]
+
+    def _draft_prefill_fn(self):
+        if self._spec_prefill is None:
+            model, max_len = self.model, self.max_len
+
+            def spec_draft_prefill(params, tokens, emask):
+                _logits, cache = model.prefill(
+                    params, {"tokens": tokens}, max_len=max_len,
+                    expert_mask=emask,
+                )
+                return cache["blocks"]
+
+            self._spec_prefill = TraceCounter(
+                jax.jit(spec_draft_prefill),
+                self._traces.setdefault("spec_draft_prefill", set()),
+                self._build_gen,
+            )
+        return self._spec_prefill
+
+    def _spec_fns_for_k(self, k: int):
+        """Build (lazily, cached per k until the next stage rebuild) the
+        three jitted speculative stage functions for chunk size k: the
+        end-tier draft scan, the end-tier C=k boundary chunk, and the
+        cloud C=k verify chunk returning per-position greedy ids."""
+        if k in self._spec_fns:
+            return self._spec_fns[k]
+        cfg = self.cfg
+        topo = self.model.topo
+        tiers = self.tiers
+        codec, compress, end_mask = tiers.codec, tiers.compress, tiers.end_mask
+        act = jnp.dtype(cfg.dtype)
+        ps = self.page_size
+        qb = self.quantize_boundary
+
+        def wire_encode(z):
+            return comp.quantize_boundary(z) if qb else z
+
+        def wire_decode(z):
+            return comp.dequantize_boundary(*z, dtype=act) if qb else z
+
+        def decode_angles(lengths, B):
+            pos = lengths[:, None]
+            if cfg.mrope_sections is not None:
+                pos = jnp.broadcast_to(pos[:, None], (B, 3, 1))
+            return attn_mod.rope_angles(
+                pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+            )
+
+        def chunk_angles(positions):
+            pos = positions
+            if cfg.mrope_sections is not None:
+                B, C = positions.shape
+                pos = jnp.broadcast_to(pos[:, None], (B, 3, C))
+            return attn_mod.rope_angles(
+                pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+            )
+
+        def spec_draft(params, tokens, blocks, lengths, emask):
+            # k greedy steps off the dense draft cache in ONE trace.  Step
+            # 0 consumes the pending token (writing its draft-KV at the
+            # base position); steps 1..k-1 consume their predecessor's
+            # argmax.  The k-th output is discarded — only k-1 drafts feed
+            # the chunk — but its WRITE keeps the draft cache contiguous
+            # through position base+k-1 for the full-accept case.
+            B = tokens.shape[0]
+            drafts = []
+            for _ in range(k):
+                angles = decode_angles(lengths, B)
+                x = transformer.embed_inputs(params, cfg, tokens)
+                x, blocks, _aux = transformer.apply_stack_decode(
+                    params, x, cfg, topo, angles, blocks, lengths,
+                    expert_mask=emask,
+                )
+                logits = transformer.lm_logits(params, cfg, x)[:, 0]
+                tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                drafts.append(tokens[:, 0])
+                lengths = lengths + 1
+            return jnp.stack(drafts, axis=1), blocks
+
+        def spec_end(end_params, tokens, pages, table, start, n_valid):
+            positions = start[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+            angles = chunk_angles(positions)
+            x = transformer.embed_inputs(end_params, cfg, tokens)
+            x, new_pages = transformer.apply_stack_prefill_chunk(
+                end_params, x, cfg, topo, angles, pages, table,
+                positions, n_valid, ps, expert_mask=end_mask,
+            )
+            z = wire_encode(comp.encode_1d(codec, x) if compress else x)
+            return z, new_pages
+
+        def spec_end_pooled(end_params, tokens, pages, table, start, n_valid,
+                            emask, eres):
+            positions = start[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+            angles = chunk_angles(positions)
+            x = transformer.embed_inputs(end_params, cfg, tokens)
+            x, new_pages = transformer.apply_stack_prefill_chunk(
+                end_params, x, cfg, topo, angles, pages, table,
+                positions, n_valid, ps, expert_mask=emask,
+                expert_resident=eres,
+            )
+            z = wire_encode(comp.encode_1d(codec, x) if compress else x)
+            return z, new_pages
+
+        def spec_cloud(cloud_params, z, pages, table, start, n_valid):
+            z = wire_decode(z)
+            positions = start[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+            angles = chunk_angles(positions)
+            x = comp.decode_1d(codec, z) if compress else z
+            x = x.astype(act)
+            x, new_pages = transformer.apply_stack_prefill_chunk(
+                cloud_params, x, cfg, topo, angles, pages, table,
+                positions, n_valid, ps, expert_mask=None,
+            )
+            # per-position greedy ids, resolved in-trace: k int32 per row
+            # cross back down the link, never the [B, k, V] logits
+            logits = transformer.lm_logits(cloud_params, cfg, x)
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_pages
+
+        gen = self._build_gen
+
+        def counted(name, fn):
+            return TraceCounter(
+                jax.jit(fn), self._traces.setdefault(name, set()), gen
+            )
+
+        fns = (
+            counted(f"spec_draft_k{k}", spec_draft),
+            counted(
+                f"spec_end_k{k}",
+                spec_end_pooled if self._expert_pooled else spec_end,
+            ),
+            counted(f"spec_cloud_k{k}", spec_cloud),
+        )
+        self._spec_fns[k] = fns
+        self._warmup_spec_fns(k, fns)
+        return fns
+
+    def _warmup_spec_fns(self, k: int, fns):
+        """Compile the spec stage functions for the group/chunk shapes
+        (garbage-routed tables, discarded storage) so measured round times
+        never include tracing."""
+        draft_fn, end_fn, cloud_fn = fns
+        gsz = self._group_size
+        inactive = np.zeros((gsz,), bool)
+        tokens = jnp.zeros((gsz, 1), jnp.int32)
+        lengths = jnp.zeros((gsz,), jnp.int32)
+        drafts, _ = draft_fn(
+            self.params, tokens, self._init_draft_cache(), lengths,
+            self._spec_emask(),
+        )
+        te = self.end_pool.device_rows(range(gsz), active=inactive)
+        tc = self.cloud_pool.device_rows(
+            [self._cslot(s) for s in range(gsz)], active=inactive
+        )
+        eargs = (
+            (self._emask_dev, self._eres()) if self._expert_pooled else ()
+        )
+        ctok = jnp.zeros((gsz, k), jnp.int32)
+        start = jnp.zeros((gsz,), jnp.int32)
+        valid = jnp.ones((gsz,), jnp.int32)
+        z, _ = end_fn(
+            self.end_params, ctok, self._end_pages, te, start, valid, *eargs
+        )
+        ids, _ = cloud_fn(
+            self.cloud_params, z, self._cloud_pages, tc, start, valid
+        )
+        ids.block_until_ready()
+
+    def _draft_seconds(self, n_tokens: int) -> Optional[float]:
+        """Modeled end-tier seconds for ``n_tokens`` through the FULL
+        stack (the draft forward runs every block on the end device); None
+        in measured mode."""
+        if self.timing != "modeled":
+            return None
+        rate = self.tiers.end_cap.gflop_budget * 1e3
+        return n_tokens * sum(self.tiers.layer_gflops) / max(rate, 1e-9)
+
+    def _install_draft(self, slot: int):
+        """(Re)build one slot's draft cache by prefilling its committed
+        token stream through the draft model — at activation, at restore
+        after preemption/migration, and when the plan turns speculation on
+        mid-run.  One jitted [1, max_len] trace serves every length; the
+        end tier pays the forward on the timeline like any prefill."""
+        req = self.slots[slot]
+        L = int(self._slot_len[slot])
+        stream = list(req.prompt) + list(req.generated)
+        padded = np.zeros((self.max_len,), np.int32)
+        padded[:L] = np.asarray(stream[:L], np.int32)
+        t0 = time.perf_counter()
+        blocks = self._draft_prefill_fn()(
+            self.params, jnp.asarray(padded)[None], self._spec_emask()
+        )
+        jax.block_until_ready(blocks)
+        td = self._draft_seconds(L)
+        if td is None:
+            td = time.perf_counter() - t0
+        g = self._group_of(slot)
+        r = slot - g * self._group_size
+        if self._draft_cache[g] is None:
+            self._draft_cache[g] = self._init_draft_cache()
+        self._draft_cache[g] = jax.tree.map(
+            lambda big, one: big.at[:, r].set(one[:, 0].astype(big.dtype)),
+            self._draft_cache[g], blocks,
+        )
+        self._draft_len[slot] = L
+        self._draft_ready[slot] = True
+        done = self.timeline.occupy(self._res_end, self._group_ready_s[g], td)
+        self._prefill_busy["end"] += td
+        self._group_ready_s[g] = max(self._group_ready_s[g], done)
+
+    def _spec_refresh_drafts(self):
+        """Build draft caches for active slots that lack one (plan turned
+        speculation on mid-run, or a restore invalidated the cache) —
+        only while the slot's group is drained, so a pending round's
+        commit can never clobber the fresh cache."""
+        for slot in range(self.max_batch):
+            if (
+                self._active[slot]
+                and not self._draft_ready[slot]
+                and self.slots[slot] is not None
+                and self._phase[self._group_of(slot)] == "ready"
+            ):
+                self._install_draft(slot)
+
+    def _spec_round_k(self, g: int) -> int:
+        """Draft length for this group's next round: the adaptive k while
+        speculation is planned AND some active row has a fresh draft cache
+        and at least two tokens of budget left; 1 (the plain path)
+        otherwise."""
+        if self._spec_plan_k <= 1 or self._spec_state is None:
+            return 1
+        gs, ge = self._group_slices[g]
+        for s in range(gs, ge):
+            req = self.slots[s]
+            if (
+                self._active[s]
+                and self._draft_ready[s]
+                and req is not None
+                and req.max_new_tokens - len(req.generated) >= 2
+            ):
+                return max(2, self._spec_state.k_eff)
+        return 1
+
+    def _run_end_stage_spec(self, g: int, k: int):
+        """Speculative end stage: draft scan + C=k boundary chunk.  Pages
+        the chunk touches beyond the committed length are mapped
+        PROVISIONALLY (``map_tokens`` returns exactly the new entries);
+        the commit/rollback happens when the verify ids drain."""
+        gs, ge = self._group_slices[g]
+        gsz = ge - gs
+        active = self._active[gs:ge]
+        base_len = self._slot_len[gs:ge].copy()
+        draft_fn, end_fn, _ = self._spec_fns_for_k(k)
+
+        # per-row verified positions: full k with a fresh draft and budget,
+        # the bare pending token otherwise (stale cache / budget edge);
+        # inactive rows verify one garbage-routed padding position, exactly
+        # like the warmup path
+        n_valid = np.ones((gsz,), np.int64)
+        for i, slot in enumerate(range(gs, ge)):
+            req = self.slots[slot]
+            if req is None or not self._active[slot]:
+                continue
+            if self._draft_ready[slot]:
+                n_valid[i] = max(
+                    1, min(k, req.max_new_tokens - len(req.generated))
+                )
+
+        # draft scan: k steps off the dense draft cache, one trace
+        tokens = jnp.asarray(self._next_token[gs:ge], jnp.int32)
+        dlens = jnp.asarray(self._draft_len[gs:ge], jnp.int32)
+        dcache = self._draft_cache[g]
+        if dcache is None:
+            dcache = self._init_draft_cache()
+        t0 = time.perf_counter()
+        drafts_dev, dcache = draft_fn(
+            self.params, tokens, dcache, dlens, self._spec_emask()
+        )
+        jax.block_until_ready(drafts_dev)
+        td = self._draft_seconds(gsz * k)
+        if td is None:
+            td = time.perf_counter() - t0
+        self._draft_cache[g] = dcache
+
+        # provisionally map the chunk's pages in both pools (lockstep)
+        new_e: Dict[int, List[int]] = {}
+        new_c: Dict[int, List[int]] = {}
+        for i, slot in enumerate(range(gs, ge)):
+            if not self._active[slot]:
+                continue
+            L = int(base_len[i])
+            ents = self.end_pool.map_tokens(slot, L, L + int(n_valid[i]))
+            ents_c = self.cloud_pool.map_tokens(
+                self._cslot(slot), L, L + int(n_valid[i])
+            )
+            if ents != ents_c:
+                raise RuntimeError(
+                    f"tier pools out of lockstep for slot {slot}: "
+                    f"{ents} vs {ents_c}"
+                )
+            new_e[slot] = ents
+            new_c[slot] = ents_c
+
+        # end-tier chunk over [pending, y_1..y_{k-1}]
+        tok_chunk = jnp.concatenate([tokens, drafts_dev[:, : k - 1]], axis=1)
+        table = self.end_pool.device_rows(range(gs, ge), active=active)
+        start = jnp.asarray(base_len, jnp.int32)
+        nv_dev = jnp.asarray(n_valid, jnp.int32)
+        eargs = (
+            (self._emask_dev, self._eres()) if self._expert_pooled else ()
+        )
+        t1 = time.perf_counter()
+        z, self._end_pages = end_fn(
+            self.end_params, tok_chunk, self._end_pages, table, start,
+            nv_dev, *eargs,
+        )
+        payload_block_until_ready(z)
+        te = self._stage_seconds("end", gsz * k)
+        if te is None:
+            te = time.perf_counter() - t1
+
+        # boundary metering: per-position bytes x valid positions of
+        # active rows (padding rows and positions never cross the wire)
+        per_pos = sum(
+            int(l.dtype.itemsize * int(np.prod(l.shape[2:])))
+            for l in (z if isinstance(z, tuple) else (z,))
+        )
+        n_tok_active = int(n_valid[active].sum())
+        t_comm = self._link_transfer(per_pos * n_tok_active)
+        if self._expert_pooled:
+            self.expert_routed_tokens += n_tok_active
+
+        done_e = self.timeline.occupy(
+            self._res_end, self._group_ready_s[g], td + te
+        )
+        done_l = self.timeline.occupy(self._res_link, done_e, t_comm)
+        m_e = self._metric_clock.occupy("end", self._m_group_ready[g], td + te)
+        self._m_boundary_ready[g] = self._metric_clock.occupy(
+            "link", m_e, t_comm
+        )
+        self._stage_busy["end"] += td + te
+        self._stage_busy["link"] += t_comm
+        self.n_stage_steps += 1
+
+        self._boundary[g] = z
+        self._boundary_ready_s[g] = done_l
+        self._phase[g] = "boundary"
+        self._spec_pending[g] = {
+            "k": k,
+            "drafts": drafts_dev,
+            "base_len": base_len,
+            "n_valid": n_valid,
+            "new_entries_end": new_e,
+            "new_entries_cloud": new_c,
+        }
+
+    def _drain_cloud_stage_spec(self, g: int) -> Dict:
+        """Cloud half of a speculative round: one C=k verify chunk off the
+        paged pool; per-position greedy ids come back down the link.  The
+        host-side accept/commit happens in ``_harvest_drained`` so the
+        draft/verify device arrays join the tick's single batched
+        device->host transfer."""
+        pend = self._spec_pending[g]
+        gs, ge = self._group_slices[g]
+        k = pend["k"]
+        _, _, cloud_fn = self._spec_fns_for_k(k)
+        z = self._boundary[g]
+        table = self.cloud_pool.device_rows(
+            [self._cslot(s) for s in range(gs, ge)],
+            active=self._active[gs:ge],
+        )
+        start = jnp.asarray(pend["base_len"], jnp.int32)
+        nv = jnp.asarray(pend["n_valid"], jnp.int32)
+        t0 = time.perf_counter()
+        ids_dev, self._cloud_pages = cloud_fn(
+            self.cloud_params, z, self._cloud_pages, table, start, nv
+        )
+        ids_dev.block_until_ready()
+        tc = self._stage_seconds("cloud", (ge - gs) * k)
+        if tc is None:
+            tc = time.perf_counter() - t0
+
+        done_c = self.timeline.occupy(
+            self._res_cloud, self._boundary_ready_s[g], tc
+        )
+        self._m_group_ready[g] = self._metric_clock.occupy(
+            "cloud", self._m_boundary_ready[g], tc
+        )
+        self._stage_busy["cloud"] += tc
+        self._group_ready_s[g] = done_c
+        active = self._active[gs:ge]
+        n_tok_active = int(pend["n_valid"][active].sum())
+        # variable-k downlink: one verify id per valid position of each
+        # active row (the plain path's one id per row, scaled by k)
+        self.link.record_down(n_tok_active * element_bytes(jnp.int32))
+
+        self._boundary[g] = None
+        self._phase[g] = "ready"
+        self._spec_pending[g] = None
+        return {
+            "g": g, "kind": "spec", "done_c": done_c,
+            "dev": (pend["drafts"], ids_dev), "pend": pend,
+        }
+
+    def _spec_commit(self, rec: Dict, drafts: np.ndarray,
+                     verify: np.ndarray) -> int:
+        """Host side of a speculative round, after the batched transfer:
+        greedy accept per row, roll provisional pages past the committed
+        prefix back in BOTH pools (lockstep preserved — the entry lists
+        were asserted equal at map time), commit the accepted tokens, and
+        feed the acceptance EMA."""
+        g = rec["g"]
+        pend = rec["pend"]
+        gs, ge = self._group_slices[g]
+        base_len = pend["base_len"]
+        active = self._active[gs:ge]
+        nv_eff = np.where(active, pend["n_valid"], 0)
+        committed, _nrej = batched_accept(drafts, verify, nv_eff)
+        emitted = 0
+        n_drafted = n_accepted = 0
+        rolled = False
+        for i, slot in enumerate(range(gs, ge)):
+            if not active[i]:
+                continue
+            toks = committed[i]
+            n_commit = len(toks)  # >= 1: row 0's verify id always commits
+            L = int(base_len[i])
+            rb = rollback_entries(
+                pend["new_entries_end"].get(slot, []),
+                base_len=L, n_commit=n_commit,
+                page_size=self.page_size,
+                pages_per_slot=self.pages_per_slot,
+            )
+            if rb:
+                self.end_pool.rollback(slot, rb)
+                self.cloud_pool.rollback(self._cslot(slot), rb)
+                rolled = True
+            self._slot_len[slot] = L + n_commit
+            if self._draft_ready[slot]:
+                # the accepted prefix is, by the accept rule, exactly what
+                # the draft scan wrote — the draft cache stays aligned
+                self._draft_len[slot] = L + n_commit
+            n_drafted += int(nv_eff[i]) - 1
+            n_accepted += n_commit - 1
+            emitted += self._harvest_tokens(slot, toks)
+        if self._spec_state is not None:
+            self._spec_state.observe_round(
+                n_drafted, n_accepted,
+                rolled_back=rolled or n_accepted < n_drafted,
+            )
+        return emitted
+
+    def _spec_abort(self, g: int):
+        """Drop an in-flight speculative round (lane death / boundary
+        drop): every provisionally-mapped page unmaps, nothing commits.
+        The group's slot state is untouched — still at the pre-round token
+        boundary, exactly like a dropped plain boundary."""
+        pend = self._spec_pending[g]
+        if pend is None:
+            return
+        for slot, ents in pend["new_entries_end"].items():
+            if ents:
+                self.end_pool.rollback(slot, ents)
+        for slot, ents in pend["new_entries_cloud"].items():
+            if ents:
+                self.cloud_pool.rollback(self._cslot(slot), ents)
+        self._spec_pending[g] = None
+        gs, ge = self._group_slices[g]
+        self._draft_ready[gs:ge] = False
+        if self._spec_state is not None:
+            self._spec_state.rollbacks += 1
 
     # -- admission: chunked prefill as a pipeline stage -----------------------
 
@@ -1086,6 +1661,7 @@ class EndCloudServingEngine(SlotEngineBase):
         self.slots[slot] = None
         self._active[slot] = False
         self._slot_len[slot] = 0
+        self._draft_ready[slot] = False
         return st
 
     def _preempt_slot(self, slot: int):
@@ -1126,6 +1702,9 @@ class EndCloudServingEngine(SlotEngineBase):
         self.slots[slot] = req
         self._next_token[slot, 0] = st.next_token
         self._active[slot] = True
+        # the draft cache did not travel with the spill; rebuild it at the
+        # next drained tick (_spec_refresh_drafts) if speculation is on
+        self._draft_ready[slot] = False
         if st.migrated:
             self.n_migration_restores += 1
             req.n_migrations += 1
@@ -1151,6 +1730,10 @@ class EndCloudServingEngine(SlotEngineBase):
         ``(requests in submission order, request_id -> spill state,
         spilled bytes at stored size)``."""
         for g in range(len(self._phase)):
+            # an in-flight speculative round must unmap its provisional
+            # pages BEFORE the spill walks the page tables — spilling them
+            # would smuggle unverified KV into the migrated state
+            self._spec_abort(g)
             self._boundary[g] = None
             self._phase[g] = "ready"
         spilled: Dict[str, _SpillState] = {}
@@ -1217,11 +1800,11 @@ class EndCloudServingEngine(SlotEngineBase):
         t_comm = self._link_transfer(nbytes)
 
         t1 = time.perf_counter()
-        logits, self._cloud_pages = self._cloud_prefill_chunk(
+        ids, self._cloud_pages = self._cloud_prefill_chunk(
             self.cloud_params, z, self._cloud_pages,
             self.cloud_pool.device_rows([self._cslot(slot)]), start, valid,
         )
-        logits.block_until_ready()
+        ids.block_until_ready()
         tc = self._stage_seconds("cloud", v)
         if tc is None:
             tc = time.perf_counter() - t1
@@ -1237,9 +1820,28 @@ class EndCloudServingEngine(SlotEngineBase):
 
         job.pos += v
         if job.pos >= S:
-            job.first_tok = int(jnp.argmax(logits[0]))
+            # stash the DEVICE scalar; the tick's single batched
+            # device->host transfer resolves it (_resolve_prefill_tokens)
+            job.first_tok_dev = ids[0]
             # first token id back to the end tier
             self.link.record_down(element_bytes(jnp.int32))
+
+    def _resolve_prefill_tokens(self):
+        """Resolve every finished prefill job's first-token device scalar
+        in ONE batched device->host transfer — per-job ``int(...)`` pulls
+        were a per-request host sync on the prefill critical path."""
+        pend = [
+            (slot, job)
+            for slot, job in sorted(self._jobs.items())
+            if job.first_tok_dev is not None
+        ]
+        if not pend:
+            return
+        host = jax.device_get([job.first_tok_dev for _, job in pend])
+        self.n_host_syncs += 1
+        for (_slot, job), tok in zip(pend, host):
+            job.first_tok = int(tok)
+            job.first_tok_dev = None
 
     def _activate_ready_jobs(self):
         """Finished prefill jobs claim their slot at the group's next
@@ -1267,6 +1869,8 @@ class EndCloudServingEngine(SlotEngineBase):
             self.slots[slot] = req
             self._next_token[slot, 0] = tok
             self._active[slot] = True
+            if self._spec_plan_k > 1:
+                self._install_draft(slot)
             if self._virtual_time:
                 # the group's next decode step cannot start before this
                 # request's prefill finished feeding it
@@ -1278,6 +1882,7 @@ class EndCloudServingEngine(SlotEngineBase):
         self.end_pool.free(slot)
         self.cloud_pool.free(self._cslot(slot))
         self._slot_len[slot] = 0
+        self._draft_ready[slot] = False
 
     def busy(self) -> bool:
         return super().busy() or bool(self._jobs)
@@ -1294,6 +1899,8 @@ class EndCloudServingEngine(SlotEngineBase):
             self.n_migration_restores,
             self.transfer_retries,
             self.n_expert_prefetches if self._expert_pooled else 0,
+            self._spec_state.rounds if self._spec_state else 0,
+            self._spec_state.rollbacks if self._spec_state else 0,
         )
 
     def stall_diagnostic(self) -> str:
@@ -1342,7 +1949,10 @@ class EndCloudServingEngine(SlotEngineBase):
         Raises after ``max_transfer_attempts`` — a link that eats every
         retry is a blackout, and wedging silently here is exactly the
         failure mode the stall guard exists to catch."""
-        total = self.link.record_up(nbytes, self.bw.gbps)
+        # the per-transfer round trip (propagation + handshake) rides on
+        # every attempt — it is precisely what speculative decode amortizes
+        # over k tokens in the link-bound regime
+        total = self.link_rtt_s + self.link.record_up(nbytes, self.bw.gbps)
         attempt = 0
         while self._transfer_faults > 0:
             self._transfer_faults -= 1
@@ -1353,7 +1963,7 @@ class EndCloudServingEngine(SlotEngineBase):
                     f"{self.health.max_transfer_attempts}); link presumed dead"
                 )
             total += self.health.backoff_s(attempt)
-            total += self.link.record_up(nbytes, self.bw.gbps)
+            total += self.link_rtt_s + self.link.record_up(nbytes, self.bw.gbps)
             self.transfer_retries += 1
             attempt += 1
         return total
@@ -1366,6 +1976,10 @@ class EndCloudServingEngine(SlotEngineBase):
         self._transfer_faults += count
 
     def _run_end_stage(self, g: int):
+        k = self._spec_round_k(g)
+        if k > 1:
+            self._run_end_stage_spec(g, k)
+            return
         gs, ge = self._group_slices[g]
         for slot in range(gs, ge):
             if self._active[slot]:
@@ -1425,7 +2039,13 @@ class EndCloudServingEngine(SlotEngineBase):
         self._boundary_ready_s[g] = done_l
         self._phase[g] = "boundary"
 
-    def _run_cloud_stage(self, g: int) -> int:
+    def _drain_cloud_stage(self, g: int) -> Dict:
+        """Run the cloud half of an in-flight boundary and return a drain
+        record.  The token ids stay ON DEVICE — ``_harvest_drained``
+        resolves every group's ids in one batched transfer per tick, so a
+        lane with four groups pays one host sync where it paid four."""
+        if self._spec_pending[g] is not None:
+            return self._drain_cloud_stage_spec(g)
         gs, ge = self._group_slices[g]
         z = self._boundary[g]
         table = self.cloud_pool.device_rows(
@@ -1434,10 +2054,10 @@ class EndCloudServingEngine(SlotEngineBase):
         )
         lengths = jnp.asarray(self._slot_len[gs:ge], jnp.int32)
         t0 = time.perf_counter()
-        logits, self._cloud_pages = self._cloud_step(
+        ids_dev, self._cloud_pages = self._cloud_step(
             self.cloud_params, z, self._cloud_pages, table, lengths
         )
-        logits.block_until_ready()
+        ids_dev.block_until_ready()
         tc = self._stage_seconds("cloud", ge - gs)
         if tc is None:
             tc = time.perf_counter() - t0
@@ -1458,12 +2078,36 @@ class EndCloudServingEngine(SlotEngineBase):
 
         active_idx = np.nonzero(self._active[gs:ge])[0] + gs
         self._slot_len[active_idx] += 1
-        ids = np.zeros((self.max_batch,), np.int64)
-        ids[gs:ge] = np.asarray(jnp.argmax(logits, -1))
-        if self._virtual_time:
-            # finish stamps for this group land at its cloud completion
-            self.clock.now = done_c
-        return self._harvest(ids, slot_range=range(gs, ge))
+        return {"g": g, "kind": "plain", "done_c": done_c, "dev": (ids_dev,)}
+
+    def _harvest_drained(self, records: List[Dict]) -> int:
+        """Host side of the tick's drained boundaries: ONE batched
+        device->host transfer for every group's token ids (and, for
+        speculative rounds, the draft tokens), then per-group commit in
+        drain order — plain groups harvest directly, speculative groups go
+        through accept/rollback (:meth:`_spec_commit`)."""
+        host = jax.device_get([rec["dev"] for rec in records])
+        self.n_host_syncs += 1
+        emitted = 0
+        for rec, dev in zip(records, host):
+            if self._virtual_time:
+                # finish stamps for this group land at its cloud completion
+                self.clock.now = rec["done_c"]
+            if rec["kind"] == "plain":
+                gs, ge = self._group_slices[rec["g"]]
+                ids = np.zeros((self.max_batch,), np.int64)
+                ids[gs:ge] = np.asarray(dev[0])
+                emitted += self._harvest(ids, slot_range=range(gs, ge))
+            else:
+                drafts, verify = (np.asarray(a) for a in dev)
+                emitted += self._spec_commit(rec, drafts, verify)
+        return emitted
+
+    def _run_cloud_stage(self, g: int) -> int:
+        """Drain one group's boundary and harvest immediately — the
+        single-group form (tests and targeted drains); ``step`` batches
+        all drained groups through one ``_harvest_drained`` call."""
+        return self._harvest_drained([self._drain_cloud_stage(g)])
 
     def step(self) -> int:
         """One engine tick: drain in-flight boundaries on the cloud tier,
@@ -1475,16 +2119,23 @@ class EndCloudServingEngine(SlotEngineBase):
         emitted = 0
         if self.link_degraded:
             self.degraded_ticks += 1
-        for g in range(self.n_groups):
-            if self._phase[g] == "boundary":
-                emitted += self._run_cloud_stage(g)
+        drained = [
+            self._drain_cloud_stage(g)
+            for g in range(self.n_groups)
+            if self._phase[g] == "boundary"
+        ]
+        if drained:
+            emitted += self._harvest_drained(drained)
         self._advance_expert_prefetch()
         self._apply_pending_replan()
         self._admit()
         for slot in sorted(self._jobs):
             job = self._jobs[slot]
-            if job.first_tok is None:
+            if job.first_tok is None and job.first_tok_dev is None:
                 self._advance_prefill(job)
+        self._resolve_prefill_tokens()
+        if self._spec_plan_k > 1:
+            self._spec_refresh_drafts()
         self._activate_ready_jobs()
         for g in range(self.n_groups):
             if self._phase[g] == "ready" and self._group_active(g):
@@ -1512,6 +2163,10 @@ class EndCloudServingEngine(SlotEngineBase):
             self.bw.observe_rate(gbps)
         if not self.link_degraded:
             self._check_replan()
+        # the draft-length plan tracks the same measured link conditions:
+        # a fattening link turns speculation off (compute-bound), a
+        # thinning one turns it on or lengthens the draft
+        self._recompute_spec_plan()
 
     def _update_link_health(self):
         """Degradation ladder, bottom rung: when the estimated link rate
@@ -1699,6 +2354,10 @@ class EndCloudServingEngine(SlotEngineBase):
             updates["end_mask"] = self._pending_mask
             self._pending_mask = _KEEP
         self.tiers = dataclasses.replace(self.tiers, **updates)
+        if mask_changed:
+            # the draft model speculates under the end mask: a new mask
+            # invalidates every draft cache (they hold old-mask KV)
+            self._draft_ready[:] = False
         if self.split != old_split:
             self.end_params, self.cloud_params = split_block_params(
                 self.params, self.split
@@ -1742,6 +2401,8 @@ class EndCloudServingEngine(SlotEngineBase):
             # pooled engines take the mask/tables as runtime operands, so a
             # mask-only change needs no rebuild (and no retrace)
             self._build_stage_fns()
+        else:
+            self._recompute_spec_plan()
         if had_pending:
             self.replan_events.append(
                 {
@@ -1925,6 +2586,22 @@ class EndCloudServingEngine(SlotEngineBase):
             "link_blackout_s": self.blackout_seconds(),
             "replan_events": len(self.replan_events),
             "measured_gbps": self.bw.gbps,
+            "n_host_syncs": self.n_host_syncs,
+            "spec_plan_k": self._spec_plan_k,
+            "spec_k_eff": (
+                self._spec_state.k_eff if self._spec_state is not None else 1
+            ),
+            **(
+                self._spec_state.metrics()
+                if self._spec_state is not None
+                else {
+                    "spec_rounds": 0,
+                    "spec_drafted": 0,
+                    "spec_accepted": 0,
+                    "spec_acceptance_rate": 0.0,
+                    "spec_rollbacks": 0,
+                }
+            ),
             **self.kv_metrics(),
             **self.expert_metrics(),
         }

@@ -1,0 +1,172 @@
+"""Randomized property test: speculative draft-write -> partial-accept ->
+rollback leaves PagePool invariants intact.
+
+Drives a pool through randomized interleavings of the full speculative
+lifecycle — reserve, provisional ``map_tokens`` of a draft chunk,
+``rollback`` of everything past a random accepted prefix, preemption
+``spill_slot``/``restore_slot`` (PR 6 composition), and ``free`` — and
+checks after EVERY operation that
+
+  * no physical page is double-mapped (each appears in at most one table
+    cell across all slots) and none is simultaneously free and mapped;
+  * page conservation: mapped + free == num_pages;
+  * ``reserved_pages`` / ``pages_reserved`` stay honest (reserved minus
+    mapped, never negative);
+  * a draft round's surviving entries are EXACTLY what committing
+    ``n_commit`` tokens sequentially would have mapped.
+
+Runs under hypothesis when installed; otherwise the deterministic grid
+shim in ``_hypothesis_compat`` sweeps the boundary examples.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.models import kvcache
+from repro.models.kvcache import PagePool
+from repro.serving.specdecode import rollback_entries
+
+
+def _check_invariants(pool: PagePool):
+    # every mapped table cell holds a distinct physical page
+    mapped_phys = [
+        int(p) for row in pool.table for p in row if p >= 0
+    ]
+    assert len(mapped_phys) == len(set(mapped_phys)), "double-mapped page"
+    # free list and mapped set are disjoint and conserve the pool
+    free = set(pool._free)
+    assert len(free) == len(pool._free), "duplicate in free list"
+    assert free.isdisjoint(mapped_phys), "page both free and mapped"
+    assert len(free) + len(mapped_phys) == pool.num_pages
+    assert pool.pages_in_use == len(mapped_phys)
+    # per-slot mapped counters match the tables; reservations stay honest
+    for s in range(pool.table.shape[0]):
+        n_mapped = int((pool.table[s] >= 0).sum())
+        assert pool._mapped[s] == n_mapped
+        assert pool.reserved_pages(s) >= 0
+    assert pool.pages_reserved >= 0
+    assert pool.pages_available >= 0
+
+
+def _expected_entries(start_len, n_tokens, page_size, pps):
+    """Ring entries a sequential append of n_tokens at start_len touches."""
+    if n_tokens <= 0:
+        return set()
+    return {
+        (pi % pps)
+        for pi in range(
+            start_len // page_size,
+            (start_len + n_tokens - 1) // page_size + 1,
+        )
+    }
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=40),
+    page_size=st.sampled_from([2, 4]),
+    pps=st.sampled_from([3, 4, 6]),
+    k=st.integers(min_value=2, max_value=8),
+)
+def test_draft_rollback_lifecycle_keeps_pool_invariants(seed, page_size, pps, k):
+    rng = np.random.default_rng(seed)
+    n_slots = 4
+    pool = PagePool(
+        num_pages=n_slots * pps, page_size=page_size,
+        pages_per_slot=pps, n_slots=n_slots,
+    )
+    lengths = np.zeros(n_slots, np.int64)  # committed tokens per slot
+    held = np.zeros(n_slots, bool)
+    parked = {}  # slot -> spill state
+
+    for _ in range(60):
+        slot = int(rng.integers(n_slots))
+        op = rng.choice(["round", "spill", "restore", "free", "admit"])
+        if op == "admit" and not held[slot] and slot not in parked:
+            need = kvcache.pages_needed(
+                int(rng.integers(1, 3 * page_size)), page_size, pps
+            )
+            if pool.can_reserve(need):
+                pool.reserve(slot, need)
+                held[slot] = True
+                lengths[slot] = 0
+        elif op == "round" and held[slot]:
+            # speculative round: provisionally map a k-token draft chunk,
+            # then roll back everything past a random accepted prefix
+            L = int(lengths[slot])
+            r = pool.reserved_pages(slot)
+            # stay inside the reservation, mirroring the engine's per-row
+            # n_valid cap; a full-ring reservation wraps freely
+            n_valid = k if r == pps else min(k, r * page_size - L)
+            if n_valid < 1:
+                continue
+            new = pool.map_tokens(slot, L, L + n_valid)
+            _check_invariants(pool)
+            n_commit = int(rng.integers(1, n_valid + 1))
+            rb = rollback_entries(
+                new, base_len=L, n_commit=n_commit,
+                page_size=page_size, pages_per_slot=pps,
+            )
+            if rb:
+                pool.rollback(slot, rb)
+            # every entry the committed window [L, L + n_commit) touches
+            # must have survived the rollback
+            live = _expected_entries(L, n_commit, page_size, pps)
+            got = {e for e in range(pps) if pool.table[slot, e] >= 0}
+            assert live <= got, (live, got)
+            lengths[slot] = L + n_commit
+        elif op == "spill" and held[slot] and pool._mapped[slot] > 0:
+            entries, _phys, n_pages = pool.spill_slot(slot)
+            parked[slot] = (entries, n_pages, lengths[slot])
+            held[slot] = False
+            lengths[slot] = 0
+        elif op == "restore" and slot in parked and not held[slot]:
+            entries, n_pages, length = parked.pop(slot)
+            if pool.can_reserve(n_pages):
+                pool.restore_slot(slot, entries, n_pages)
+                held[slot] = True
+                lengths[slot] = length
+                assert pool._mapped[slot] == len(entries)
+            else:
+                parked[slot] = (entries, n_pages, length)
+        elif op == "free" and held[slot]:
+            pool.free(slot)
+            held[slot] = False
+            lengths[slot] = 0
+        _check_invariants(pool)
+
+    # drain: every held slot frees cleanly, the pool returns whole
+    for slot in range(n_slots):
+        if held[slot]:
+            pool.free(slot)
+    _check_invariants(pool)
+    assert pool.pages_in_use == 0 or parked, (
+        pool.pages_in_use, parked,
+    )
+
+
+def test_rollback_unmapped_entry_raises():
+    pool = PagePool(num_pages=8, page_size=4, pages_per_slot=4, n_slots=2)
+    pool.reserve(0, 2)
+    new = pool.map_tokens(0, 0, 5)
+    assert len(new) == 2
+    pool.rollback(0, [new[-1]])
+    with pytest.raises(ValueError, match="unmapped"):
+        pool.rollback(0, [new[-1]])  # double rollback of the same entry
+
+
+def test_full_rollback_equals_never_mapped():
+    pool = PagePool(num_pages=8, page_size=4, pages_per_slot=4, n_slots=2)
+    pool.reserve(0, 3)
+    before = (pool.pages_in_use, list(sorted(pool._free)))
+    new = pool.map_tokens(0, 0, 9)
+    rb = rollback_entries(new, base_len=0, n_commit=0,
+                          page_size=4, pages_per_slot=4)
+    pool.rollback(0, rb)
+    assert (pool.pages_in_use, list(sorted(pool._free))) == before
+    assert pool.reserved_pages(0) == 3

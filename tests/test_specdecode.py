@@ -1,0 +1,301 @@
+"""Speculative multi-token decode across the end-cloud link.
+
+Covers the tentpole contracts:
+  (a) the greedy accept rule: a C-position chunk consumes C-1 drafts, row
+      0's verify id always commits, the first rejection emits the
+      corrected token (exact-parity-by-construction);
+  (b) plan_spec_k: k > 1 only when amortizing the round trip wins (RTT-
+      dominated), auto-disable (k = 1) in the compute- or wire-bound
+      regimes and under the min-gain gate;
+  (c) SpecState: acceptance EMA adapts k_eff within the plan budget,
+      floored at 2 while the plan allows speculation;
+  (d) rollback_entries: committed positions' pages survive, the rest
+      unmap (ring arithmetic mirrors map_tokens);
+  (e) engine greedy parity at splits 0 / mid / R with speculation on
+      (dense draft == exact → acceptance 1.0, no rollbacks);
+  (f) the masked-MoE rejection path: pooled drafts diverge, rollbacks
+      fire, parity still holds and every page drains;
+  (g) compute-bound auto-disable: zero spec rounds, step count identical
+      to the plain engine;
+  (h) host-sync batching regression: one device->host transfer per tick
+      (not per group / per prefill job), trace counts still bounded.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core.hardware import Capability, PROFILES
+from repro.core.pipeline import plan_spec_k
+from repro.models.model import build_model
+from repro.serving.common import Request, VirtualClock
+from repro.serving.specdecode import (
+    SpecState,
+    accept_greedy,
+    batched_accept,
+    min_pow2_le,
+    rollback_entries,
+)
+from repro.serving.stream import EndCloudServingEngine
+
+END_SIM = dict(peak_gflops=2.0, mem_gb=8.0, mem_bw_gbs=50.0, net_gbps=2.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_model_f32():
+    cfg = (
+        smoke_config(get_config("tinyllama-1.1b"))
+        .replace(num_layers=4, dtype="float32")
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def moe_model_f32():
+    cfg = smoke_config(get_config("llama4-scout-17b-16e")).replace(
+        num_layers=4, dtype="float32", param_dtype="float32"
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(n, seed=0, lo=4, hi=16):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, 500, size=int(rng.integers(lo, hi))).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _drive(model, params, *, spec_k, link_rtt_s, n_req=4, new_tokens=6,
+           **kw):
+    eng = EndCloudServingEngine(
+        model, params,
+        end_profile=PROFILES["a100"], cloud_profile=PROFILES["a100"],
+        max_batch=4, max_len=64, prefill_chunk=8,
+        timing="modeled", clock=VirtualClock(),
+        spec_k=spec_k, link_rtt_s=link_rtt_s, **kw,
+    )
+    reqs = [Request(i, p, max_new_tokens=new_tokens)
+            for i, p in enumerate(_prompts(n_req))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.request_id: r.generated for r in reqs}, eng
+
+
+# ------------------------------------------------------- (a) accept rule
+
+
+def test_accept_greedy_full_accept():
+    committed, rej = accept_greedy([7, 8, 9], [7, 8, 9, 3])
+    assert committed == [7, 8, 9, 3] and rej == 0
+
+
+def test_accept_greedy_first_rejection_emits_corrected_token():
+    # draft y_1=7 matched v_0, y_2=4 != v_1=8: commit v_0, v_1 — the
+    # verify argmax at the divergence IS the corrected token
+    committed, rej = accept_greedy([7, 4, 9], [7, 8, 5, 3])
+    assert committed == [7, 8] and rej == 2
+
+
+def test_accept_greedy_zero_acceptance_still_progresses():
+    committed, rej = accept_greedy([9, 9, 9], [1, 2, 3, 4])
+    assert committed == [1] and rej == 3
+
+
+def test_accept_greedy_length_contract():
+    # a C-position chunk consumed [x_0, y_1..y_{C-1}]: exactly C-1 drafts
+    with pytest.raises(ValueError, match="mismatch"):
+        accept_greedy([1, 2, 3], [1, 2, 3])
+
+
+def test_batched_accept_respects_n_valid():
+    drafts = np.array([[5, 6, 7], [1, 9, 9]])
+    verify = np.array([[5, 6, 7, 8], [1, 2, 3, 4]])
+    committed, rej = batched_accept(
+        drafts, verify, np.array([4, 2, 0])[:2]
+    )
+    assert committed[0] == [5, 6, 7, 8] and rej[0] == 0
+    # row 1 only verified 2 positions: one draft participates, it matched
+    assert committed[1] == [1, 2] and rej[1] == 0
+    committed, _ = batched_accept(drafts[:1], verify[:1], np.array([0]))
+    assert committed[0] == []  # inactive row commits nothing
+
+
+# ---------------------------------------------------- (b) plan-time choice
+
+
+def _caps(end_gbps=2.0):
+    return (
+        Capability(5.0, 4.0, end_gbps),
+        Capability(50.0, 64.0, 10.0),
+    )
+
+
+def test_plan_spec_k_rtt_bound_enables():
+    end, cloud = _caps(1.0)
+    k = plan_spec_k([1.0] * 4, 32768, end, cloud, split=2,
+                    link_rtt_s=0.05, k_max=8)
+    assert k > 1
+
+
+def test_plan_spec_k_compute_bound_disables():
+    end, cloud = _caps(100.0)
+    k = plan_spec_k([1.0] * 4, 32768, end, cloud, split=2,
+                    link_rtt_s=0.0, k_max=8)
+    assert k == 1
+
+
+def test_plan_spec_k_wire_bound_disables():
+    # wire time scales with k, so a fat payload over a thin pipe gains
+    # nothing from speculation even at high RTT
+    end, cloud = _caps(0.05)
+    k = plan_spec_k([1.0] * 4, 10_000_000, end, cloud, split=2,
+                    link_rtt_s=0.05, k_max=8)
+    assert k == 1
+
+
+def test_plan_spec_k_respects_k_max_and_validates():
+    end, cloud = _caps(1.0)
+    k = plan_spec_k([1.0] * 4, 32768, end, cloud, split=2,
+                    link_rtt_s=0.5, k_max=4)
+    assert 1 < k <= 4
+    with pytest.raises(ValueError):
+        plan_spec_k([1.0] * 4, 1.0, end, cloud, split=5)
+
+
+# --------------------------------------------------- (c) acceptance EMA
+
+
+def test_spec_state_adapts_within_budget():
+    st = SpecState(8)
+    assert st.k_eff == 8
+    for _ in range(6):
+        st.observe_round(7, 0, rolled_back=True)
+    assert st.k_eff == 2  # halves on low acceptance, floored at 2
+    for _ in range(12):
+        st.observe_round(7, 7, rolled_back=False)
+    assert st.k_eff == 8  # doubles back up to the plan budget
+    assert st.metrics()["spec_rollbacks"] == 6
+    assert min_pow2_le(6) == 4 and min_pow2_le(8) == 8
+
+
+def test_spec_state_disabled_plan():
+    st = SpecState(1)
+    assert st.k_eff == 1
+    st.observe_round(0, 0, rolled_back=False)
+    assert st.k_eff == 1 and st.acceptance is None
+
+
+# ------------------------------------------------- (d) rollback arithmetic
+
+
+def test_rollback_entries_keeps_committed_pages():
+    # page_size 4, base 6: positions 6..9 span entries 1 and 2; committing
+    # 2 tokens (6,7) keeps entry 1, rolls entry 2 back
+    new = [1, 2]
+    assert rollback_entries(new, base_len=6, n_commit=2,
+                           page_size=4, pages_per_slot=4) == [2]
+    assert rollback_entries(new, base_len=6, n_commit=4,
+                           page_size=4, pages_per_slot=4) == []
+    assert rollback_entries(new, base_len=6, n_commit=0,
+                           page_size=4, pages_per_slot=4) == [1, 2]
+    # page-aligned base: commit 1 keeps exactly its own fresh page
+    assert rollback_entries([0, 1], base_len=8, n_commit=1,
+                           page_size=4, pages_per_slot=2) == [1]
+
+
+# ------------------------------------- (e) greedy parity with speculation
+
+
+@pytest.mark.parametrize("split", [0, 2, 4])
+def test_spec_parity_at_splits(tiny_model_f32, split):
+    model, params = tiny_model_f32
+    want, _ = _drive(model, params, spec_k=1, link_rtt_s=0.05,
+                     force_split=split)
+    got, eng = _drive(model, params, spec_k=4, link_rtt_s=0.05,
+                      force_split=split)
+    assert got == want
+    m = eng.metrics()
+    assert m["spec_rounds"] > 0, m
+    # dense model: the draft IS the model, so every draft verifies
+    assert m["spec_acceptance_rate"] == 1.0 and m["spec_rollbacks"] == 0
+    assert eng.end_pool.pages_in_use == 0
+    assert eng.cloud_pool.pages_in_use == 0
+    assert eng.end_pool.pages_reserved == 0
+
+
+# --------------------------------------------- (f) masked-MoE rejections
+
+
+def test_spec_moe_rejection_path_keeps_parity(moe_model_f32):
+    model, params = moe_model_f32
+    want, _ = _drive(model, params, spec_k=1, link_rtt_s=0.05,
+                     force_split=2, expert_pool=True)
+    got, eng = _drive(model, params, spec_k=4, link_rtt_s=0.05,
+                      force_split=2, expert_pool=True)
+    assert got == want
+    m = eng.metrics()
+    assert m["spec_rounds"] > 0
+    # the end-mask draft diverges from the full router: rejections MUST
+    # occur, and the rollback-and-correct rule keeps parity exact
+    assert m["spec_rollbacks"] > 0, m
+    assert m["spec_acceptance_rate"] < 1.0
+    assert eng.end_pool.pages_in_use == 0
+    assert eng.cloud_pool.pages_in_use == 0
+    assert eng.end_pool.pages_reserved == 0
+    assert eng.cloud_pool.pages_reserved == 0
+
+
+# ----------------------------------------------- (g) compute-bound disable
+
+
+def test_spec_auto_disables_compute_bound(tiny_model_f32):
+    model, params = tiny_model_f32
+    want, ref = _drive(model, params, spec_k=1, link_rtt_s=0.0,
+                       force_split=2)
+    got, eng = _drive(model, params, spec_k=8, link_rtt_s=0.0,
+                      force_split=2)
+    m = eng.metrics()
+    assert m["spec_plan_k"] == 1 and m["spec_rounds"] == 0
+    assert got == want
+    # zero overhead: the engine takes exactly the plain engine's steps
+    assert m["n_stage_steps"] == ref.metrics()["n_stage_steps"]
+
+
+# ------------------------------------------- (h) host-sync batching
+
+
+def test_host_syncs_batched_per_tick(tiny_model_f32):
+    model, params = tiny_model_f32
+    toks, eng = _drive(model, params, spec_k=1, link_rtt_s=0.0,
+                       force_split=2, n_req=6, new_tokens=8)
+    tokens = sum(len(t) for t in toks.values())
+    m = eng.metrics()
+    # one batched device->host transfer per tick with drained boundaries
+    # (plus one per prefill-resolution tick) — far fewer than the per-
+    # token / per-group pulls the un-batched path paid
+    assert 0 < m["n_host_syncs"] < tokens, m["n_host_syncs"]
+    # regression: the in-jit argmax did not add trace churn — stage trace
+    # counts stay bounded by chunk/group shapes
+    traces = eng.stage_trace_counts()
+    assert traces["cloud_step"] == 1 and traces["cloud_prefill_chunk"] == 1
+    assert all(c <= eng._build_gen for c in traces.values()), traces
+
+
+def test_spec_trace_counts_bounded(tiny_model_f32):
+    model, params = tiny_model_f32
+    _, eng = _drive(model, params, spec_k=4, link_rtt_s=0.05, force_split=2)
+    traces = eng.stage_trace_counts()
+    ks = {int(n.split("_k")[1]) for n in traces if "_k" in n}
+    # one draft/end/cloud trace per distinct chunk size k, never per
+    # prompt length or per round
+    for k in ks:
+        assert traces[f"spec_draft_k{k}"] == 1
+        assert traces[f"spec_end_k{k}"] == 1
+        assert traces[f"spec_cloud_k{k}"] == 1

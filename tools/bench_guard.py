@@ -1,0 +1,160 @@
+"""Bench-trajectory guard: fresh benchmark ratios vs committed baselines.
+
+The committed ``BENCH_decode_pipeline.json`` / ``BENCH_fleet.json`` are
+the repo's performance trajectory — each PR regenerates them, so a
+silent regression shows up as a drifted ratio.  Absolute times are
+host-dependent and excluded; the guard compares only **scale-invariant
+ratio metrics** (byte ratios, capacity ratios, overlap gain, hit /
+acceptance rates) between a freshly produced report and the committed
+baseline, within a relative tolerance that absorbs smoke-vs-full shape
+differences (CI runs reduced layer counts):
+
+    PYTHONPATH=src python tools/bench_guard.py \
+        --fresh-decode bench_decode_pipeline_smoke.json \
+        --fresh-fleet bench_fleet_smoke.json [--tol 0.35]
+
+A guarded key missing from the *fresh* report fails loudly (a deleted
+metric is a regression too); keys missing from the committed baseline
+are skipped with a note, so a PR that *adds* metrics regenerates the
+baseline without chicken-and-egg.  Floor keys (speculative speedup /
+acceptance) additionally enforce the benchmark's own acceptance bar, so
+a baseline regen can never quietly lower it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (key, hard floor or None) per logical row.  Floors mirror the asserts
+# inside the benchmarks themselves.
+DECODE_GUARDS = {
+    "overlap": [("overlap_gain", 1.0), ("attn_bytes_ratio", None),
+                ("kv_utilization", None)],
+    "expert": [("expert_bytes_ratio", None), ("expert_hit_rate", 0.95)],
+    "quant": [("boundary_bytes_ratio", None),
+              ("boundary_bytes_ratio_compressed", None),
+              ("attn_bytes_quant_ratio", None),
+              ("expert_bytes_quant_ratio", None),
+              ("kv_capacity_ratio", 1.9), ("expert_capacity_ratio", 1.9),
+              ("greedy_match_rate", 0.85)],
+    "spec": [("spec_speedup", 1.4), ("spec_acceptance_rate", 0.6),
+             ("greedy_parity", 1.0), ("computebound_plan_k", None)],
+}
+
+# nested section -> guarded keys of the single fleet report row
+FLEET_GUARDS = {
+    "quantized_streams": [("boundary_bytes_ratio", None),
+                          ("expert_bytes_ratio", None),
+                          ("kv_capacity_ratio", 1.9)],
+    "fleet_expert_store": [("dedup_ratio", 1.0), ("fleet_hit_rate", None)],
+}
+
+
+def _decode_row_kind(row):
+    phase = row.get("phase")
+    if phase == "speculative_decode":
+        return "spec"
+    if phase == "quantized_streams" or "attn_bytes_quant_ratio" in row:
+        return "quant"
+    if "expert_bytes_step_dense" in row:
+        return "expert"
+    if "overlap_gain" in row:
+        return "overlap"
+    return None
+
+
+def _index_decode(rows):
+    out = {}
+    for row in rows:
+        kind = _decode_row_kind(row)
+        if kind is not None:
+            out[kind] = row
+    return out
+
+
+def _check(label, key, fresh, base, floor, tol, failures, skipped):
+    if fresh is None:
+        failures.append(f"{label}.{key}: missing from the fresh report")
+        return
+    fresh = float(fresh)
+    if floor is not None and fresh < floor:
+        failures.append(
+            f"{label}.{key}: fresh {fresh:.4f} below hard floor {floor}"
+        )
+    if base is None:
+        skipped.append(f"{label}.{key} (no committed baseline yet)")
+        return
+    base = float(base)
+    if abs(fresh - base) > tol * max(abs(base), 1e-9):
+        failures.append(
+            f"{label}.{key}: fresh {fresh:.4f} vs baseline {base:.4f} "
+            f"drifts past {tol:.0%}"
+        )
+
+
+def guard_decode(fresh_rows, base_rows, tol, failures, skipped):
+    fresh, base = _index_decode(fresh_rows), _index_decode(base_rows)
+    for kind, guards in DECODE_GUARDS.items():
+        if kind not in fresh:
+            failures.append(f"decode.{kind}: row missing from fresh report")
+            continue
+        brow = base.get(kind, {})
+        for key, floor in guards:
+            _check(f"decode.{kind}", key, fresh[kind].get(key),
+                   brow.get(key), floor, tol, failures, skipped)
+
+
+def guard_fleet(fresh_rows, base_rows, tol, failures, skipped):
+    fresh, base = fresh_rows[0], base_rows[0] if base_rows else {}
+    for section, guards in FLEET_GUARDS.items():
+        fsec = fresh.get(section)
+        if not isinstance(fsec, dict):
+            failures.append(f"fleet.{section}: missing from fresh report")
+            continue
+        bsec = base.get(section) or {}
+        for key, floor in guards:
+            _check(f"fleet.{section}", key, fsec.get(key),
+                   bsec.get(key), floor, tol, failures, skipped)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-decode", help="freshly produced decode report")
+    ap.add_argument("--fresh-fleet", help="freshly produced fleet report")
+    ap.add_argument("--baseline-decode", default="BENCH_decode_pipeline.json")
+    ap.add_argument("--baseline-fleet", default="BENCH_fleet.json")
+    ap.add_argument("--tol", type=float, default=0.35,
+                    help="relative drift tolerance vs the baseline")
+    args = ap.parse_args(argv)
+    if not args.fresh_decode and not args.fresh_fleet:
+        ap.error("give at least one of --fresh-decode / --fresh-fleet")
+
+    failures, skipped = [], []
+    if args.fresh_decode:
+        with open(args.fresh_decode) as f:
+            fresh = json.load(f)
+        with open(args.baseline_decode) as f:
+            base = json.load(f)
+        guard_decode(fresh, base, args.tol, failures, skipped)
+    if args.fresh_fleet:
+        with open(args.fresh_fleet) as f:
+            fresh = json.load(f)
+        with open(args.baseline_fleet) as f:
+            base = json.load(f)
+        guard_fleet(fresh, base, args.tol, failures, skipped)
+
+    for s in skipped:
+        print(f"[bench_guard] skipped {s}")
+    if failures:
+        for msg in failures:
+            print(f"[bench_guard] FAIL {msg}", file=sys.stderr)
+        return 1
+    print(f"[bench_guard] OK — ratio metrics within {args.tol:.0%} "
+          f"of committed baselines ({len(skipped)} skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
